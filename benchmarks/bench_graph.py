@@ -1,0 +1,44 @@
+"""Paper §11 — time-series graphs: traffic DBN simulation + cross-product
+overlapping partitioning (Fig. 8)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graphs import (
+    grid_graph,
+    graph_window_map_reduce,
+    line_graph,
+    make_graph_partition,
+    simulate_traffic_dbn,
+)
+
+from .common import row, time_call
+
+
+def run():
+    g = line_graph(4096)
+    x0 = jnp.full((4096,), 0.4)
+    sim = jax.jit(
+        lambda x0, k: simulate_traffic_dbn(g, x0, 256, k), static_argnums=()
+    )
+    us = time_call(sim, x0, jax.random.PRNGKey(0))
+    row("sec11_traffic_dbn_4096v_256steps", us, "order(1,1)_DBN")
+
+    gg = grid_graph(32, 32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1024, 4))
+    for parts in (4, 16):
+        part = make_graph_partition(gg, parts, k=1)
+        kern = lambda xc, nb, m: jnp.outer(xc, jnp.sum(jnp.where(m[:, None], nb, 0.0), 0))
+        fn = jax.jit(lambda x, part=part: graph_window_map_reduce(kern, x, gg, part))
+        us = time_call(fn, x)
+        halo = part.padded.shape[1] * parts - 1024
+        row(
+            f"fig8_graph_mapreduce_P{parts}",
+            us,
+            f"V=1024;k_hop=1;replicated_vertices={halo}",
+        )
+
+
+if __name__ == "__main__":
+    run()

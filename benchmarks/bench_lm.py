@@ -1,0 +1,45 @@
+"""Framework-side microbenchmarks: reduced-config train-step and decode-step
+latency for representative assigned architectures (CPU wall time — the TPU
+numbers live in the dry-run roofline, results/dryrun/)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.models import cache_spec, decode_step, init_params
+from repro.training.optimizer import adamw_init
+from repro.training.train_step import make_train_step
+
+from .common import row, time_call
+
+ARCH_SET = ("qwen3-0.6b", "llama4-maverick-400b-a17b", "zamba2-7b", "xlstm-125m")
+
+
+def run():
+    for name in ARCH_SET:
+        r = ARCHS[name].reduced()
+        params = init_params(jax.random.PRNGKey(0), r, dtype=jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0, r.vocab)
+        if r.family == "vlm":
+            continue
+        batch = {"tokens": toks, "labels": toks}
+        step = jax.jit(make_train_step(r, lr_fn=1e-3))
+        opt = adamw_init(params)
+        us = time_call(step, params, opt, batch, iters=3)
+        n_par = sum(x.size for x in jax.tree.leaves(params))
+        row(f"train_step_{name}", us, f"reduced;params={n_par};tokens=256")
+
+        spec = cache_spec(r, 4, 128, dtype=jnp.float32)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+        dfn = jax.jit(
+            lambda p, c, t, q: decode_step(p, c, {"tokens": t, "pos": q}, r)
+        )
+        us = time_call(
+            dfn, params, cache, jnp.zeros((4,), jnp.int32), jnp.asarray(64, jnp.int32)
+        )
+        row(f"decode_step_{name}", us, "reduced;batch=4;cache=128")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Benchmark helpers: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line

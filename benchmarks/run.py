@@ -1,0 +1,38 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmark contract).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "bench_autocov",        # paper Fig. 2 (+ Fig. 9 kernel check)
+    "bench_overlap_scaling",  # paper Fig. 4
+    "bench_mle",            # paper §5 / §7.2 Z-estimators
+    "bench_spatial",        # paper §6 banded high-d
+    "bench_graph",          # paper §11 / Fig. 8 graphs
+    "bench_accuracy",       # paper §2 1/√N convergence
+    "bench_halo",           # beyond-paper halo exchange vs replication
+    "bench_lm",             # framework micro-benchmarks
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in MODULES:
+        try:
+            m = __import__(f"benchmarks.{mod}", fromlist=["run"])
+            m.run()
+        except Exception:
+            failures.append(mod)
+            print(f"{mod},0.0,ERROR")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

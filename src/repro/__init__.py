@@ -1,0 +1,16 @@
+"""repro — Embarrassingly-parallel weak-memory time-series analysis, at scale.
+
+JAX reimplementation (TPU target) of Belletti et al., "Embarrassingly Parallel
+Time Series Analysis for Large Scale Weak Memory Systems", plus the
+framework-scale substrates (model zoo, distribution, training, serving,
+checkpointing) required to run it on multi-pod TPU meshes.
+
+Public entry points:
+  repro.core        — overlapping-block data structure + weak-memory estimators
+  repro.timeseries  — synthetic generators, distributed series store
+  repro.models      — assigned-architecture model zoo
+  repro.configs     — architecture configs + input-shape suites
+  repro.launch      — production mesh, dry-run, roofline, train/serve drivers
+"""
+
+__version__ = "1.0.0"

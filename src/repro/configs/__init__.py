@@ -1,0 +1,4 @@
+"""Configs: assigned architectures, input-shape suites, paper workload."""
+from .base import ArchConfig, MoEConfig, MLAConfig, SSMConfig, ShapeConfig, SHAPES, SHAPES_BY_NAME, cell_is_runnable
+from .registry import ARCHS, ALIASES, get_arch, list_archs
+from .paper_var import PAPER_VAR_CONFIGS

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the numbers)."""
+from .registry import DEEPSEEK_V2
+
+CONFIG = DEEPSEEK_V2

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the numbers)."""
+from .registry import GLM4_9B
+
+CONFIG = GLM4_9B

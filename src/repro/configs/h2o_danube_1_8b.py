@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the numbers)."""
+from .registry import H2O_DANUBE
+
+CONFIG = H2O_DANUBE

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the numbers)."""
+from .registry import LLAMA4_MAVERICK
+
+CONFIG = LLAMA4_MAVERICK

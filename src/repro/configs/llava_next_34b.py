@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the numbers)."""
+from .registry import LLAVA_NEXT_34B
+
+CONFIG = LLAVA_NEXT_34B

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the numbers)."""
+from .registry import PHI3_MEDIUM
+
+CONFIG = PHI3_MEDIUM

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the numbers)."""
+from .registry import QWEN3_0_6B
+
+CONFIG = QWEN3_0_6B

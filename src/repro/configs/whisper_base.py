@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the numbers)."""
+from .registry import WHISPER_BASE
+
+CONFIG = WHISPER_BASE

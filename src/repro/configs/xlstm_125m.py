@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the numbers)."""
+from .registry import XLSTM_125M
+
+CONFIG = XLSTM_125M

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the numbers)."""
+from .registry import ZAMBA2_7B
+
+CONFIG = ZAMBA2_7B

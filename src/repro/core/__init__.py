@@ -1,0 +1,32 @@
+"""The paper's primary contribution: overlapping distributed blocks +
+embarrassingly-parallel weak-memory estimation (map-reduce over windowed
+kernels), in JAX.
+
+Layering:
+  overlap.py      — the data structure (OverlapSpec, block build/reconstruct)
+  mapreduce.py    — the execution engine (serial / blocked / shard_map paths)
+  halo.py         — replication vs collective-permute halo materialization
+  estimators/     — M- and Z-estimators of the paper (§2–§6)
+  graphs.py       — order-(H,K) graph generalization + traffic DBN (§9, §11)
+  differencing.py — integrated-process reduction (§1.4, §10.3)
+"""
+from .overlap import (
+    OverlapSpec,
+    make_overlapping_blocks,
+    block_core,
+    core_mask,
+    reconstruct,
+    replication_overhead,
+)
+from .mapreduce import (
+    serial_window_map_reduce,
+    block_window_map_reduce,
+    sharded_window_map_reduce,
+    block_partials,
+    tree_sum,
+)
+from .halo import halo_exchange, halo_exchange_grouped
+from . import estimators
+from .estimators import *  # noqa: F401,F403  (re-export the estimator API)
+from .differencing import difference, integrate, difference_blocked
+from . import graphs

@@ -1,0 +1,80 @@
+"""Differencing / integration (paper §1.4, §10.3 — long-memory reduction).
+
+Integrated processes become weak-memory after Δ^I; the overlapping structure
+then applies.  Δ itself is an order-1 weak-memory kernel, so it composes
+with the block machinery (a block with h_left=1 computes its differences
+locally — used by `timeseries.dataset` when ingesting integrated series).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["difference", "integrate", "difference_blocked"]
+
+
+def difference(x: jax.Array, order: int = 1) -> jax.Array:
+    """Δ^order x — paper convention: Δ(x)_t = x_{t+1} − x_t, length N−order."""
+    for _ in range(order):
+        x = x[1:] - x[:-1]
+    return x
+
+
+def integrate(dx: jax.Array, initial: jax.Array, order: int = 1) -> jax.Array:
+    """Inverse of :func:`difference`: reconstruct x from Δ^order x and the
+    ``order`` leading values it dropped.
+
+    Args:
+      dx: (N−order, …) differenced series.
+      initial: (order, …) the first samples of each integration level —
+        initial[k] is the first element of Δ^k x (k = 0 .. order−1).
+    """
+    for k in reversed(range(order)):
+        x0 = initial[k]
+        x = jnp.concatenate([x0[None], x0[None] + jnp.cumsum(dx, axis=0)], axis=0)
+        dx = x
+    return dx
+
+
+def difference_blocked(blocks: jax.Array, order: int = 1) -> jax.Array:
+    """Per-block differencing: a block padded with h_left ≥ order differences
+    its own data with no communication; the result is a valid overlapping
+    block structure with h_left reduced by ``order``."""
+    for _ in range(order):
+        blocks = blocks[:, 1:, :] - blocks[:, :-1, :]
+    return blocks
+
+
+def fractional_diff_weights(d: float, truncation: int) -> jax.Array:
+    """Truncated binomial weights of (1−L)^d  (paper §10.3: partially
+    integrated processes become weak-memory once the partial-differentiation
+    kernel is approximated by a finite-support kernel).
+
+    w_0 = 1,  w_k = w_{k-1} · (k − 1 − d) / k.
+    """
+    ws = [1.0]
+    for k in range(1, truncation + 1):
+        ws.append(ws[-1] * (k - 1 - d) / k)
+    return jnp.asarray(ws, jnp.float32)
+
+
+def fractional_difference(x: jax.Array, d: float, truncation: int = 64) -> jax.Array:
+    """(1−L)^d x with a ``truncation``-lag kernel — an order-``truncation``
+    weak-memory map; composes with the overlapping-block machinery exactly
+    like Δ (halo h_left = truncation).
+
+    Returns (N − truncation, dims): only positions with a full kernel
+    support (matching the block map-reduce's center-validity rule).
+    """
+    if x.ndim == 1:
+        x = x[:, None]
+    w = fractional_diff_weights(d, truncation)  # (K+1,) for lags 0..K
+    n = x.shape[0]
+    k = truncation
+
+    def at(t):
+        # y_t = Σ_j w_j x_{t-j}
+        window = jax.lax.dynamic_slice_in_dim(x, t - k, k + 1, axis=0)
+        return jnp.einsum("j,jd->d", w[::-1], window)
+
+    return jax.vmap(at)(jnp.arange(k, n))

@@ -1,0 +1,57 @@
+"""M- and Z-estimators for second-order stationary series (paper §2–§6).
+
+Every estimator here is an order-H weak-memory estimator (paper §8) and is
+computed through the overlapping-block map-reduce engine — embarrassingly
+parallel across time partitions.
+"""
+from .stats import (
+    mean,
+    autocovariance,
+    autocovariance_blocked,
+    autocovariance_sharded,
+    autocorrelation,
+    partial_autocorrelation,
+)
+from .yule_walker import yule_walker, levinson_durbin, block_levinson
+from .innovation import innovation_algorithm, fit_ma
+from .arma import fit_arma, arma_psi_weights
+from .mle import (
+    ar_conditional_nll,
+    fit_ar_mle,
+    fit_ar_sgd,
+    optimal_step_size,
+)
+from .spatial import (
+    BandedARModel,
+    banded_predict,
+    banded_predict_partitioned,
+    fit_banded_ar,
+    SpatialPartition,
+)
+from .prediction import ar_one_step, ar_forecast, arma_innovations_filter, arma_forecast
+from .spectral import welch_psd, welch_csd, hann_window
+
+__all__ = [
+    "mean",
+    "autocovariance",
+    "autocovariance_blocked",
+    "autocovariance_sharded",
+    "autocorrelation",
+    "partial_autocorrelation",
+    "yule_walker",
+    "levinson_durbin",
+    "block_levinson",
+    "innovation_algorithm",
+    "fit_ma",
+    "fit_arma",
+    "arma_psi_weights",
+    "ar_conditional_nll",
+    "fit_ar_mle",
+    "fit_ar_sgd",
+    "optimal_step_size",
+    "BandedARModel",
+    "banded_predict",
+    "banded_predict_partitioned",
+    "fit_banded_ar",
+    "SpatialPartition",
+]

@@ -1,0 +1,112 @@
+"""ARMA(p, q) estimation via innovations + block-Toeplitz solve (paper §3.4).
+
+Causal ARMA:  X_t = Σᵢ Aᵢ X_{t-i} + ε_t + Σⱼ Bⱼ ε_{t-j}  admits the MA(∞)
+representation X_t = Σⱼ Ψⱼ ε_{t-j} with
+
+    Ψ₀ = I,    Ψⱼ = Bⱼ + Σ_{i=1}^{min(j,p)} Aᵢ Ψ_{j-i}      (Bⱼ = 0 for j>q).
+
+The innovation algorithm applied to γ̂ yields Θ̂_{m,j} → Ψⱼ; the AR part is
+then recovered from the linear system over Ψ̂_{q+1-p..p+q} (paper's displayed
+block-Hankel system), the MA part by back-substitution, and Σ̂ from V_m.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .innovation import innovation_algorithm
+
+__all__ = ["arma_psi_weights", "solve_arma_from_psi", "fit_arma"]
+
+
+def arma_psi_weights(A: jax.Array, B: jax.Array, n_weights: int) -> jax.Array:
+    """Ψ₀..Ψ_{n_weights-1} from ARMA parameters (forward recursion).
+
+    Args:
+      A: (p, d, d) AR matrices; B: (q, d, d) MA matrices.
+
+    Returns (n_weights, d, d) with Ψ₀ = I.
+    """
+    p, d = A.shape[0], A.shape[1]
+    q = B.shape[0]
+    psis = [jnp.eye(d)]
+    for j in range(1, n_weights):
+        acc = B[j - 1] if j <= q else jnp.zeros((d, d))
+        for i in range(1, min(j, p) + 1):
+            acc = acc + A[i - 1] @ psis[j - i]
+        psis.append(acc)
+    return jnp.stack(psis)
+
+
+def solve_arma_from_psi(
+    psi: jax.Array, p: int, q: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Recover (A, B) from Ψ₁..Ψ_{p+q} (paper's block system, §3.4).
+
+    For j = q+1 .. q+p:   Ψⱼ = Σ_{i=1}^{p} Aᵢ Ψ_{j-i}   (Bⱼ = 0 there).
+    Stacked over rows r = 1..p, unknowns [A₁ … A_p]:
+
+        Σᵢ Aᵢ Ψ_{q+r-i} = Ψ_{q+r}
+
+    which transposes to the block system with blocks Ψ_{q+r-i}ᵀ, exactly the
+    matrix displayed in the paper.  Ψ with index < 0 is zero, index 0 is I.
+
+    Args:
+      psi: (≥p+q+1, d, d) with psi[0] = I (index j ↔ Ψⱼ).
+
+    Returns: A (p, d, d), B (q, d, d).
+    """
+    d = psi.shape[1]
+
+    def P(j: int) -> jax.Array:
+        if j < 0:
+            return jnp.zeros((d, d))
+        return psi[j]
+
+    # Row r (1..p):  Σ_i Ψ_{q+r-i}ᵀ A_iᵀ = Ψ_{q+r}ᵀ
+    rows = []
+    rhs = []
+    for r in range(1, p + 1):
+        rows.append(jnp.concatenate([P(q + r - i).T for i in range(1, p + 1)], axis=1))
+        rhs.append(P(q + r).T)
+    M = jnp.concatenate(rows, axis=0)  # (p·d, p·d)
+    R = jnp.concatenate(rhs, axis=0)  # (p·d, d)
+    sol = jnp.linalg.solve(M, R)  # stacked [A₁ᵀ; …; A_pᵀ]
+    A = jnp.stack([sol[i * d : (i + 1) * d, :].T for i in range(p)])
+
+    # Back-substitution for B (paper: B̂ⱼ = Ψ̂ⱼ − Σ Aᵢ Ψ̂_{j-i}).
+    Bs = []
+    for j in range(1, q + 1):
+        acc = P(j)
+        for i in range(1, min(j, p) + 1):
+            acc = acc - A[i - 1] @ P(j - i)
+        Bs.append(acc)
+    B = jnp.stack(Bs) if q > 0 else jnp.zeros((0, d, d))
+    return A, B
+
+
+def fit_arma(
+    gamma: jax.Array, p: int, q: int, m: int | None = None
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fit ARMA(p, q) from autocovariances γ̂ (paper §3.4).
+
+    Args:
+      gamma: (≥m+1, d, d) stacked γ̂(0..) — the weak-memory statistic.
+      m: innovation recursion depth (default p+q, the paper's choice; larger
+        m gives better Ψ estimates at O(m² d³) driver cost).
+
+    Returns: A (p,d,d), B (q,d,d), sigma (d,d).
+    """
+    if m is None:
+        m = p + q
+    m = max(m, p + q)
+    theta, V = innovation_algorithm(gamma, m)
+    d = gamma.shape[1]
+    # Θ̂_{m,j} estimates Ψⱼ ; prepend Ψ₀ = I.
+    psi = jnp.concatenate(
+        [jnp.eye(d)[None], jnp.stack([theta[m - 1, j - 1] for j in range(1, p + q + 1)])]
+    )
+    A, B = solve_arma_from_psi(psi, p, q)
+    return A, B, V[m]

@@ -1,0 +1,86 @@
+"""The multivariate innovation algorithm and MA fitting (paper §3.3).
+
+Conventions:  γ(h) = E[X_t X_{t+h}ᵀ],  Γ(h) := E[X_{t+h} X_tᵀ] = γ(h)ᵀ.
+
+Recursion (Brockwell & Davis prop. 11.4.2, as derived in the paper):
+
+  V₀ = Γ(0)
+  for m = 1, 2, …:
+    for k = 0 .. m-1:
+      Θ_{m,m-k} = [ Γ(m-k) − Σ_{j=0}^{k-1} Θ_{m,m-j} V_j Θ_{k,k-j}ᵀ ] V_k⁻¹
+    V_m = Γ(0) − Σ_{j=0}^{m-1} Θ_{m,m-j} V_j Θ_{m,m-j}ᵀ
+
+For an MA(q) process the estimates Θ_{m,1..q} → B_{1..q} and V_m → Σ_ε as m
+grows.  The only data-dependent input is γ̂ — the weak-memory sufficient
+statistic computed by the overlapping-block map-reduce; the recursion itself
+is O(m² d³) *driver-side* work on tiny matrices (the paper's point: never
+touch the raw series again).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["innovation_algorithm", "fit_ma"]
+
+
+def innovation_algorithm(gamma: jax.Array, m_max: int) -> Tuple[jax.Array, jax.Array]:
+    """Run the innovation recursion up to order ``m_max``.
+
+    Args:
+      gamma: (≥m_max+1, d, d) stacked autocovariances γ(0..m_max).
+      m_max: number of recursion steps.
+
+    Returns:
+      theta: (m_max, m_max, d, d) — theta[m-1, j-1] = Θ_{m,j} for 1 ≤ j ≤ m,
+        zero elsewhere.
+      V: (m_max+1, d, d) — innovation covariances V_0..V_{m_max}.
+    """
+    if gamma.shape[0] < m_max + 1:
+        raise ValueError(f"need γ̂ up to lag {m_max}, got {gamma.shape[0] - 1}")
+    d = gamma.shape[1]
+    G = lambda h: gamma[h].T  # Γ(h), h ≥ 0
+
+    theta = [[None] * (m + 1) for m in range(m_max + 1)]  # theta[m][j] = Θ_{m,j}
+    V = [G(0)]
+    for m in range(1, m_max + 1):
+        for k in range(m):
+            acc = G(m - k)
+            for j in range(k):
+                acc = acc - theta[m][m - j] @ V[j] @ theta[k][k - j].T
+            theta[m][m - k] = jnp.linalg.solve(V[k].T, acc.T).T  # acc @ V_k^{-1}
+        Vm = G(0)
+        for j in range(m):
+            Vm = Vm - theta[m][m - j] @ V[j] @ theta[m][m - j].T
+        V.append(Vm)
+
+    out = jnp.zeros((m_max, m_max, d, d))
+    for m in range(1, m_max + 1):
+        for j in range(1, m + 1):
+            out = out.at[m - 1, j - 1].set(theta[m][j])
+    return out, jnp.stack(V)
+
+
+def fit_ma(
+    gamma: jax.Array, q: int, m: int | None = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Fit a MA(q) model from autocovariances (paper §3.3).
+
+    Args:
+      gamma: (≥m+1, d, d) stacked γ̂; more lags → better innovation estimates.
+      q: MA order.
+      m: recursion depth (defaults to all available lags).
+
+    Returns:
+      B: (q, d, d) — MA coefficient estimates B̂_1..B̂_q.
+      sigma: (d, d) — innovation covariance estimate V_m.
+    """
+    if m is None:
+        m = gamma.shape[0] - 1
+    if m < q:
+        raise ValueError(f"recursion depth m={m} must be ≥ q={q}")
+    theta, V = innovation_algorithm(gamma, m)
+    B = jnp.stack([theta[m - 1, j] for j in range(q)])
+    return B, V[m]

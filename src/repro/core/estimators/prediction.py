@@ -1,0 +1,102 @@
+"""Linear prediction with AR/ARMA models (paper §4).
+
+AR one-step-ahead is a windowed (order-p weak-memory) kernel; multi-step
+re-injects predictions recursively.  ARMA prediction runs the innovation
+recursion in a streaming fashion — each step needs only max(p, q) past
+observations/innovations, which is the paper's point: forecasting is itself
+a weak-memory computation and can run block-parallel for stable models
+(initialization error decays exponentially with the causal spectral gap).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ar_one_step", "ar_forecast", "arma_innovations_filter", "arma_forecast"]
+
+
+def ar_one_step(A: jax.Array, history: jax.Array) -> jax.Array:
+    """X̂_{t+1} from the last p observations.  history: (≥p, d), newest last."""
+    p = A.shape[0]
+    lags = history[-1 : -p - 1 : -1]  # X_t, X_{t-1}, …, X_{t-p+1}
+    return jnp.einsum("pij,pj->i", A, lags)
+
+
+def ar_forecast(A: jax.Array, history: jax.Array, steps: int) -> jax.Array:
+    """Iterated multi-step AR forecast (paper §4.1): (steps, d)."""
+    p, d = A.shape[0], A.shape[1]
+    buf = history[-p:]
+
+    def body(buf, _):
+        nxt = jnp.einsum("pij,pj->i", A, buf[::-1])
+        buf = jnp.concatenate([buf[1:], nxt[None]], axis=0)
+        return buf, nxt
+
+    _, preds = jax.lax.scan(body, buf, None, length=steps)
+    return preds
+
+
+def arma_innovations_filter(
+    A: jax.Array, B: jax.Array, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Streaming one-step predictions + innovation estimates (paper §4.2).
+
+    Uses the steady-state recursion (valid for t ≥ max(p, q), stable models):
+
+        X̂_{t+1} = Σᵢ Aᵢ X_{t+1-i} + Σⱼ Bⱼ ε̂_{t+1-j},   ε̂_s = X_s − X̂_s
+
+    with zero initialization (the paper notes init errors decay
+    exponentially for causal+invertible models, enabling approximate
+    block-parallel execution).
+
+    Returns:
+      preds: (T, d) one-step predictions X̂_t (pred[0] = 0).
+      innov: (T, d) innovation estimates.
+    """
+    p, d = A.shape[0], A.shape[1]
+    q = B.shape[0]
+    T = x.shape[0]
+    xlag0 = jnp.zeros((p, d))  # newest first: X_t, X_{t-1}, ...
+    elag0 = jnp.zeros((q, d)) if q > 0 else jnp.zeros((0, d))
+
+    def body(carry, x_t):
+        xlag, elag = carry
+        pred = jnp.einsum("pij,pj->i", A, xlag)
+        if q > 0:
+            pred = pred + jnp.einsum("qij,qj->i", B, elag)
+        innov = x_t - pred
+        xlag = jnp.concatenate([x_t[None], xlag[:-1]], axis=0) if p > 0 else xlag
+        if q > 0:
+            elag = jnp.concatenate([innov[None], elag[:-1]], axis=0)
+        return (xlag, elag), (pred, innov)
+
+    _, (preds, innovs) = jax.lax.scan(body, (xlag0, elag0), x)
+    return preds, innovs
+
+
+def arma_forecast(
+    A: jax.Array, B: jax.Array, history: jax.Array, steps: int
+) -> jax.Array:
+    """Multi-step ARMA forecast: filter the history, then iterate with
+    future innovations set to their mean (zero)."""
+    p, d = A.shape[0], A.shape[1]
+    q = B.shape[0]
+    _, innovs = arma_innovations_filter(A, B, history)
+    xlag = history[-1 : -p - 1 : -1] if p > 0 else jnp.zeros((0, d))
+    elag = innovs[-1 : -q - 1 : -1] if q > 0 else jnp.zeros((0, d))
+
+    def body(carry, _):
+        xlag, elag = carry
+        pred = jnp.einsum("pij,pj->i", A, xlag)
+        if q > 0:
+            pred = pred + jnp.einsum("qij,qj->i", B, elag)
+        if p > 0:
+            xlag = jnp.concatenate([pred[None], xlag[:-1]], axis=0)
+        if q > 0:
+            elag = jnp.concatenate([jnp.zeros((1, d)), elag[:-1]], axis=0)
+        return (xlag, elag), pred
+
+    _, preds = jax.lax.scan(body, (xlag, elag), None, length=steps)
+    return preds

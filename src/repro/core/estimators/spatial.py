@@ -1,0 +1,218 @@
+"""Banded spatial AR models — very-high-d weak memory in SPACE (paper §6).
+
+When the AR(1) transition A is b-banded (numerical-differentiation stencils,
+road networks, sensor lattices), the paper row-partitions the state into P
+pieces P_i with spatial halos P_i⁺ = P_i ∪ b-neighbours and shows:
+
+  * one-step prediction x̂_{t+1} = A x_t is embarrassingly parallel across
+    row partitions, O(d·(2b+1)) total instead of O(d²)  (§6.1);
+  * with block-diagonal noise precision Π (blocks aligned to the partition),
+    the conditional likelihood — and its gradient — SEPARATES per partition
+    (§6.2): node i needs only (X^{P_i⁺}_t)_t, zero shuffle;
+  * first-order methods with the §6.3 step size converge exponentially.
+
+The banded matrix is stored as stacked diagonals, shape (d, 2b+1):
+``diags[i, b+o] = A[i, i+o]`` for offsets o ∈ [-b, b] (zero where out of
+range) — the same layout `repro.kernels.banded_matvec` tiles into VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BandedARModel",
+    "banded_to_dense",
+    "dense_to_banded",
+    "banded_predict",
+    "SpatialPartition",
+    "banded_predict_partitioned",
+    "banded_nll",
+    "fit_banded_ar",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BandedARModel:
+    """x_{t+1} = A x_t + ε_t with b-banded A stored as diagonals."""
+
+    diags: jax.Array  # (d, 2b+1)
+
+    @property
+    def d(self) -> int:
+        return self.diags.shape[0]
+
+    @property
+    def bandwidth(self) -> int:
+        return (self.diags.shape[1] - 1) // 2
+
+
+def banded_to_dense(diags: jax.Array) -> jax.Array:
+    """(d, 2b+1) diagonals → dense (d, d) banded matrix."""
+    d, w = diags.shape
+    b = (w - 1) // 2
+    rows = jnp.arange(d)[:, None]
+    cols = rows + jnp.arange(-b, b + 1)[None, :]
+    valid = (cols >= 0) & (cols < d)
+    dense = jnp.zeros((d, d))
+    return dense.at[rows, jnp.clip(cols, 0, d - 1)].add(jnp.where(valid, diags, 0.0))
+
+
+def dense_to_banded(A: jax.Array, b: int) -> jax.Array:
+    """Extract the (d, 2b+1) diagonals of a dense matrix (drops off-band)."""
+    d = A.shape[0]
+    rows = jnp.arange(d)[:, None]
+    cols = rows + jnp.arange(-b, b + 1)[None, :]
+    valid = (cols >= 0) & (cols < d)
+    return jnp.where(valid, A[rows, jnp.clip(cols, 0, d - 1)], 0.0)
+
+
+def banded_predict(diags: jax.Array, x: jax.Array) -> jax.Array:
+    """x̂ = A x from the diagonal form — O(d·(2b+1)) (paper §6.1).
+
+    Args:
+      diags: (d, 2b+1);  x: (..., d).
+    Returns (..., d).
+    """
+    d, w = diags.shape
+    b = (w - 1) // 2
+    # gather the b-halo neighbourhood of every row: (..., d, 2b+1)
+    cols = jnp.arange(d)[:, None] + jnp.arange(-b, b + 1)[None, :]
+    valid = (cols >= 0) & (cols < d)
+    xn = jnp.take(x, jnp.clip(cols, 0, d - 1), axis=-1)
+    xn = jnp.where(valid, xn, 0.0)
+    return jnp.einsum("...dw,dw->...d", xn, diags)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialPartition:
+    """Row partitioning of a d-dim state with b-halos (paper §6.1, P_i / P_i⁺)."""
+
+    d: int
+    num_parts: int
+    bandwidth: int
+
+    def __post_init__(self):
+        if self.d % self.num_parts != 0:
+            raise ValueError(f"d={self.d} must divide into {self.num_parts} parts")
+
+    @property
+    def part_size(self) -> int:
+        return self.d // self.num_parts
+
+    def padded_indices(self) -> np.ndarray:
+        """(P, part_size + 2b) global row index of every padded slot (clamped)."""
+        starts = np.arange(self.num_parts) * self.part_size - self.bandwidth
+        idx = starts[:, None] + np.arange(self.part_size + 2 * self.bandwidth)[None, :]
+        return idx
+
+    def padded_mask(self) -> np.ndarray:
+        idx = self.padded_indices()
+        return (idx >= 0) & (idx < self.d)
+
+
+def banded_predict_partitioned(
+    diags: jax.Array, x: jax.Array, part: SpatialPartition
+) -> jax.Array:
+    """Partitioned predictor: each part computes its rows from x^{P_i⁺} only.
+
+    Bit-identical to :func:`banded_predict` (property-tested); the P axis is
+    vmapped here and sharded over a mesh axis in
+    `repro.parallel` / `examples/spatial_ar.py`.
+    """
+    b = part.bandwidth
+    ps = part.part_size
+    idx = jnp.asarray(part.padded_indices())
+    mask = jnp.asarray(part.padded_mask())
+    x_parts = jnp.where(mask, jnp.take(x, jnp.clip(idx, 0, part.d - 1), axis=-1), 0.0)
+    diags_parts = diags.reshape(part.num_parts, ps, -1)
+
+    def one(diag_p, xp):
+        # row r of this part sees padded slots [r, r+2b]
+        cols = jnp.arange(ps)[:, None] + jnp.arange(2 * b + 1)[None, :]
+        xn = xp[cols]
+        return jnp.einsum("rw,rw->r", xn, diag_p)
+
+    out = jax.vmap(one)(diags_parts, jnp.moveaxis(x_parts, 0, 0))
+    return out.reshape(part.d)
+
+
+def banded_nll(
+    diags: jax.Array,
+    x: jax.Array,
+    block_precisions: Optional[jax.Array] = None,
+    part: Optional[SpatialPartition] = None,
+) -> jax.Array:
+    """Mean conditional NLL with block-diagonal precision (paper §6.2).
+
+    Args:
+      diags: (d, 2b+1) banded transition.
+      x: (T, d) observations.
+      block_precisions: (P, ps, ps) diagonal blocks π_i of Π (defaults I).
+      part: spatial partitioning (defaults to one part).
+
+    The separability claim: this loss is a sum over partitions i of terms
+    that only read X^{P_i⁺} — verified in tests by comparing against the
+    dense-precision computation.
+    """
+    d = diags.shape[0]
+    if part is None:
+        part = SpatialPartition(d=d, num_parts=1, bandwidth=(diags.shape[1] - 1) // 2)
+    pred = banded_predict(diags, x[:-1])  # (T-1, d)
+    resid = x[1:] - pred
+    ps = part.part_size
+    r = resid.reshape(resid.shape[0], part.num_parts, ps)
+    if block_precisions is None:
+        quad = jnp.sum(r * r)
+        logdet = 0.0
+    else:
+        quad = jnp.einsum("tpi,pij,tpj->", r, block_precisions, r)
+        logdet = jnp.sum(jnp.linalg.slogdet(block_precisions)[1])
+    n = resid.shape[0]
+    return 0.5 * quad / n - 0.5 * logdet
+
+
+class BandedFitResult(NamedTuple):
+    diags: jax.Array
+    nll_trace: jax.Array
+
+
+def fit_banded_ar(
+    x: jax.Array,
+    bandwidth: int,
+    *,
+    n_steps: int = 300,
+    step_size: Optional[float] = None,
+    num_parts: int = 1,
+    block_precisions: Optional[jax.Array] = None,
+) -> BandedFitResult:
+    """First-order conditional MLE of the banded model (paper §6.2–6.3).
+
+    The gradient w.r.t. the (d, 2b+1) diagonals separates across row
+    partitions; jax.grad through :func:`banded_nll` realizes exactly the
+    paper's per-node gradient with time complexity O(N·(2b+1)²) per row.
+    """
+    d = x.shape[1]
+    part = SpatialPartition(d=d, num_parts=num_parts, bandwidth=bandwidth)
+    diags = jnp.zeros((d, 2 * bandwidth + 1))
+    if step_size is None:
+        c = jnp.cov(x, rowvar=False).reshape(d, d)
+        ev = jnp.linalg.eigvalsh(c)
+        step_size = float(2.0 / (ev[0] + ev[-1]))
+
+    loss = lambda dg: banded_nll(dg, x, block_precisions, part)
+
+    @jax.jit
+    def step(dg):
+        v, g = jax.value_and_grad(loss)(dg)
+        return dg - step_size * g, v
+
+    trace = []
+    for _ in range(n_steps):
+        diags, v = step(diags)
+        trace.append(v)
+    return BandedFitResult(diags, jnp.stack(trace))

@@ -1,0 +1,211 @@
+"""Sufficient statistics of second-order stationary series (paper §2, §7.1).
+
+All estimators are M-estimators of order-H weak memory: a windowed kernel
+mapped over time, reduced with a sum.  Three equivalent execution paths are
+provided (serial oracle / overlapping blocks / sharded blocks); equality is
+property-tested.
+
+The block path does NOT vmap a per-center kernel: the lag-h cross-product
+sum over a block is the matmul ``core.T @ shifted_h`` between the block core
+and its h-shifted padded view — this is the TPU adaptation of the paper's
+per-thread GPU kernel (one MXU matmul computes every center of the block at
+once; the halo makes the shifted view local).  `repro.kernels.window_stats`
+implements the same contraction as an explicit Pallas VMEM kernel.
+"""
+from __future__ import annotations
+
+from typing import Literal, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..overlap import OverlapSpec, make_overlapping_blocks
+
+Normalization = Literal["paper", "standard"]
+
+__all__ = [
+    "mean",
+    "raw_lag_sums",
+    "block_lag_sums",
+    "autocovariance",
+    "autocovariance_blocked",
+    "autocovariance_sharded",
+    "autocorrelation",
+    "partial_autocorrelation",
+    "gamma_normalizer",
+]
+
+
+def mean(x: jax.Array) -> jax.Array:
+    """μ̂ = (1/N) Σ X_k — the order-0 weak-memory estimator (paper §2.1.1)."""
+    if x.ndim == 1:
+        x = x[:, None]
+    return jnp.mean(x, axis=0)
+
+
+def gamma_normalizer(n: int, max_lag: int, normalization: Normalization) -> jax.Array:
+    """Per-lag normalizers for γ̂(h), h = 0..max_lag.
+
+    "paper":    1/(N-h-1)  (paper §2.1.2 — unbiased-style, not PSD-safe)
+    "standard": 1/N        (biased, guarantees a PSD block-Toeplitz matrix;
+                            preferred when feeding Yule-Walker solves)
+    """
+    h = jnp.arange(max_lag + 1)
+    if normalization == "paper":
+        return 1.0 / (n - h - 1)
+    return jnp.full((max_lag + 1,), 1.0 / n)
+
+
+def raw_lag_sums(x: jax.Array, max_lag: int) -> jax.Array:
+    """Serial oracle: S(h) = Σ_{k=0}^{N-1-h} X_k X_{k+h}^T, h = 0..max_lag.
+
+    Returns (max_lag+1, d, d).
+    """
+    if x.ndim == 1:
+        x = x[:, None]
+    n = x.shape[0]
+
+    def one(h):
+        head = jax.lax.dynamic_slice_in_dim(x, 0, n - max_lag, axis=0)
+        shifted = jax.lax.dynamic_slice_in_dim(x, h, n - max_lag, axis=0)
+        # Only the common full-length prefix enters this vectorized form;
+        # the ragged tail (k in [n-max_lag, n-h)) is added below.
+        return jnp.einsum("ti,tj->ij", head, shifted)
+
+    full = jax.vmap(one)(jnp.arange(max_lag + 1))
+
+    # Ragged tail: for lag h, centers k = n-max_lag .. n-1-h.
+    def tail(h):
+        ks = jnp.arange(max_lag)  # offsets into the tail region
+        k = n - max_lag + ks
+        valid = (k + h) <= (n - 1)
+        xk = x[jnp.clip(k, 0, n - 1)]
+        xkh = x[jnp.clip(k + h, 0, n - 1)]
+        contrib = jnp.einsum("ti,tj->tij", xk, xkh)
+        return jnp.sum(jnp.where(valid[:, None, None], contrib, 0.0), axis=0)
+
+    if max_lag > 0:
+        full = full + jax.vmap(tail)(jnp.arange(max_lag + 1))
+    return full
+
+
+def block_lag_sums(blocks: jax.Array, spec: OverlapSpec, max_lag: int) -> jax.Array:
+    """Per-block lag sums via lagged matmuls: (P, max_lag+1, d, d).
+
+    Requires ``spec.h_left == 0`` and ``spec.h_right >= max_lag`` (causal
+    forward window).  Boundary correctness is automatic: halo slots beyond
+    the global series end are zero-filled, so their products vanish — no
+    masks needed (the paper's Fig. 2 scheme).
+    """
+    if spec.h_left != 0 or spec.h_right < max_lag:
+        raise ValueError(
+            f"autocovariance at max_lag={max_lag} needs h_left=0, "
+            f"h_right>={max_lag}; got ({spec.h_left},{spec.h_right})"
+        )
+    nb = spec.block_size
+
+    def per_block(block):
+        core = block[:nb]  # h_left == 0 → core leads
+
+        def one(h):
+            shifted = jax.lax.dynamic_slice_in_dim(block, h, nb, axis=0)
+            return jnp.einsum("ti,tj->ij", core, shifted)
+
+        return jax.vmap(one)(jnp.arange(max_lag + 1))
+
+    return jax.vmap(per_block)(blocks)
+
+
+def autocovariance(
+    x: jax.Array,
+    max_lag: int,
+    normalization: Normalization = "paper",
+    center: bool = False,
+) -> jax.Array:
+    """Serial γ̂(h), h = 0..max_lag: (max_lag+1, d, d).  γ̂(-h) = γ̂(h)ᵀ."""
+    if x.ndim == 1:
+        x = x[:, None]
+    if center:
+        x = x - mean(x)[None, :]
+    s = raw_lag_sums(x, max_lag)
+    norm = gamma_normalizer(x.shape[0], max_lag, normalization)
+    return s * norm[:, None, None]
+
+
+def autocovariance_blocked(
+    x: jax.Array,
+    max_lag: int,
+    block_size: int,
+    normalization: Normalization = "paper",
+    center: bool = False,
+) -> jax.Array:
+    """Embarrassingly-parallel γ̂ over overlapping blocks (paper Fig. 2/4)."""
+    if x.ndim == 1:
+        x = x[:, None]
+    if center:
+        x = x - mean(x)[None, :]
+    spec = OverlapSpec(n=x.shape[0], block_size=block_size, h_left=0, h_right=max_lag)
+    blocks, _ = make_overlapping_blocks(x, spec)
+    partial = block_lag_sums(blocks, spec, max_lag)
+    s = jnp.sum(partial, axis=0)
+    norm = gamma_normalizer(x.shape[0], max_lag, normalization)
+    return s * norm[:, None, None]
+
+
+def autocovariance_sharded(
+    blocks: jax.Array,
+    spec: OverlapSpec,
+    max_lag: int,
+    mesh: Mesh,
+    axis: str = "data",
+    normalization: Normalization = "paper",
+) -> jax.Array:
+    """Cluster path: blocks pre-sharded over ``axis``; one psum of (H+1,d,d).
+
+    Data never moves between devices — only the (max_lag+1)·d² sufficient
+    statistic is reduced.  This is the paper's core scaling claim.
+    """
+
+    def local(blocks_local):
+        partial = block_lag_sums(blocks_local, spec, max_lag)
+        return jax.lax.psum(jnp.sum(partial, axis=0), axis)
+
+    s = jax.shard_map(local, mesh=mesh, in_specs=P(axis), out_specs=P(), check_vma=False)(
+        blocks
+    )
+    norm = gamma_normalizer(spec.n, max_lag, normalization)
+    return s * norm[:, None, None]
+
+
+def autocorrelation(gamma: jax.Array) -> jax.Array:
+    """ρ̂(h) = diag(γ̂(0))^{-1/2} γ̂(h) diag(γ̂(0))^{-1/2} (paper §2.1.3)."""
+    d0 = jnp.sqrt(jnp.diagonal(gamma[0]))
+    inv = 1.0 / d0
+    return gamma * inv[None, :, None] * inv[None, None, :]
+
+
+def partial_autocorrelation(gamma: jax.Array, max_order: Optional[int] = None) -> jax.Array:
+    """κ̂(p) for p = 1..max_order from γ̂ (paper §2.1.3, "from auto-correlation
+    to partial auto-correlation" linear system), solved per order with the
+    dense block-Toeplitz system; the scalable recursion lives in
+    `yule_walker.block_levinson`.
+
+    Returns (max_order, d, d): entry p-1 is U_p^{(p)}.
+    """
+    H = gamma.shape[0] - 1
+    if max_order is None:
+        max_order = H
+    if max_order > H:
+        raise ValueError(f"need γ̂ up to lag {max_order}, got {H}")
+    d = gamma.shape[1]
+    out = []
+    for p in range(1, max_order + 1):
+        from .yule_walker import _block_toeplitz, _stack_rhs
+
+        G = _block_toeplitz(gamma, p)
+        rhs = _stack_rhs(gamma, p)
+        sol = jnp.linalg.solve(G, rhs)  # (p·d, d) of [U_1ᵀ; ...; U_pᵀ]
+        u_p_T = sol[(p - 1) * d : p * d, :]
+        out.append(u_p_T.T)
+    return jnp.stack(out)

@@ -1,0 +1,220 @@
+"""Order-(H, K) weak memory on time-series graphs (paper §9, §11).
+
+A time-series graph is ((X_t^v)_{v∈V})_t.  An estimator has order-(H, K)
+weak memory if its kernel at (t, v) reads only vertices ≤K hops away within
+±H time steps.  The overlapping structure generalizes:
+
+  * graph partition: vertices split into parts; each part replicates its
+    K-hop boundary (the *graph halo*, paper Fig. 5);
+  * cross-product partitioning (paper Fig. 8): (time block + H halo) ×
+    (vertex part + K halo) — both axes embarrassingly parallel.
+
+Graphs are represented TPU-style: a dense padded neighbour table
+``nbrs (V, max_deg)`` with −1 padding — gathers instead of pointer chasing
+(the skip-list machinery of paper §12.3 does not transfer; see DESIGN.md).
+
+Includes the paper's running example: the order-(1,1) arterial-traffic
+Dynamic Bayesian Network simulator (§11.1.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "line_graph",
+    "grid_graph",
+    "k_hop_neighbors",
+    "GraphPartition",
+    "make_graph_partition",
+    "graph_window_map_reduce",
+    "traffic_dbn_step",
+    "simulate_traffic_dbn",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Padded dense adjacency: nbrs[v] lists neighbours of v, −1 = padding."""
+
+    nbrs: np.ndarray  # (V, max_deg) int32
+
+    @property
+    def num_vertices(self) -> int:
+        return self.nbrs.shape[0]
+
+
+def line_graph(v: int) -> Graph:
+    """A road corridor: v links in a line (the paper's arterial example)."""
+    nbrs = np.full((v, 2), -1, dtype=np.int32)
+    nbrs[1:, 0] = np.arange(v - 1)  # upstream
+    nbrs[:-1, 1] = np.arange(1, v)  # downstream
+    return Graph(nbrs)
+
+
+def grid_graph(rows: int, cols: int) -> Graph:
+    """4-connected grid (sensor lattice, paper Fig. 3)."""
+    v = rows * cols
+    nbrs = np.full((v, 4), -1, dtype=np.int32)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            cand = [(r - 1, c), (r + 1, c), (r, c - 1), (r, c + 1)]
+            k = 0
+            for rr, cc in cand:
+                if 0 <= rr < rows and 0 <= cc < cols:
+                    nbrs[i, k] = rr * cols + cc
+                    k += 1
+    return Graph(nbrs)
+
+
+def k_hop_neighbors(g: Graph, seeds: np.ndarray, k: int) -> np.ndarray:
+    """Boolean (V,) mask of vertices within k hops of any seed (BFS)."""
+    mask = np.zeros(g.num_vertices, dtype=bool)
+    mask[seeds] = True
+    for _ in range(k):
+        cur = np.where(mask)[0]
+        nb = g.nbrs[cur].reshape(-1)
+        nb = nb[nb >= 0]
+        mask[nb] = True
+    return mask
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphPartition:
+    """Overlapping vertex partition: part i owns ``own[i]`` and replicates
+    ``halo[i]`` (its K-hop boundary).  ``padded[i] = own ∪ halo`` padded to a
+    common length with −1 so the parts stack into a dense array."""
+
+    own: np.ndarray  # (P, own_size) int32
+    padded: np.ndarray  # (P, padded_size) int32, −1 padding
+    local_nbrs: np.ndarray  # (P, padded_size, max_deg) — neighbour slots
+    #   remapped to local padded positions, −1 where the neighbour is absent
+
+
+def make_graph_partition(g: Graph, num_parts: int, k: int) -> GraphPartition:
+    """Contiguous vertex partition with K-hop halos (paper Fig. 5).
+
+    Assumes vertex ids are ordered so contiguous ranges are meaningful
+    (true for line/grid graphs; general graphs should be pre-ordered with a
+    bandwidth-minimizing permutation — same assumption as the paper's banded
+    §6 case).
+    """
+    v = g.num_vertices
+    if v % num_parts != 0:
+        raise ValueError(f"V={v} must divide into {num_parts} parts")
+    size = v // num_parts
+    own = np.arange(v, dtype=np.int32).reshape(num_parts, size)
+    padded_sets = []
+    for i in range(num_parts):
+        mask = k_hop_neighbors(g, own[i], k)
+        padded_sets.append(np.where(mask)[0].astype(np.int32))
+    width = max(len(s) for s in padded_sets)
+    padded = np.full((num_parts, width), -1, dtype=np.int32)
+    for i, s in enumerate(padded_sets):
+        padded[i, : len(s)] = s
+
+    # Remap each padded vertex's neighbour list into local padded slots.
+    local_nbrs = np.full((num_parts, width, g.nbrs.shape[1]), -1, dtype=np.int32)
+    for i in range(num_parts):
+        g2l = {int(gv): li for li, gv in enumerate(padded[i]) if gv >= 0}
+        for li, gv in enumerate(padded[i]):
+            if gv < 0:
+                continue
+            for j, nb in enumerate(g.nbrs[gv]):
+                if nb >= 0 and int(nb) in g2l:
+                    local_nbrs[i, li, j] = g2l[int(nb)]
+    return GraphPartition(own=own, padded=padded, local_nbrs=local_nbrs)
+
+
+def graph_window_map_reduce(
+    kernel: Callable[[jax.Array, jax.Array], jax.Array],
+    x: jax.Array,
+    g: Graph,
+    part: GraphPartition,
+) -> jax.Array:
+    """Σ_v kernel(x[v], x[neighbours(v)]) computed part-parallel.
+
+    kernel: (d,), (max_deg, d), (max_deg,) mask → pytree contribution.
+    Each part evaluates only its OWN vertices, reading halo data locally —
+    zero inter-part communication; equality with the serial evaluation is
+    property-tested.
+    """
+    padded_x = jnp.where(
+        (part.padded >= 0)[..., None],
+        x[jnp.clip(part.padded, 0, g.num_vertices - 1)],
+        0.0,
+    )  # (P, W, d)
+
+    own_local = []
+    for i in range(part.own.shape[0]):
+        g2l = {int(gv): li for li, gv in enumerate(part.padded[i]) if gv >= 0}
+        own_local.append([g2l[int(v)] for v in part.own[i]])
+    own_local = jnp.asarray(np.array(own_local, dtype=np.int32))
+
+    local_nbrs = jnp.asarray(part.local_nbrs)
+
+    def per_part(xp, own_idx, lnbrs):
+        def per_vertex(li):
+            nb_idx = lnbrs[li]
+            nb_mask = nb_idx >= 0
+            nb = jnp.where(nb_mask[:, None], xp[jnp.clip(nb_idx, 0, xp.shape[0] - 1)], 0.0)
+            return kernel(xp[li], nb, nb_mask)
+
+        contribs = jax.vmap(per_vertex)(own_idx)
+        return jax.tree.map(lambda l: jnp.sum(l, axis=0), contribs)
+
+    partials = jax.vmap(per_part)(padded_x, own_local, local_nbrs)
+    return jax.tree.map(lambda l: jnp.sum(l, axis=0), partials)
+
+
+def traffic_dbn_step(
+    x: jax.Array,
+    nbrs: jax.Array,
+    inflow: jax.Array,
+    capacity: float = 1.0,
+    send_rate: float = 0.3,
+) -> jax.Array:
+    """One step of the order-(1,1) arterial-traffic DBN (paper §11.1.1).
+
+    Vehicles leave each link at ``send_rate`` (bounded by downstream spare
+    capacity) and arrive from upstream; ``inflow`` models boundary demand.
+    Pure function of the 1-hop neighbourhood → runs under the cross-product
+    overlapping partitioning.
+    """
+    v = x.shape[0]
+    up = nbrs[:, 0]
+    down = nbrs[:, 1]
+    has_down = down >= 0
+    has_up = up >= 0
+    down_occ = jnp.where(has_down, x[jnp.clip(down, 0, v - 1)], 0.0)
+    spare = jnp.maximum(capacity - down_occ, 0.0)
+    out = jnp.minimum(send_rate * x, spare) * has_down
+    inn = jnp.where(has_up, out[jnp.clip(up, 0, v - 1)], 0.0)
+    return jnp.clip(x - out + inn + inflow, 0.0, capacity)
+
+
+def simulate_traffic_dbn(
+    g: Graph,
+    x0: jax.Array,
+    steps: int,
+    key: jax.Array,
+    inflow_scale: float = 0.05,
+) -> jax.Array:
+    """(steps+1, V) trajectory of the traffic DBN with random boundary demand."""
+    nbrs = jnp.asarray(g.nbrs)
+
+    def body(carry, k):
+        x = carry
+        inflow = inflow_scale * jax.random.uniform(k, x.shape) * (nbrs[:, 0] < 0)
+        nxt = traffic_dbn_step(x, nbrs, inflow)
+        return nxt, nxt
+
+    keys = jax.random.split(key, steps)
+    _, traj = jax.lax.scan(body, x0, keys)
+    return jnp.concatenate([x0[None], traj], axis=0)

@@ -1,0 +1,106 @@
+"""Halo materialization strategies (paper §10 vs. beyond-paper exchange).
+
+The paper's scheme *pre-replicates* halos at ingest ("replication" mode):
+after that, zero communication — optimal when the same blocks are swept many
+times (SGD epochs over a calibration set).
+
+On a TPU mesh, the alternative is to keep blocks disjoint and exchange the
+halo once per sweep with ``jax.lax.ppermute`` (collective-permute over ICI) —
+"exchange" mode.  Memory cost drops from ``(P-1)·(h_l+h_r)·d`` replicated
+elements to zero; communication cost rises from zero to one neighbour
+permute of ``(h_l+h_r)·d`` elements per sweep.  Both are exposed; the
+paper-faithful mode is the recorded baseline in EXPERIMENTS.md §Perf and the
+exchange mode is the beyond-paper variant.
+
+These helpers run **inside shard_map** — `x` is the local shard.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["halo_exchange", "halo_exchange_grouped", "edge_zeros_note"]
+
+
+def _shift(x: jax.Array, axis_name: str, direction: int) -> jax.Array:
+    """Send local data to the neighbour at index+direction along axis_name.
+
+    Devices with no source (ends of the line) receive zeros — exactly the
+    zero-filled boundary slots of `repro.core.overlap.make_overlapping_blocks`.
+    """
+    n = jax.lax.axis_size(axis_name)
+    perm = [(i, i + direction) for i in range(n) if 0 <= i + direction < n]
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+def halo_exchange(
+    x: jax.Array,
+    h_left: int,
+    h_right: int,
+    axis_name: str,
+    *,
+    time_axis: int = 0,
+) -> jax.Array:
+    """Pad the local time shard with its neighbours' boundary samples.
+
+    Args:
+      x: local shard, time along ``time_axis``.
+      h_left: number of trailing samples to pull from the *previous* shard.
+      h_right: number of leading samples to pull from the *next* shard.
+      axis_name: mesh axis the time dimension is sharded over.
+
+    Returns:
+      local shard extended to ``h_left + T_local + h_right`` along
+      ``time_axis``; out-of-range boundary slots are zeros.
+    """
+    parts = []
+    if h_left > 0:
+        tail = jax.lax.slice_in_dim(
+            x, x.shape[time_axis] - h_left, x.shape[time_axis], axis=time_axis
+        )
+        parts.append(_shift(tail, axis_name, +1))  # prev shard's tail → me
+    parts.append(x)
+    if h_right > 0:
+        head = jax.lax.slice_in_dim(x, 0, h_right, axis=time_axis)
+        parts.append(_shift(head, axis_name, -1))  # next shard's head → me
+    return jnp.concatenate(parts, axis=time_axis)
+
+
+def halo_exchange_grouped(
+    x: jax.Array,
+    h_left: int,
+    h_right: int,
+    axis_name: str,
+    *,
+    time_axis: int = 0,
+    ring: bool = False,
+) -> jax.Array:
+    """Variant used by sequence-parallel model layers (SWA attention, SSM
+    chunk state): optionally a ring (wrap-around) permute for rotary-free
+    periodic workloads; zero-fill line permute by default (causal LMs)."""
+    if not ring:
+        return halo_exchange(x, h_left, h_right, axis_name, time_axis=time_axis)
+    n = jax.lax.axis_size(axis_name)
+    perm_next = [(i, (i + 1) % n) for i in range(n)]
+    perm_prev = [(i, (i - 1) % n) for i in range(n)]
+    parts = []
+    if h_left > 0:
+        tail = jax.lax.slice_in_dim(
+            x, x.shape[time_axis] - h_left, x.shape[time_axis], axis=time_axis
+        )
+        parts.append(jax.lax.ppermute(tail, axis_name, perm_next))
+    parts.append(x)
+    if h_right > 0:
+        head = jax.lax.slice_in_dim(x, 0, h_right, axis=time_axis)
+        parts.append(jax.lax.ppermute(head, axis_name, perm_prev))
+    return jnp.concatenate(parts, axis=time_axis)
+
+
+def edge_zeros_note() -> str:
+    return (
+        "line-topology ppermute zero-fills missing neighbours; this matches "
+        "the zero-filled boundary halo slots of make_overlapping_blocks, so "
+        "exchange mode and replication mode are bit-identical (property-tested)."
+    )

@@ -1,0 +1,175 @@
+"""Weak-memory map-reduce engine (paper §7, §8, §10.2.1).
+
+An *order-(h_left, h_right) weak-memory estimator* is
+
+    Est(X)  =  Σ_{t}  k( window(t) ),      window(t) = X[t-h_left : t+h_right]
+
+for a commutative-associative ⊕ (here: pytree sum, or any user ⊕).  This
+module provides three execution strategies that are **bit-identical** in
+result (property-tested):
+
+  * :func:`serial_window_map_reduce` — the obvious single-node loop
+    (vectorized with vmap), the correctness oracle;
+  * :func:`block_window_map_reduce` — per-block partial reduction over an
+    overlapping block structure (`repro.core.overlap`), then a global
+    reduce.  Each block only touches its own padded data — zero shuffle:
+    the paper's embarrassingly-parallel scheme;
+  * :func:`sharded_window_map_reduce` — the same, with the block axis
+    sharded over a mesh axis via shard_map and the final reduce as a single
+    `psum` — the cluster-level instantiation.
+
+Estimators that admit a faster algebraic form (autocovariance = lagged
+matmuls feeding the MXU) bypass the per-center vmap and implement a *block
+kernel* directly; see `repro.core.estimators.stats` and
+`repro.kernels.window_stats`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .overlap import OverlapSpec, make_overlapping_blocks
+
+__all__ = [
+    "tree_sum",
+    "tree_zeros_like",
+    "serial_window_map_reduce",
+    "block_window_map_reduce",
+    "sharded_window_map_reduce",
+    "block_partials",
+]
+
+KernelFn = Callable[[jax.Array], Any]  # (window, d) -> pytree contribution
+
+
+def tree_sum(a: Any, b: Any) -> Any:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_zeros_like(a: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def _mask_tree(tree: Any, mask: jax.Array) -> Any:
+    """Zero out contributions of invalid centers.  mask: (...,) bools matching
+    the leading axes of every leaf."""
+
+    def m(leaf):
+        mb = mask.reshape(mask.shape + (1,) * (leaf.ndim - mask.ndim))
+        return jnp.where(mb, leaf, 0)
+
+    return jax.tree.map(m, tree)
+
+
+def _windows(x: jax.Array, h_left: int, h_right: int) -> jax.Array:
+    """All width-(h_l+1+h_r) windows of x: (n_centers, W, d).
+
+    Centers run over t ∈ [h_left, n - h_right); edge samples with incomplete
+    windows are *not* centers (they are exactly the paper's halo samples —
+    owned by the neighbouring computation).
+    """
+    n = x.shape[0]
+    w = h_left + 1 + h_right
+    n_centers = n - h_left - h_right
+    if n_centers <= 0:
+        raise ValueError(f"series of length {n} has no full window of width {w}")
+    starts = jnp.arange(n_centers)
+    return jax.vmap(lambda s: jax.lax.dynamic_slice_in_dim(x, s, w, axis=0))(starts)
+
+
+def serial_window_map_reduce(
+    kernel: KernelFn,
+    x: jax.Array,
+    h_left: int,
+    h_right: int,
+) -> Any:
+    """Oracle path: Σ_t k(X[t-h_l : t+h_r]) over all complete windows."""
+    if x.ndim == 1:
+        x = x[:, None]
+    wins = _windows(x, h_left, h_right)
+    contribs = jax.vmap(kernel)(wins)
+    return jax.tree.map(lambda l: jnp.sum(l, axis=0), contribs)
+
+
+def block_partials(
+    kernel: KernelFn,
+    blocks: jax.Array,
+    spec: OverlapSpec,
+    block_offset: jax.Array | int = 0,
+) -> Any:
+    """Per-block partial sums: pytree with leading axis P_local.
+
+    Every center in a block's *core* whose full window is globally valid
+    contributes; centers whose window would cross the global series boundary
+    are masked out (matching the serial estimator's center range exactly).
+
+    ``block_offset`` is the global id of ``blocks[0]`` — pass
+    ``jax.lax.axis_index(axis) * blocks_per_device`` when calling from inside
+    shard_map on a sharded block axis (it participates in tracing).
+    """
+    p_local = blocks.shape[0]
+    # Global index of each core center, and validity of its whole window.
+    block_ids = jnp.asarray(block_offset) + jnp.arange(p_local)
+    centers = block_ids[:, None] * spec.block_size + jnp.arange(spec.block_size)[None, :]
+    valid = (centers - spec.h_left >= 0) & (centers + spec.h_right <= spec.n - 1)
+    # Tail padding in the last block duplicates clamped centers; mask those too.
+    valid &= centers < spec.n
+    valid_mask = valid
+
+    def per_block(block, mask):
+        wins = _windows(block, spec.h_left, spec.h_right)  # (block_size, W, d)
+        contribs = jax.vmap(kernel)(wins)
+        contribs = _mask_tree(contribs, mask)
+        return jax.tree.map(lambda l: jnp.sum(l, axis=0), contribs)
+
+    return jax.vmap(per_block)(blocks, valid_mask)
+
+
+def block_window_map_reduce(
+    kernel: KernelFn,
+    x: jax.Array,
+    spec: OverlapSpec,
+) -> Any:
+    """Embarrassingly-parallel path on one host: build overlapping blocks,
+    reduce each independently, sum the P partials."""
+    blocks, _ = make_overlapping_blocks(x, spec)
+    partials = block_partials(kernel, blocks, spec)
+    return jax.tree.map(lambda l: jnp.sum(l, axis=0), partials)
+
+
+def sharded_window_map_reduce(
+    kernel: KernelFn,
+    blocks: jax.Array,
+    spec: OverlapSpec,
+    mesh: Mesh,
+    axis: str = "data",
+) -> Any:
+    """Cluster path: block axis sharded over ``axis``; one psum at the end.
+
+    ``blocks`` must already be device-put with the leading (P) axis sharded
+    over ``axis`` (see `repro.timeseries.dataset.TimeSeriesStore`).  This is
+    the paper's Spark scheme verbatim: the only cross-device communication is
+    the final reduction of the (tiny) sufficient statistics, never the data.
+    """
+    if spec.num_blocks % mesh.shape[axis] != 0:
+        raise ValueError(
+            f"num_blocks {spec.num_blocks} must divide evenly over mesh axis "
+            f"{axis}={mesh.shape[axis]}"
+        )
+
+    blocks_per_device = spec.num_blocks // mesh.shape[axis]
+
+    def local(blocks_local):
+        offset = jax.lax.axis_index(axis) * blocks_per_device
+        partials = block_partials(kernel, blocks_local, spec, block_offset=offset)
+        local_sum = jax.tree.map(lambda l: jnp.sum(l, axis=0), partials)
+        return jax.lax.psum(local_sum, axis)
+
+    fn = jax.shard_map(
+        local, mesh=mesh, in_specs=P(axis), out_specs=P(), check_vma=False
+    )
+    return fn(blocks)

@@ -1,0 +1,57 @@
+"""Deterministic synthetic LM token pipeline.
+
+Batches are a pure function of (seed, step) — restart-deterministic: after
+a crash + restore at step k the pipeline regenerates exactly the batches
+k, k+1, … with no state to checkpoint (DESIGN.md §6 fault model).  Tokens
+follow a Markov bigram sampler so the loss has learnable structure (used by
+examples/train_lm.py to show loss descent).
+
+Straggler mitigation hook: `host_batch` is cheap and synchronous; in a real
+multi-host deployment each host materializes only its shard
+(process_index-sliced) and a slow host never blocks others on data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticTokenPipeline:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    bigram_rank: int = 8  # low-rank bigram structure → learnable signal
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        u = rng.normal(size=(self.vocab, self.bigram_rank)).astype(np.float32)
+        v = rng.normal(size=(self.bigram_rank, self.vocab)).astype(np.float32)
+        logits = (u @ v) / np.sqrt(self.bigram_rank)
+        z = logits - logits.max(axis=1, keepdims=True)
+        p = np.exp(2.0 * z)
+        self._trans = (p / p.sum(axis=1, keepdims=True)).astype(np.float32)
+        self._cum = np.cumsum(self._trans, axis=1)
+
+    def host_batch(self, step: int) -> Dict[str, np.ndarray]:
+        """Markov batch for ``step`` (pure function of (seed, step))."""
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        b, s = self.global_batch, self.seq_len
+        toks = np.empty((b, s), dtype=np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, size=b)
+        u = rng.random(size=(b, s))
+        for t in range(1, s):
+            c = self._cum[toks[:, t - 1]]
+            toks[:, t] = (u[:, t, None] < c).argmax(axis=1)
+        return {"tokens": toks, "labels": toks.copy()}
+
+    def batches(self, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.host_batch(step)
+            step += 1

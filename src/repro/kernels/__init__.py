@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel package contains:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (padding, vmapping, interpret switch)
+  ref.py    — pure-jnp oracle, allclose-tested against the kernel
+
+Kernels:
+  window_stats  — lagged cross-product sums S(h)=Σ X_k X_{k+h}ᵀ, h=0..H.
+                  The TPU re-instantiation of the paper's §12 GPU
+                  shared-memory scheme: each grid step stages its N_B core
+                  tile plus the H-halo (realized as the neighbouring tile)
+                  into VMEM and computes every lag as an MXU matmul.
+  swa_attention — sliding-window causal flash attention: the paper's
+                  weak-memory window applied to LM serving (h2o-danube SWA,
+                  long_500k cells); communication/compute ∝ window, not seq.
+  banded_matvec — §6.1 banded predictor x̂=Ax from the stacked-diagonal
+                  form, row-tiled with spatial halos.
+"""
+from .window_stats import ops as window_stats_ops  # noqa: F401
+# lazy: subpackages import independently
+

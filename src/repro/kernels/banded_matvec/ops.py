@@ -1,0 +1,56 @@
+"""Public wrapper for the banded matvec kernel (paper §6.1 predictor)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import banded_matvec_pallas
+from .ref import banded_matvec_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def banded_matvec(
+    diags: jax.Array,
+    x: jax.Array,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = A x with b-banded A in diagonal storage.
+
+    Args:
+      diags: (d, 2b+1);  x: (d,) or (d, nrhs).
+
+    Returns y with x's trailing shape, float32.
+    """
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    d, w = diags.shape
+    b = (w - 1) // 2
+    block_rows = min(block_rows, d)
+    block_rows = max(block_rows, b)
+    d_pad = -(-d // block_rows) * block_rows
+    if d_pad != d:
+        diags = jnp.pad(diags, ((0, d_pad - d), (0, 0)))
+        x = jnp.pad(x, ((0, d_pad - d), (0, 0)))
+    # NOTE: the kernel masks by the PADDED d; rows beyond the true d have
+    # zero diagonals so their outputs are zero, and true rows reading into
+    # the pad region read zero x — both exact.
+    y = banded_matvec_pallas(
+        diags.astype(jnp.float32),
+        x.astype(jnp.float32),
+        block_rows=block_rows,
+        interpret=interpret,
+    )[:d]
+    return y[:, 0] if squeeze else y
+
+
+def banded_matvec_reference(diags: jax.Array, x: jax.Array) -> jax.Array:
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    y = banded_matvec_ref(diags.astype(jnp.float32), x.astype(jnp.float32))
+    return y[:, 0] if squeeze else y

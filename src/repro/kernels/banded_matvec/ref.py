@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the banded predictor (paper §6.1).
+
+y[r] = Σ_{o=-b..b} diags[r, b+o] · x[r+o]   (out-of-range x treated as 0)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def banded_matvec_ref(diags: jax.Array, x: jax.Array) -> jax.Array:
+    """diags: (d, 2b+1);  x: (d, nrhs) → (d, nrhs)."""
+    d, w = diags.shape
+    b = (w - 1) // 2
+    cols = jnp.arange(d)[:, None] + jnp.arange(-b, b + 1)[None, :]
+    valid = (cols >= 0) & (cols < d)
+    xn = x[jnp.clip(cols, 0, d - 1)]  # (d, 2b+1, nrhs)
+    xn = jnp.where(valid[..., None], xn, 0.0)
+    return jnp.einsum("dwn,dw->dn", xn, diags)

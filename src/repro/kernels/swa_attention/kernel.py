@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: sliding-window causal flash attention.
+
+The paper's weak-memory window applied to attention: position q attends only
+to k ∈ (q − W, q].  Each query tile therefore needs exactly
+``1 + ceil((W−1)/block_k)`` key tiles — its VMEM halo — instead of the whole
+prefix.  Compute and HBM traffic are O(S·W), not O(S²): the weak-memory
+claim at the kernel level.
+
+Grid: (batch·heads, n_q_tiles, n_kv_tiles_per_q), innermost axis sequential
+(online-softmax accumulation in VMEM scratch, canonical flash pattern).
+Block sizes default to 128×128 — MXU-aligned.  Boundary tiles are handled by
+index-map clamping + explicit probability masking (NOT -inf arithmetic:
+fully-masked tiles must contribute exactly zero probability mass).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scratch,
+    l_scratch,
+    acc_scratch,
+    *,
+    window: int,
+    block_q: int,
+    block_k: int,
+    n_kv: int,
+    scale: float,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0]  # (block_q, d)
+    k = k_ref[0]  # (block_k, d)
+    v = v_ref[0]
+
+    # Intended (unclamped) kv tile index; oldest tile first.  Anchor on the
+    # tile containing the LAST query of the q-tile (matters when bq > bk).
+    qt_last = (i * block_q + block_q - 1) // block_k
+    t = qt_last - (n_kv - 1) + j
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = t * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window) & (t >= 0)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s = s * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scratch[...]  # (block_q, 1) broadcast storage
+    l_prev = l_scratch[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_next = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_next)
+    p = jnp.where(mask, p, 0.0)  # exact zero for masked/fully-masked tiles
+    alpha = jnp.exp(m_prev - m_next)
+    l_next = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scratch[...] = m_next
+    l_scratch[...] = l_next
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        l = l_scratch[...]
+        o_ref[0] = (acc_scratch[...] / jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+def swa_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    window: int,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Sliding-window causal attention.
+
+    Args:
+      q, k, v: (BH, S, D); S % block_q == 0 == S % block_k (ops.py pads).
+      window: attend to k ∈ (q−window, q].
+
+    Returns (BH, S, D) in q.dtype.
+    """
+    bh, s, d = q.shape
+    if s % block_q or s % block_k:
+        raise ValueError(f"S={s} must be a multiple of block_q/block_k")
+    if block_q % block_k:
+        raise ValueError("block_q must be a multiple of block_k")
+    scale = (d**-0.5) if scale is None else scale
+    n_q = s // block_q
+    n_k_tiles = s // block_k
+    n_kv = 1 + -(-(window - 1) // block_k) + (block_q // block_k - 1)
+    n_kv = min(n_kv, n_k_tiles)
+
+    def kv_index(b, i, j):
+        qt_last = (i * block_q + block_q - 1) // block_k
+        t = qt_last - (n_kv - 1) + j
+        return (b, jnp.clip(t, 0, n_k_tiles - 1), 0)
+
+    grid = (bh, n_q, n_kv)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel,
+            window=window,
+            block_q=block_q,
+            block_k=block_k,
+            n_kv=n_kv,
+            scale=scale,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,73 @@
+"""Public wrapper for sliding-window flash attention.
+
+Handles GQA head grouping, sequence padding to tile multiples, and the
+interpret switch.  The backward pass is the padded-chunk reference
+(`repro.models.attention.local_attention_chunked` is the differentiable
+training path — see DESIGN.md: the kernel is the serving/forward hot-spot).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import swa_attention_pallas
+from .ref import swa_attention_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_q", "block_k", "interpret")
+)
+def swa_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    window: int,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Sliding-window causal attention with GQA.
+
+    Args:
+      q: (B, H, S, D);  k, v: (B, KVH, S, D) with H % KVH == 0.
+      window: attend to the previous ``window`` positions (incl. self).
+
+    Returns (B, H, S, D).
+    """
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    # pad sequence to a tile multiple; padded queries attend to themselves
+    # only (masked by causality) and are sliced away.
+    tile = max(block_q, block_k)
+    s_pad = -(-s // tile) * tile
+    if s_pad != s:
+        pad = ((0, 0), (0, 0), (0, s_pad - s), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    bq = min(block_q, s_pad)
+    bk = min(block_k, s_pad)
+    if bq % bk:
+        bk = bq
+    # GQA: repeat kv heads to full head count, flatten (B, H) → BH.
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    qf = q.reshape(b * h, s_pad, d)
+    kf = k.reshape(b * h, s_pad, d)
+    vf = v.reshape(b * h, s_pad, d)
+    out = swa_attention_pallas(
+        qf, kf, vf, window, block_q=bq, block_k=bk, interpret=interpret
+    )
+    return out.reshape(b, h, s_pad, d)[:, :, :s, :]
+
+
+def swa_attention_reference(
+    q: jax.Array, k: jax.Array, v: jax.Array, window: int
+) -> jax.Array:
+    """(B, H, S, D) GQA oracle."""
+    group = q.shape[1] // k.shape[1]
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    return swa_attention_ref(q, k, v, window)

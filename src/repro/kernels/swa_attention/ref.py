@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: dense causal sliding-window attention.
+
+Position q attends to k ∈ (q − window, q] — the order-(window−1) weak-memory
+kernel of DESIGN.md §4.  O(S²) memory; only for validation at small sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, window: int, scale: float | None = None
+) -> jax.Array:
+    """q, k, v: (..., S, D) → (..., S, D)."""
+    s = q.shape[-2]
+    d = q.shape[-1]
+    scale = (d**-0.5) if scale is None else scale
+    logits = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: lagged cross-product sums over overlapping VMEM tiles.
+
+Paper §12.2 (Fig. 9) stages blocks of size N_B + 2H into GPU shared memory so
+every thread's window is local.  The TPU adaptation (DESIGN.md §2):
+
+  * the "shared memory block" is a VMEM tile; the halo is realized by giving
+    the grid step a *second* BlockSpec view of the same HBM array shifted by
+    one tile (core tile i + tile i+1 ⇒ all windows with h ≤ N_B are local);
+  * instead of one thread per window centre, one MXU matmul per lag computes
+    EVERY centre of the tile at once:  S_tile(h) = coreᵀ @ shifted_h, a
+    (d × N_B)·(N_B × d) contraction — systolic-array-aligned when
+    N_B % 128 == 0 and d % 128 == 0 (padded by ops.py otherwise);
+  * the output block (H+1, d, d) is revisited by every grid step
+    (accumulation over the sequential TPU grid), initialized at step 0.
+
+Zero-fill boundary handling: ops.py pads the series with one extra zero tile
+so the last core tile's "next" view is all zeros — out-of-range products
+vanish without any masking (the same trick the overlap data structure uses).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_core_ref, x_next_ref, out_ref, *, max_lag: int, block_t: int):
+    i = pl.program_id(0)
+
+    core = x_core_ref[...]  # (block_t, d)
+    nxt = x_next_ref[...]  # (block_t, d)
+    both = jnp.concatenate([core, nxt], axis=0)  # (2·block_t, d)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # One MXU contraction per lag: every window centre of the tile at once.
+    for h in range(max_lag + 1):
+        shifted = jax.lax.dynamic_slice_in_dim(both, h, block_t, axis=0)
+        contrib = jax.lax.dot_general(
+            core,
+            shifted,
+            (((0,), (0,)), ((), ())),  # contract over time: (d, d)
+            preferred_element_type=jnp.float32,
+        )
+        out_ref[h, :, :] += contrib
+
+
+def window_stats_pallas(
+    x: jax.Array,
+    max_lag: int,
+    *,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw lagged sums S(0..max_lag) of a zero-padded series.
+
+    Args:
+      x: (n_padded, d) with n_padded % block_t == 0, REQUIRED to end with at
+        least one all-zero tile (ops.py guarantees this) and max_lag ≤ block_t.
+      max_lag: H.
+      block_t: core tile length N_B (the VMEM block).
+
+    Returns (max_lag+1, d, d) float32.
+    """
+    n, d = x.shape
+    if n % block_t != 0:
+        raise ValueError(f"padded length {n} must be a multiple of block_t={block_t}")
+    if max_lag > block_t:
+        raise ValueError(f"max_lag={max_lag} must be ≤ block_t={block_t}")
+    grid = (n // block_t,)
+    num_tiles = grid[0]
+
+    return pl.pallas_call(
+        functools.partial(_kernel, max_lag=max_lag, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),  # core tile
+            pl.BlockSpec(  # halo: the next tile (clamped; last tile is zeros)
+                (block_t, d), lambda i: (jnp.minimum(i + 1, num_tiles - 1), 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((max_lag + 1, d, d), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((max_lag + 1, d, d), jnp.float32),
+        interpret=interpret,
+    )(x, x)

@@ -1,0 +1,71 @@
+"""Public jit'd wrapper for the window_stats kernel.
+
+Handles: zero-padding to a tile multiple PLUS one guaranteed all-zero halo
+tile (the kernel's boundary contract), dtype promotion, normalization into
+autocovariances, and the interpret switch for CPU validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import window_stats_pallas
+from .ref import window_stats_ref
+
+
+@functools.partial(jax.jit, static_argnames=("max_lag", "block_t", "interpret"))
+def lagged_sums(
+    x: jax.Array,
+    max_lag: int,
+    *,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """S(h) = Σ_k X_k X_{k+h}ᵀ for h = 0..max_lag, via the Pallas kernel.
+
+    Args:
+      x: (n, d) series, any float dtype (computed in f32 accumulation).
+    """
+    if x.ndim == 1:
+        x = x[:, None]
+    n, d = x.shape
+    block_t = min(block_t, max(max_lag, 1) if n < block_t else block_t)
+    block_t = max(block_t, max_lag)
+    # pad to a multiple of block_t, then one extra zero tile as the halo of
+    # the final core tile.
+    n_pad = -(-n // block_t) * block_t + block_t
+    xp = jnp.pad(x.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
+    return window_stats_pallas(xp, max_lag, block_t=block_t, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_lag", "block_t", "interpret", "normalization")
+)
+def autocovariance(
+    x: jax.Array,
+    max_lag: int,
+    *,
+    block_t: int = 512,
+    interpret: bool = False,
+    normalization: str = "paper",
+) -> jax.Array:
+    """γ̂(0..max_lag) through the kernel (drop-in for stats.autocovariance)."""
+    if x.ndim == 1:
+        x = x[:, None]
+    s = lagged_sums(x, max_lag, block_t=block_t, interpret=interpret)
+    n = x.shape[0]
+    h = jnp.arange(max_lag + 1)
+    if normalization == "paper":
+        norm = 1.0 / (n - h - 1)
+    else:
+        norm = jnp.full((max_lag + 1,), 1.0 / n)
+    return s * norm[:, None, None]
+
+
+def lagged_sums_reference(x: jax.Array, max_lag: int) -> jax.Array:
+    """Oracle re-export used by tests/benchmarks."""
+    if x.ndim == 1:
+        x = x[:, None]
+    return window_stats_ref(x.astype(jnp.float32), max_lag)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the lagged cross-product sums.
+
+S(h) = Σ_{k=0}^{N-1-h} X_k X_{k+h}ᵀ   for h = 0..H   →  (H+1, d, d)
+
+This is `repro.core.estimators.stats.raw_lag_sums` restated minimally so the
+kernel test depends on nothing but jnp.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def window_stats_ref(x: jax.Array, max_lag: int) -> jax.Array:
+    n = x.shape[0]
+
+    def one(h):
+        idx = jnp.arange(n)
+        valid = (idx + h) <= (n - 1)
+        shifted = x[jnp.clip(idx + h, 0, n - 1)]
+        shifted = jnp.where(valid[:, None], shifted, 0.0)
+        return jnp.einsum("ti,tj->ij", x, shifted)
+
+    return jax.vmap(one)(jnp.arange(max_lag + 1)).astype(jnp.float32)

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, per-cell step builders, dry-run, roofline,
+train/serve drivers."""

@@ -1,0 +1,194 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run (brief deliverable e).
+
+For every (architecture × input shape) cell, on the 16×16 single-pod mesh
+and the 2×16×16 multi-pod mesh:  jit(step, in_shardings, out_shardings)
+.lower(**input_specs).compile() must SUCCEED; we record memory_analysis()
+(fits-in-HBM proof), cost_analysis() (FLOPs/bytes for §Roofline) and the
+collective schedule parsed from the optimized HLO.
+
+Results are cached as JSON under results/dryrun/ so EXPERIMENTS.md tables
+regenerate without recompiling.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3 --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only-smallest]
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from ..configs.base import SHAPES, SHAPES_BY_NAME, cell_is_runnable  # noqa: E402
+from ..configs.registry import ARCHS, get_arch  # noqa: E402
+from .costing import calibrated_cost  # noqa: E402
+from .mesh import make_production_mesh, mesh_device_count  # noqa: E402
+from .roofline import (  # noqa: E402
+    HBM_BW,
+    ICI_BW_PER_LINK,
+    ICI_LINKS,
+    PEAK_FLOPS,
+    compute_roofline,
+    model_flops_estimate,
+)
+from .steps import build_cell  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def _calibrated_roofline(cfg, shape, mesh, n_devices, **kw):
+    """Trip-count-corrected roofline terms (see costing.py)."""
+    cal = calibrated_cost(cfg, shape, mesh, **kw)
+    t_c = cal.flops / PEAK_FLOPS
+    t_m = cal.hbm_bytes / HBM_BW
+    t_n = cal.wire_bytes / (ICI_LINKS * ICI_BW_PER_LINK)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    mf = model_flops_estimate(cfg, shape) / n_devices
+    return {
+        "flops": cal.flops,
+        "hbm_bytes": cal.hbm_bytes,
+        "wire_bytes": cal.wire_bytes,
+        "t_compute": t_c,
+        "t_memory": t_m,
+        "t_collective": t_n,
+        "bottleneck": max(terms, key=terms.get),
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / cal.flops) if cal.flops else 0.0,
+        "collective_counts": cal.collective_counts,
+        "calibration_raw": cal.raw,
+    }
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir: str = RESULTS_DIR, fused_loss: bool = False):
+    cfg = get_arch(arch_name)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{cfg.name}__{shape.name}__{mesh_tag}"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, tag + ".json")
+
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        result = {"cell": tag, "status": "skipped", "reason": why}
+        json.dump(result, open(out_path, "w"), indent=1)
+        print(f"[dryrun] {tag}: SKIPPED ({why})")
+        return result
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(cfg, shape, mesh, fused_loss=fused_loss)
+        t_build = time.time() - t0
+        lowered = cell.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        hlo = compiled.as_text()
+        roof = compute_roofline(
+            compiled, cfg, shape, mesh_device_count(mesh), hlo_text=hlo
+        )
+        ma = compiled.memory_analysis()
+        print(f"[dryrun] {tag}: memory_analysis:", ma)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        print(
+            f"[dryrun] {tag}: cost_analysis flops={cost.get('flops', 0):.3e} "
+            f"bytes={cost.get('bytes accessed', 0):.3e}"
+        )
+        result = {
+            "cell": tag,
+            "status": "ok",
+            "arch": cfg.name,
+            "shape": shape.name,
+            "mesh": mesh_tag,
+            "sp_mode": cell.sp_mode,
+            "seconds": {"build": t_build, "lower": t_lower, "compile": t_compile},
+            "roofline": roof.to_dict(),
+            "hlo_bytes": len(hlo),
+        }
+        if not multi_pod:  # roofline table is single-pod (brief); calibrate there
+            try:
+                result["roofline_calibrated"] = _calibrated_roofline(
+                    cfg, shape, mesh, mesh_device_count(mesh), fused_loss=fused_loss
+                )
+            except Exception as e:
+                result["roofline_calibrated"] = {
+                    "error": f"{type(e).__name__}: {str(e)[:500]}"
+                }
+        json.dump(result, open(out_path, "w"), indent=1)
+        print(
+            f"[dryrun] {tag}: OK  bottleneck={roof.bottleneck} "
+            f"T=(c {roof.t_compute:.3e}, m {roof.t_memory:.3e}, n {roof.t_collective:.3e})s "
+            f"useful={roof.useful_flops_ratio:.2f} compile={t_compile:.0f}s"
+        )
+        return result
+    except Exception as e:
+        result = {
+            "cell": tag,
+            "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+        json.dump(result, open(out_path, "w"), indent=1)
+        print(f"[dryrun] {tag}: ERROR {type(e).__name__}: {str(e)[:300]}")
+        return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or alias (see configs)")
+    ap.add_argument("--shape", default=None, choices=[s.name for s in SHAPES])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--fused-loss", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in SHAPES:
+                meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+                for mp in meshes:
+                    cells.append((a, s.name, mp))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    statuses = {}
+    for a, s, mp in cells:
+        tag = f"{get_arch(a).name}__{s}__{'pod2x16x16' if mp else 'pod16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            prev = json.load(open(path))
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[dryrun] {tag}: cached ({prev['status']})")
+                statuses[tag] = prev["status"]
+                continue
+        r = run_cell(a, s, mp, args.out, fused_loss=args.fused_loss)
+        statuses[tag] = r["status"]
+
+    n_ok = sum(1 for v in statuses.values() if v == "ok")
+    n_skip = sum(1 for v in statuses.values() if v == "skipped")
+    n_err = sum(1 for v in statuses.values() if v == "error")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,37 @@
+"""Production mesh construction (brief-mandated shapes).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax init; tests keep their
+single CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips).
+
+    Axes: ("data", "model") — DP×TP/EP; the multi-pod "pod" axis is an outer
+    pure-DP axis (gradient reduction crosses pods once per step).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(data: int = 4, model: int = 2):
+    """Small host-device mesh for distributed unit tests."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def mesh_device_count(mesh) -> int:
+    n = 1
+    for v in dict(mesh.shape).values():
+        n *= v
+    return n

@@ -1,0 +1,129 @@
+"""Render EXPERIMENTS.md tables from results/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from ..configs.base import SHAPES
+from ..configs.registry import ARCHS
+from .dryrun import RESULTS_DIR
+from .roofline import HBM_BW, ICI_BW_PER_LINK, ICI_LINKS, PEAK_FLOPS
+
+V5E_HBM_GB = 16.0
+
+_IMPROVEMENT_NOTE = {
+    ("compute", "train"): "raise MFU: larger per-device batch or reduce remat recompute",
+    ("compute", "prefill"): "fuse attention (flash) to cut non-matmul overhead",
+    ("compute", "decode"): "decode is tiny-compute; batch more requests per step",
+    ("memory", "train"): "cut HBM traffic: fuse norms/rope into matmuls, microbatch to keep working set in VMEM",
+    ("memory", "prefill"): "KV/activation layout: keep heads-last tiles resident, fuse softmax chain",
+    ("memory", "decode"): "decode is weight/cache-bandwidth-bound: quantize cache (int8) or shard cache further",
+    ("collective", "train"): "re-shard to cut resharding collectives; overlap grad all-reduce with backward",
+    ("collective", "prefill"): "avoid logits all-gather: keep vocab-sharded softmax local",
+    ("collective", "decode"): "replicate small activations instead of gathering; halo-exchange for weak-memory ops",
+}
+
+
+def _load(mesh_tag: str) -> Dict[str, dict]:
+    out = {}
+    for arch in ARCHS:
+        for s in SHAPES:
+            tag = f"{arch}__{s.name}__{mesh_tag}"
+            path = os.path.join(RESULTS_DIR, tag + ".json")
+            if os.path.exists(path):
+                out[(arch, s.name)] = json.load(open(path))
+    return out
+
+
+def fmt_t(x: float) -> str:
+    return f"{x:.3g}"
+
+
+def dryrun_table(mesh_tag: str) -> List[str]:
+    data = _load(mesh_tag)
+    lines = [
+        "| arch | shape | status | sp | arg GB/dev | temp GB/dev | peak GB/dev | fits v5e? | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(data.items()):
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | skipped — {r['reason'].split(' (')[0]} | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+            continue
+        mem = r["roofline"]["memory_per_device"]
+        arg = mem.get("argument_bytes", 0) / 1e9
+        temp = mem.get("temp_bytes", 0) / 1e9
+        peak = mem.get("peak_bytes", 0) / 1e9
+        fits = "YES" if peak <= V5E_HBM_GB else f"no ({peak/V5E_HBM_GB:.0f}×)"
+        lines.append(
+            f"| {arch} | {shape} | ok | {'SP' if r.get('sp_mode') else 'DP'} "
+            f"| {arg:.1f} | {temp:.1f} | {peak:.1f} | {fits} "
+            f"| {r['seconds']['compile']:.0f} |"
+        )
+    return lines
+
+
+def roofline_table() -> List[str]:
+    data = _load("pod16x16")
+    lines = [
+        "| arch | shape | T_comp s | T_mem s | T_coll s | bottleneck | MODEL_FLOPS/dev | useful ratio | roofline frac | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(data.items()):
+        if r["status"] != "ok":
+            continue
+        rc = r.get("roofline_calibrated") or {}
+        if "error" in rc or not rc:
+            rc = r["roofline"]
+        kind = next(s.kind for s in SHAPES if s.name == shape)
+        dom = rc["bottleneck"]
+        t_dom = max(rc["t_compute"], rc["t_memory"], rc["t_collective"])
+        frac = rc["t_compute"] / t_dom if t_dom else 0.0
+        note = _IMPROVEMENT_NOTE.get((dom, kind), "")
+        lines.append(
+            f"| {arch} | {shape} | {fmt_t(rc['t_compute'])} | {fmt_t(rc['t_memory'])} "
+            f"| {fmt_t(rc['t_collective'])} | **{dom}** | {rc['model_flops']:.3g} "
+            f"| {rc['useful_flops_ratio']:.2f} | {frac:.2f} | {note} |"
+        )
+    return lines
+
+
+def collective_table(mesh_tag: str) -> List[str]:
+    data = _load(mesh_tag)
+    lines = [
+        "| arch | shape | all-gather | all-reduce | reduce-scatter | all-to-all | permute | wire GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(data.items()):
+        if r["status"] != "ok":
+            continue
+        rc = r.get("roofline_calibrated") or {}
+        src = rc if rc and "error" not in rc else r["roofline"]
+        c = src["collective_counts"]
+        lines.append(
+            f"| {arch} | {shape} | {c.get('all-gather',0):.0f} | {c.get('all-reduce',0):.0f} "
+            f"| {c.get('reduce-scatter',0):.0f} | {c.get('all-to-all',0):.0f} "
+            f"| {c.get('collective-permute',0):.0f} | {src['wire_bytes']/1e9:.2f} |"
+        )
+    return lines
+
+
+def main():
+    print("## §Dry-run — single pod 16×16 (256 chips)\n")
+    print("\n".join(dryrun_table("pod16x16")))
+    print("\n## §Dry-run — multi-pod 2×16×16 (512 chips)\n")
+    print("\n".join(dryrun_table("pod2x16x16")))
+    print("\n## §Roofline — single pod, calibrated (trip-count-corrected)\n")
+    print("\n".join(roofline_table()))
+    print("\n## Collective schedule (single pod, calibrated counts)\n")
+    print("\n".join(collective_table("pod16x16")))
+
+
+if __name__ == "__main__":
+    main()

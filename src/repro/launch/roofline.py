@@ -1,0 +1,232 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh) cell, from the post-SPMD compiled
+module (all quantities PER DEVICE — verified against MODEL_FLOPS in tests):
+
+  T_compute    = flops / PEAK_FLOPS
+  T_memory     = hbm_bytes / HBM_BW
+  T_collective = Σ collective wire bytes / (ICI_LINKS · ICI_BW)
+
+cost_analysis() supplies flops and bytes; collective bytes are NOT in
+cost_analysis, so we parse the optimized HLO text: every line defines
+``%name = type[shape] op(operands…)`` — we keep a name→bytes table and sum
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, with op-specific wire multipliers (ring all-reduce
+moves ≈2× its payload, all-gather/reduce-scatter ≈1× the large side,
+permute exactly 1×).
+
+Hardware constants (TPU v5e, per the brief): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI, 4 links usable per chip on a 2-D torus-like mesh
+(2 per torus dimension) — the per-chip collective bandwidth denominator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW_PER_LINK = 50e9  # B/s
+ICI_LINKS = 4  # usable links/chip for collectives on a 2D mesh
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\([^)]*\)|[\w()]+\[[\d,]*\])"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# wire multiplier per payload byte (ring algorithms, large-n asymptotics)
+_WIRE_FACTOR = {
+    "all-gather": 1.0,  # payload counted as the gathered (output) size
+    "all-reduce": 2.0,  # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,  # payload = input size
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    payload_bytes: Dict[str, float]
+    wire_bytes: float
+
+    @property
+    def total_payload(self) -> float:
+        return sum(self.payload_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum collective payload/wire bytes from optimized HLO text.
+
+    Payload convention: the LARGER of (operand sum, output) — the
+    full-tensor side of gather/scatter ops — then op-specific wire factors.
+    Ops inside while/fusion bodies appear once; scan-looped collectives are
+    multiplied by the trip count when annotatable (XLA does not expose trip
+    counts in text reliably — we conservatively count once and report the
+    loop-adjusted number separately in the dry-run JSON via scan metadata).
+    """
+    name_bytes: Dict[str, int] = {}
+    counts = {c: 0 for c in _COLLECTIVES}
+    payload = {c: 0.0 for c in _COLLECTIVES}
+
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str = m.group(1), m.group(2)
+        out_bytes = _shape_bytes(type_str)
+        name_bytes[name.lstrip("%")] = out_bytes
+        op_m = re.search(r"=\s*[^=]*?\b([a-z0-9\-]+)\(", line)
+        if not op_m:
+            continue
+        op = op_m.group(1)
+        if op not in _COLLECTIVES:
+            continue
+        counts[op] += 1
+        # operand sizes from the name table
+        operand_names = re.findall(r"%?([\w.\-]+)(?:\.clone)?(?=[,)])", line.split("(", 1)[1] if "(" in line else "")
+        in_bytes = sum(name_bytes.get(n, 0) for n in operand_names)
+        payload[op] += float(max(in_bytes, out_bytes))
+
+    wire = sum(payload[c] * _WIRE_FACTOR[c] for c in _COLLECTIVES)
+    return CollectiveStats(counts=counts, payload_bytes=payload, wire_bytes=wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_ratio: float
+    collective_counts: Dict[str, int]
+    memory_per_device: Dict[str, float]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D tokens (train) or 2·N_active·D (fwd-only)."""
+    n_active = active_param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_param_count(cfg) -> float:
+    """Active (per-token) parameter count — MoE counts top_k+shared experts."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    hd = cfg.resolved_head_dim
+    if cfg.attn == "mla":
+        m = cfg.mla
+        qd = cfg.n_heads * (m.nope_head_dim + m.rope_head_dim)
+        attn = d * (m.q_lora_rank or 0) + (m.q_lora_rank or d) * qd
+        if not m.q_lora_rank:
+            attn = d * qd
+        attn += d * m.kv_lora_rank + m.kv_lora_rank * cfg.n_heads * (
+            m.nope_head_dim + m.v_head_dim
+        )
+        attn += d * m.rope_head_dim + cfg.n_heads * m.v_head_dim * d
+    else:
+        attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+    if cfg.moe is not None:
+        ffn = 3 * d * cfg.moe.d_ff_expert * (cfg.moe.top_k + cfg.moe.num_shared)
+    elif cfg.d_ff:
+        ffn = 3 * d * cfg.d_ff
+    else:
+        ffn = 0
+    if cfg.family == "ssm":
+        d_in = 2 * d
+        mix = d * 2 * d_in + d_in * 3 * d_in + d_in * d  # mLSTM-ish per block
+        attn, ffn = 0, mix
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_in = s.expand * d
+        mamba = d * (2 * d_in + 2 * s.state_dim + d_in // s.head_dim) + d_in * d
+        shared = (attn + 3 * d * cfg.d_ff) / max(cfg.shared_attn_every, 1)
+        attn, ffn = shared, mamba
+    enc = cfg.enc_layers * (attn + ffn) if cfg.family == "encdec" else 0
+    return L * (attn + ffn) + enc + 2 * V * d
+
+
+def compute_roofline(
+    compiled,
+    cfg,
+    shape,
+    mesh_devices: int,
+    *,
+    hlo_text: Optional[str] = None,
+) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": float(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+            "peak_bytes": float(
+                getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                + getattr(ma, "temp_size_in_bytes", 0)
+            ),
+        }
+    except Exception:
+        pass
+
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_n = coll.wire_bytes / (ICI_LINKS * ICI_BW_PER_LINK)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_estimate(cfg, shape) / mesh_devices  # per-device share
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        wire_bytes=coll.wire_bytes,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_n,
+        bottleneck=bottleneck,
+        model_flops=mf,
+        useful_flops_ratio=(mf / flops) if flops else 0.0,
+        collective_counts=coll.counts,
+        memory_per_device=mem,
+    )

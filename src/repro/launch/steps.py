@@ -1,0 +1,204 @@
+"""Per-cell step builders: (arch × shape × mesh) → pjit-ready functions with
+full input/output sharding trees + ShapeDtypeStruct inputs.
+
+This is the single place where logical sharding policy is decided per cell:
+  * train/prefill/decode with global_batch ≥ data-axis size → batch DP;
+  * long-context cells (global_batch < data size) → SP mode: the sequence
+    (and cache sequence) axis takes the data axis instead;
+  * the pod axis is always an outer DP axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig, SHAPES_BY_NAME, cell_is_runnable
+from ..configs.registry import get_arch
+from ..models import decode_step, forward, init_params, input_specs, prefill
+from ..models.layers import DTYPE
+from ..parallel import sharding as shr
+from ..training.optimizer import adamw_init
+from ..training.train_step import make_train_step
+
+_CACHE_RULES: Dict[str, Tuple[Any, ...]] = {
+    # leaf name → logical axes, EXCLUDING the leading stacked-layer axis
+    "k": ("batch", "seq", "kv", None),
+    "v": ("batch", "seq", "kv", None),
+    "lat": ("batch", "seq", None),
+    "pos": (None,),
+    "ssd": ("batch", "heads", None, None),
+    "conv": ("batch", None, "ff"),
+    "C": ("batch", "heads", None, None),
+    "n": ("batch", "heads", None),
+    "m": ("batch", "heads"),
+    "h": ("batch", "heads", None),
+    "c": ("batch", "heads", None),
+}
+
+
+def _cache_pspecs(cache_tree: Any, mesh) -> Any:
+    def rule(path, leaf):
+        name = None
+        for entry in reversed(path):
+            key = getattr(entry, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        axes = _CACHE_RULES.get(name or "", None)
+        if axes is None:
+            axes = (None,) * leaf.ndim
+        elif len(axes) + 1 == leaf.ndim:
+            axes = (None,) + tuple(axes)  # stacked layer/app axis
+        elif len(axes) != leaf.ndim:
+            axes = (None,) * leaf.ndim
+        return shr.logical_to_spec(axes, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def _batch_pspecs(specs: Dict[str, Any], mesh, kind: str) -> Dict[str, Any]:
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = _cache_pspecs(v, mesh)
+        elif k == "pos":
+            out[k] = P()
+        elif k == "tokens" and v.ndim == 1:  # decode tokens (B,)
+            out[k] = shr.logical_to_spec(("batch",), v.shape, mesh)
+        elif k in ("tokens", "labels"):
+            out[k] = shr.logical_to_spec(("batch", "seq"), v.shape, mesh)
+        elif k in ("frames", "patch_embeds"):
+            out[k] = shr.logical_to_spec(("batch", "seq", None), v.shape, mesh)
+        else:
+            out[k] = P()
+    return out
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+
+    cfg: ArchConfig
+    shape: ShapeConfig
+    mesh: Any
+    fn: Callable  # the step function
+    args_sds: Tuple[Any, ...]  # ShapeDtypeStructs for .lower(*args)
+    in_specs: Tuple[Any, ...]
+    out_specs: Any
+    sp_mode: bool
+
+    def jitted(self):
+        ns = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), tree
+        )
+        kw = {}
+        if self.shape.kind == "decode":
+            # §Perf C1: donate the cache — the in-place dynamic_update_slice
+            # aliases instead of copying the whole cache every step.
+            kw["donate_argnums"] = (1,)
+        elif self.shape.kind == "train":
+            kw["donate_argnums"] = (0, 1)  # params + optimizer state
+        return jax.jit(
+            self.fn,
+            in_shardings=ns(self.in_specs),
+            out_shardings=ns(self.out_specs),
+            **kw,
+        )
+
+    def lower(self):
+        with self.mesh, jax.sharding.set_mesh(self.mesh):
+            shr.set_sp_mode(self.sp_mode)
+            try:
+                return self.jitted().lower(*self.args_sds)
+            finally:
+                shr.set_sp_mode(False)
+
+
+def _use_sp(shape: ShapeConfig, mesh) -> bool:
+    data = shr.mesh_axis_size(mesh, ("pod", "data"))
+    return shape.global_batch % data != 0 or shape.global_batch < data
+
+
+def build_cell(
+    arch: str | ArchConfig,
+    shape: str | ShapeConfig,
+    mesh,
+    *,
+    dtype=DTYPE,
+    accum: int = 1,
+    fused_loss: bool = False,
+) -> Cell:
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    shape = SHAPES_BY_NAME[shape] if isinstance(shape, str) else shape
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell ({cfg.name} × {shape.name}) skipped: {why}")
+
+    sp = _use_sp(shape, mesh)
+    shr.set_sp_mode(sp)
+    try:
+        key = jax.random.PRNGKey(0)
+        params_sds = jax.eval_shape(
+            functools.partial(init_params, cfg=cfg, dtype=dtype), key
+        )
+        pspecs = shr.param_pspecs(params_sds, mesh)
+        batch_sds = input_specs(cfg, shape)
+        bspecs = _batch_pspecs(batch_sds, mesh, shape.kind)
+
+        if shape.kind == "train":
+            step = make_train_step(cfg, accum=accum, fused_loss=fused_loss)
+            opt_sds = jax.eval_shape(adamw_init, params_sds)
+            # ZeRO-1: moments additionally sharded over the data(+pod) axes
+            ospecs = shr.zero1_pspecs(opt_sds.m, mesh)
+            opt_specs = type(opt_sds)(m=ospecs, v=ospecs, step=P())
+            metric_specs = {
+                k: P() for k in ("ce", "lb_loss", "z_loss", "loss", "lr")
+            }
+            return Cell(
+                cfg=cfg, shape=shape, mesh=mesh, fn=step,
+                args_sds=(params_sds, opt_sds, batch_sds),
+                in_specs=(pspecs, opt_specs, bspecs),
+                out_specs=(pspecs, opt_specs, metric_specs),
+                sp_mode=sp,
+            )
+
+        if shape.kind == "prefill":
+            def prefill_step(params, batch):
+                return prefill(params, batch, cfg)
+
+            logits_cache_sds = jax.eval_shape(prefill_step, params_sds, batch_sds)
+            logits_spec = shr.logical_to_spec(
+                ("batch", "vocab"), logits_cache_sds[0].shape, mesh
+            )
+            cache_specs = _cache_pspecs(logits_cache_sds[1], mesh)
+            return Cell(
+                cfg=cfg, shape=shape, mesh=mesh, fn=prefill_step,
+                args_sds=(params_sds, batch_sds),
+                in_specs=(pspecs, bspecs),
+                out_specs=(logits_spec, cache_specs),
+                sp_mode=sp,
+            )
+
+        # decode
+        def decode_fn(params, cache, batch):
+            return decode_step(params, cache, batch, cfg)
+
+        cache_sds = batch_sds.pop("cache")
+        cache_specs = _cache_pspecs(cache_sds, mesh)
+        bspecs.pop("cache", None)
+        out_sds = jax.eval_shape(decode_fn, params_sds, cache_sds, batch_sds)
+        logits_spec = shr.logical_to_spec(("batch", "vocab"), out_sds[0].shape, mesh)
+        return Cell(
+            cfg=cfg, shape=shape, mesh=mesh, fn=decode_fn,
+            args_sds=(params_sds, cache_sds, batch_sds),
+            in_specs=(pspecs, cache_specs, bspecs),
+            out_specs=(logits_spec, cache_specs),
+            sp_mode=sp,
+        )
+    finally:
+        shr.set_sp_mode(False)

@@ -1,0 +1,10 @@
+"""Assigned-architecture model zoo (pure JAX, scan-over-layers)."""
+from . import attention, encdec, layers, moe, model_zoo, ssm, transformer, vlm_stub, xlstm, xlstm_lm, zamba
+from .model_zoo import (
+    init_params,
+    forward,
+    prefill,
+    decode_step,
+    cache_spec,
+    input_specs,
+)

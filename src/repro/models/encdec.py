@@ -1,0 +1,254 @@
+"""Encoder-decoder backbone (whisper-base).
+
+Frontend is a STUB per the brief: `input_specs()` supplies precomputed
+(B, S, d_model) frame embeddings (the conv1d×2 + sinusoidal-position stack
+is out of scope).  Encoder = bidirectional transformer; decoder = causal
+self-attention + cross-attention to encoder states.
+
+Serving: prefill runs the encoder once and caches (a) decoder self-attn
+K/V and (b) cross-attn K/V (computed once from encoder output); decode
+steps touch only those caches — the encoder is never re-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    _chunked_attention,
+    _decode_attention,
+    _split_heads,
+    gqa_init,
+)
+from .layers import DTYPE, apply_rope, dense_init, embed_init, mlp_init, rms_norm, scan_layers, swiglu
+from ..parallel.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def _xattn_init(key, cfg, dtype=DTYPE) -> Params:
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(k2, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(k3, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(k4, cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def encdec_init(key, cfg, dtype=DTYPE) -> Params:
+    ks = jax.random.split(key, 6)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn_norm": jnp.ones((cfg.d_model,), dtype),
+            "attn": gqa_init(k1, cfg, dtype),
+            "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "attn_norm": jnp.ones((cfg.d_model,), dtype),
+            "attn": gqa_init(k1, cfg, dtype),
+            "x_norm": jnp.ones((cfg.d_model,), dtype),
+            "xattn": _xattn_init(k2, cfg, dtype),
+            "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_layers": jax.tree.map(lambda *x: jnp.stack(x), *[enc_layer(k) for k in enc_keys]),
+        "dec_layers": jax.tree.map(lambda *x: jnp.stack(x), *[dec_layer(k) for k in dec_keys]),
+        "embed": embed_init(ks[2], cfg.vocab, cfg.d_model, dtype),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[3], cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def _self_attn(p, x, cfg, positions, causal, cache=None, pos=None, return_kv=False):
+    hd = cfg.resolved_head_dim
+    kvh = cfg.n_kv_heads
+    g = cfg.n_heads // kvh
+    b, s, _ = x.shape
+    scale = 1.0 / math.sqrt(hd)
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wq"]), cfg.n_heads, hd)
+    k = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wk"]), kvh, hd)
+    v = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wv"]), kvh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    qg = q.reshape(b, s, kvh, g, hd)
+    if cache is None:
+        out = _chunked_attention(qg, k, v, scale, causal=causal)
+        kv = (k, v) if return_kv else None
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        valid = jnp.arange(ck.shape[1]) <= pos
+        out = _decode_attention(qg, ck, cv, scale, valid)
+        kv = {"k": ck, "v": cv}
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), kv
+
+
+def _cross_attn(p, x, cfg, enc_kv):
+    hd = cfg.resolved_head_dim
+    kvh = cfg.n_kv_heads
+    g = cfg.n_heads // kvh
+    b, s, _ = x.shape
+    scale = 1.0 / math.sqrt(hd)
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wq"]), cfg.n_heads, hd)
+    qg = q.reshape(b, s, kvh, g, hd)
+    k, v = enc_kv["k"], enc_kv["v"]
+    out = _chunked_attention(qg, k, v, scale, causal=False)
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+def encode(p: Params, frames: jax.Array, cfg) -> jax.Array:
+    """frames: (B, S_enc, d_model) stubbed frontend output → encoder states."""
+    x = shard(frames.astype(p["enc_norm"].dtype), ("batch", "seq", None))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        a, _ = _self_attn(lp["attn"], h, cfg, positions, causal=False)
+        x = x + a
+        h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(h, **lp["mlp"])
+        return x, None
+
+    x, _ = scan_layers(jax.checkpoint(body), x, p["enc_layers"], cfg.unroll_layers)
+    return rms_norm(x, p["enc_norm"], cfg.norm_eps)
+
+
+def _enc_cross_kv(p_dec_layers, enc_out, cfg):
+    """Per-decoder-layer cross K/V from encoder output (computed once)."""
+    hd = cfg.resolved_head_dim
+    kvh = cfg.n_kv_heads
+
+    def one(lp):
+        k = _split_heads(jnp.einsum("bsd,dh->bsh", enc_out, lp["xattn"]["wk"]), kvh, hd)
+        v = _split_heads(jnp.einsum("bsd,dh->bsh", enc_out, lp["xattn"]["wv"]), kvh, hd)
+        return {"k": k, "v": v}
+
+    return jax.lax.map(one, p_dec_layers)
+
+
+def decode_forward(
+    p: Params,
+    tokens: jax.Array,
+    enc_out: jax.Array,
+    cfg,
+    *,
+    remat: bool = True,
+    return_hidden: bool = False,
+) -> jax.Array:
+    """Teacher-forced decoder pass → logits (B, S_dec, V)."""
+    x = jnp.take(p["embed"], tokens, axis=0)
+    x = shard(x, ("batch", "seq", None))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        a, _ = _self_attn(lp["attn"], h, cfg, positions, causal=True)
+        x = x + a
+        h = rms_norm(x, lp["x_norm"], cfg.norm_eps)
+        kv = {
+            "k": _split_heads(
+                jnp.einsum("bsd,dh->bsh", enc_out, lp["xattn"]["wk"]),
+                cfg.n_kv_heads, cfg.resolved_head_dim,
+            ),
+            "v": _split_heads(
+                jnp.einsum("bsd,dh->bsh", enc_out, lp["xattn"]["wv"]),
+                cfg.n_kv_heads, cfg.resolved_head_dim,
+            ),
+        }
+        x = x + _cross_attn(lp["xattn"], h, cfg, kv)
+        h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(h, **lp["mlp"])
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = scan_layers(body, x, p["dec_layers"], cfg.unroll_layers)
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    return shard(jnp.einsum("bsd,dv->bsv", x, p["lm_head"]), ("batch", "seq", "vocab"))
+
+
+def encdec_forward(p, frames, tokens, cfg, return_hidden: bool = False) -> jax.Array:
+    """Training path: encoder + teacher-forced decoder → logits."""
+    return decode_forward(
+        p, tokens, encode(p, frames, cfg), cfg, return_hidden=return_hidden
+    )
+
+
+def encdec_prefill(p, frames, tokens, cfg):
+    """Serving prefill → (last logits (B,V), cache).
+
+    Cache = decoder self-attn K/V (written up to S_dec) + cross K/V.
+    """
+    enc_out = encode(p, frames, cfg)
+    x = jnp.take(p["embed"], tokens, axis=0)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    cross_kv = _enc_cross_kv(p["dec_layers"], enc_out, cfg)
+
+    def body(x, scanned):
+        lp, xkv = scanned
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        a, kv = _self_attn(lp["attn"], h, cfg, positions, causal=True, return_kv=True)
+        x = x + a
+        h = rms_norm(x, lp["x_norm"], cfg.norm_eps)
+        x = x + _cross_attn(lp["xattn"], h, cfg, xkv)
+        h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(h, **lp["mlp"])
+        return x, {"k": kv[0], "v": kv[1]}
+
+    x, self_kv = scan_layers(body, x, (p["dec_layers"], cross_kv), cfg.unroll_layers)
+    x = rms_norm(x[:, -1:], p["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])[:, 0]
+    return logits, {"self": self_kv, "cross": cross_kv}
+
+
+def encdec_decode_step(p, cache, tokens, pos, cfg):
+    """One decoder step against the (self, cross) caches → (logits, cache)."""
+    x = jnp.take(p["embed"], tokens[:, None], axis=0)
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def body(x, scanned):
+        lp, skv, xkv = scanned
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        a, new_skv = _self_attn(
+            lp["attn"], h, cfg, positions, causal=True, cache=skv, pos=pos
+        )
+        x = x + a
+        h = rms_norm(x, lp["x_norm"], cfg.norm_eps)
+        x = x + _cross_attn(lp["xattn"], h, cfg, xkv)
+        h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(h, **lp["mlp"])
+        return x, new_skv
+
+    x, new_self = scan_layers(body, x, (p["dec_layers"], cache["self"], cache["cross"]), cfg.unroll_layers)
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])[:, 0]
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def encdec_cache_spec(cfg, batch: int, seq_len: int, enc_len: int, dtype=DTYPE):
+    hd = cfg.resolved_head_dim
+    kv = lambda s: {
+        "k": jax.ShapeDtypeStruct((cfg.n_layers, batch, s, cfg.n_kv_heads, hd), dtype),
+        "v": jax.ShapeDtypeStruct((cfg.n_layers, batch, s, cfg.n_kv_heads, hd), dtype),
+    }
+    return {"self": kv(seq_len), "cross": kv(enc_len)}

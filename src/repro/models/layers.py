@@ -1,0 +1,168 @@
+"""Shared model primitives (pure JAX, pytree params, no framework deps).
+
+Parameters are nested dicts of jnp arrays.  Every initializer has a
+matching logical-sharding spec in `repro.parallel.sharding` (specs are
+derived from array *names*, mirrored by structure).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+DTYPE = jnp.bfloat16  # activation / param dtype for the large configs
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=DTYPE) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=DTYPE) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm (f32 internal compute).
+
+    NOTE (§Perf B3, refuted): a custom-vjp variant casting cotangents to
+    x.dtype was tried to halve the f32 TP all-reduce wire bytes; measured
+    wire went UP 12% (the custom vjp pins residuals and blocks XLA fusions
+    that the plain form enjoys) — reverted.  See EXPERIMENTS.md §Perf.
+    """
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float, *, head_axis: bool | None = None
+) -> jax.Array:
+    """Rotary embedding.
+
+    x: (..., S, H, D) when ``head_axis`` (default for 4-D+), else (..., S, D).
+    positions: (S,) absolute positions.
+    """
+    d = x.shape[-1]
+    if head_axis is None:
+        head_axis = x.ndim >= 4
+    inv = rope_frequencies(d, theta)  # (d/2,)
+    ang = positions[:, None].astype(jnp.float32) * inv  # (S, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if head_axis:  # align with (..., S, H, D)
+        cos, sin = cos[:, None, :], sin[:, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=DTYPE) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def scan_layers(body, carry, xs, unroll: bool = False):
+    """lax.scan over stacked layer params, or a python unroll.
+
+    The unrolled form exists for the roofline costing path:
+    ``compiled.cost_analysis()`` counts a while-loop body ONCE regardless of
+    trip count (verified empirically — see launch/costing.py), so FLOP/byte
+    calibration lowers small-L unrolled variants and extrapolates.
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, ignore_id: int = -1
+) -> jax.Array:
+    """Mean token cross-entropy; logits (..., V) f32-upcast reduction."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    mask = labels != ignore_id
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def chunked_cross_entropy(
+    hidden: jax.Array,  # (B, S, d) final hidden states (already normed)
+    head: jax.Array,  # (d, V) unembedding
+    labels: jax.Array,  # (B, S) — position t is the target FOR hidden[t]
+    ignore_id: int = -1,
+    chunk: int = 256,
+) -> jax.Array:
+    """Fused next-token CE: never materializes (B, S, V) logits.
+
+    §Perf iteration B1: scans over sequence chunks; per chunk the (B, c, V)
+    logits exist only inside the fused logsumexp/select reductions, with
+    the vocab axis left sharded (the gold logit is picked by an iota
+    compare + masked reduce — local on every vocab shard, no gather).
+    Activation memory drops from O(B·S·V) f32 to O(B·chunk·V); the vocab
+    all-gather of the unfused path disappears.
+    """
+    b, s, d = hidden.shape
+    v = head.shape[1]
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=ignore_id)
+    hc = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute chunk logits in backward: residuals are O(B·c)
+    def one(carry, xs):
+        nll_sum, count = carry
+        h, lab = xs
+        logits = jnp.einsum("bcd,dv->bcv", h, head).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.sum(
+            jnp.where(iota == lab[..., None], logits, 0.0), axis=-1
+        )
+        mask = lab != ignore_id
+        nll_sum = nll_sum + jnp.sum((lse - gold) * mask)
+        count = count + jnp.sum(mask)
+        return (nll_sum, count), None
+
+    (nll_sum, count), _ = jax.lax.scan(one, (jnp.zeros(()), jnp.zeros(())), (hc, lc))
+    return nll_sum / jnp.maximum(count, 1)

@@ -1,0 +1,149 @@
+"""Model zoo dispatcher: one uniform API over all assigned architectures.
+
+  init_params(key, cfg)                  → params pytree
+  forward(params, batch, cfg)            → (logits, aux)   [training]
+  prefill(params, batch, cfg)            → (last logits, cache)
+  decode_step(params, cache, batch, cfg) → (logits, cache)
+  cache_spec(cfg, batch, seq)            → ShapeDtypeStruct pytree
+  input_specs(cfg, shape)                → dry-run input ShapeDtypeStructs
+
+``batch`` is a dict; its keys depend on family (brief: modality frontends
+are stubs — VLM supplies ``patch_embeds``, whisper supplies ``frames``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer, xlstm_lm, zamba
+from .layers import DTYPE
+from ..configs.base import ArchConfig, ShapeConfig
+
+Params = Dict[str, Any]
+
+_ZERO_AUX = lambda: {
+    "lb_loss": jnp.zeros((), jnp.float32),
+    "z_loss": jnp.zeros((), jnp.float32),
+}
+
+
+def init_params(key, cfg: ArchConfig, dtype=DTYPE) -> Params:
+    if cfg.family == "encdec":
+        return encdec.encdec_init(key, cfg, dtype)
+    if cfg.family == "hybrid":
+        return zamba.zamba_init(key, cfg, dtype)
+    if cfg.family == "ssm":
+        return xlstm_lm.xlstm_lm_init(key, cfg, dtype)
+    return transformer.lm_init(key, cfg, dtype)
+
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig):
+    """Training forward → (logits over the full target sequence, aux)."""
+    if cfg.family == "encdec":
+        logits = encdec.encdec_forward(params, batch["frames"], batch["tokens"], cfg)
+        return logits, _ZERO_AUX()
+    if cfg.family == "hybrid":
+        return zamba.zamba_forward(params, batch["tokens"], cfg), _ZERO_AUX()
+    if cfg.family == "ssm":
+        return xlstm_lm.xlstm_forward(params, batch["tokens"], cfg), _ZERO_AUX()
+    logits, aux = transformer.lm_forward(
+        params, batch["tokens"], cfg, patch_embeds=batch.get("patch_embeds")
+    )
+    return logits, aux
+
+
+def forward_hidden(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig):
+    """Training forward stopping at the final hidden states (fused-loss path,
+    §Perf B1) → (hidden (B, S, d), head (d, V), aux)."""
+    if cfg.family == "encdec":
+        h = encdec.encdec_forward(
+            params, batch["frames"], batch["tokens"], cfg, return_hidden=True
+        )
+        return h, params["lm_head"], _ZERO_AUX()
+    if cfg.family == "hybrid":
+        h = zamba.zamba_forward(params, batch["tokens"], cfg, return_hidden=True)
+        return h, params["lm_head"], _ZERO_AUX()
+    if cfg.family == "ssm":
+        h = xlstm_lm.xlstm_forward(params, batch["tokens"], cfg, return_hidden=True)
+        return h, params["lm_head"], _ZERO_AUX()
+    h, aux = transformer.lm_forward(
+        params, batch["tokens"], cfg,
+        patch_embeds=batch.get("patch_embeds"), return_hidden=True,
+    )
+    return h, transformer.lm_head_matrix(params, cfg), aux
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return encdec.encdec_prefill(params, batch["frames"], batch["tokens"], cfg)
+    if cfg.family == "hybrid":
+        return zamba.zamba_prefill(params, batch["tokens"], cfg)
+    if cfg.family == "ssm":
+        return xlstm_lm.xlstm_prefill(params, batch["tokens"], cfg)
+    return transformer.lm_prefill(
+        params, batch["tokens"], cfg, patch_embeds=batch.get("patch_embeds")
+    )
+
+
+def decode_step(params: Params, cache, batch: Dict[str, jax.Array], cfg: ArchConfig):
+    tokens, pos = batch["tokens"], batch["pos"]
+    if cfg.family == "encdec":
+        return encdec.encdec_decode_step(params, cache, tokens, pos, cfg)
+    if cfg.family == "hybrid":
+        return zamba.zamba_decode_step(params, cache, tokens, pos, cfg)
+    if cfg.family == "ssm":
+        return xlstm_lm.xlstm_decode_step(params, cache, tokens, pos, cfg)
+    return transformer.lm_decode_step(params, cache, tokens, pos, cfg)
+
+
+def cache_spec(cfg: ArchConfig, batch: int, seq_len: int, dtype=DTYPE):
+    if cfg.family == "encdec":
+        return encdec.encdec_cache_spec(cfg, batch, seq_len, enc_len=seq_len, dtype=dtype)
+    if cfg.family == "hybrid":
+        return zamba.zamba_cache_spec(cfg, batch, seq_len, dtype)
+    if cfg.family == "ssm":
+        return xlstm_lm.xlstm_cache_spec(cfg, batch, seq_len, dtype)
+    return transformer.lm_cache_spec(cfg, batch, seq_len, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    Weak-type-correct, shardable, no device allocation (brief requirement).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), DTYPE)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        elif cfg.family == "vlm":
+            st = s - cfg.n_patches
+            specs["patch_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), DTYPE)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, st), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), DTYPE)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        elif cfg.family == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), DTYPE)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.n_patches), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        return specs
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": cache_spec(cfg, b, s),
+    }

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts layer: top-k routing, capacity dispatch, EP sharding.
+
+Dispatch/combine use the one-hot einsum formulation (Mesh-TF / GShard
+lineage): under GSPMD the expert axis is sharded over "model" (expert
+parallelism) and the token axis over "data", so the dispatch einsum lowers
+to the canonical all-to-all.  Capacity is static (shape-stable): tokens
+overflowing an expert's bucket are dropped (standard Switch behaviour) and
+the shared expert(s) (llama4: 1, deepseek-v2: 2) are always-on dense MLPs.
+
+Aux outputs: load-balance loss (Switch §2.2) + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, dense_init, mlp_init, swiglu
+from ..parallel.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def moe_init(key, cfg, dtype=DTYPE) -> Params:
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    scale = 1.0 / jnp.sqrt(d)
+    p: Params = {
+        "router": (jax.random.normal(ks[0], (d, e)) * scale).astype(jnp.float32),
+        "e_gate": (jax.random.normal(ks[1], (e, d, f)) * scale).astype(dtype),
+        "e_up": (jax.random.normal(ks[2], (e, d, f)) * scale).astype(dtype),
+        "e_down": (jax.random.normal(ks[3], (e, f, d)) * (1.0 / jnp.sqrt(f))).astype(dtype),
+    }
+    if m.num_shared:
+        p["shared"] = mlp_init(ks[4], d, m.num_shared * f, dtype)
+    return p
+
+
+def moe_apply(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) → (out, aux-losses)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    xt = x.reshape(b * s, d)
+    t = xt.shape[0]
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Static capacity; floor of min(t·k, 4) keeps tiny-token decode batches
+    # effectively dropless (capacity 1 with colliding routes drops tokens).
+    capacity = max(int(t * k / e * m.capacity_factor), min(t * k, 4))
+
+    # Position of each (token, choice) within its expert's bucket, by STABLE
+    # SORT rank (§Perf iteration A2).  The one-hot cumsum formulation costs
+    # O((t·k)²·e) in XLA's cumulative-op cost model and serializes across
+    # the data-sharded token axis; sort-based ranking is O(n log n) and
+    # yields the identical first-come-first-served assignment.
+    flat_e = expert_idx.reshape(-1)  # (t·k,)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))  # (e,)
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - seg_start[sorted_e]
+    pos = (
+        jnp.zeros((t * k,), jnp.int32).at[sort_idx].set(pos_sorted).reshape(t, k)
+    )
+    keep = pos < capacity
+
+    if m.dispatch == "einsum":
+        # GShard-style one-hot einsum dispatch.  Costs O(T·E·C·d) matmul
+        # flops — E× the useful expert compute for top-1 — kept ONLY as the
+        # §Perf iteration-0 reference (see EXPERIMENTS.md).
+        onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (T, k, E)
+        pos_oh = jax.nn.one_hot(pos, capacity, dtype=jnp.float32) * keep[..., None]
+        dispatch = jnp.einsum("tke,tkc->tec", onehot, pos_oh)
+        combine = jnp.einsum("tke,tkc->tec", onehot * gate_vals[..., None], pos_oh)
+        dispatch = shard(dispatch.astype(x.dtype), ("batch", "experts", None))
+        ein = jnp.einsum("tec,td->ecd", dispatch, xt)
+    else:
+        # Gather/scatter dispatch (default): index arithmetic instead of
+        # one-hot matmuls — zero matmul overhead beyond the expert FFNs.
+        flat_slot = expert_idx * capacity + pos  # (T, k) in [0, E·C)
+        flat_slot = jnp.where(keep, flat_slot, e * capacity)  # overflow slot
+        token_ids = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k))
+        src = jnp.full((e * capacity + 1,), t, jnp.int32)  # t = "no token"
+        src = src.at[flat_slot.reshape(-1)].set(token_ids.reshape(-1))[:-1]
+        x_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+        ein = x_pad[src].reshape(e, capacity, d)
+
+    ein = shard(ein, ("experts", None, None))
+    g = jnp.einsum("ecd,edf->ecf", ein, p["e_gate"])
+    u = jnp.einsum("ecd,edf->ecf", ein, p["e_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    eout = jnp.einsum("ecf,efd->ecd", h, p["e_down"])
+    eout = shard(eout, ("experts", None, None))
+
+    if m.dispatch == "einsum":
+        out = jnp.einsum(
+            "tec,ecd->td", combine, eout.astype(jnp.float32)
+        ).astype(x.dtype)
+    else:
+        # combine = gather each (token, choice)'s slot output, gate-weight.
+        flat_out = eout.reshape(e * capacity, d)
+        slot = jnp.where(keep, expert_idx * capacity + pos, 0)
+        picked = flat_out[slot.reshape(-1)].reshape(t, k, d)
+        picked = jnp.where(keep[..., None], picked, 0)
+        out = jnp.einsum(
+            "tkd,tk->td", picked.astype(jnp.float32), gate_vals
+        ).astype(x.dtype)
+    if "shared" in p:
+        out = out + swiglu(xt, **p["shared"])
+    out = out.reshape(b, s, d)
+
+    # aux: load-balance (f_i · P_i · E) + z-loss.  Dispatch fraction via
+    # scatter-add (no (T,k,E) one-hot materialization).
+    density = (
+        jnp.zeros((e,), jnp.float32).at[expert_idx[:, 0]].add(1.0) / t
+    )
+    router_prob = jnp.mean(probs, axis=0)
+    lb_loss = e * jnp.sum(density * router_prob)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return out, {"lb_loss": lb_loss, "z_loss": z_loss}

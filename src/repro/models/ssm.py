@@ -1,0 +1,189 @@
+"""Mamba2 (SSD) mixer — chunkwise-parallel scan, TPU-matmul-heavy form.
+
+The state-space dual form processes the sequence in chunks: within-chunk
+interactions are dense matmuls (MXU-friendly), cross-chunk interactions
+carry an (nh, hd, N) state through a lax.scan over chunks.  The chunk
+boundary state is exactly the paper's weak-memory halo in chunk index —
+order-1 in chunks — which is how sequence parallelism shards it
+(DESIGN.md §4).
+
+Decode is the O(1) recurrence: h ← dA·h + dt·x⊗B,  y = C·h + D·x.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, dense_init, rms_norm
+from ..parallel.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    return d_in, nh, s.state_dim, s.conv_width
+
+
+def mamba2_init(key, cfg, dtype=DTYPE) -> Params:
+    d_in, nh, n, cw = _dims(cfg)
+    conv_ch = d_in + 2 * n  # x, B, C go through the causal conv
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * d_in + 2 * n + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cw, conv_ch)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], d_in, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, nh, n, _ = _dims(cfg)
+    z, xc, bc, cc, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    return z, xc, bc, cc, dt
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array, state: Optional[jax.Array]):
+    """Depthwise causal conv; ``state`` is the (cw−1) trailing inputs of the
+    previous segment (zeros at sequence start).  Returns (out, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((seq.shape[0], cw - 1, seq.shape[-1]), seq.dtype)
+    padded = jnp.concatenate([state, seq], axis=1)
+    out = sum(
+        padded[:, i : i + seq.shape[1]] * w[i][None, None, :] for i in range(cw)
+    )
+    out = jax.nn.silu((out + b[None, None, :]).astype(jnp.float32))
+    return out, padded[:, -(cw - 1) :]
+
+
+def mamba2_apply(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    *,
+    state: Optional[Params] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    d_in, nh, n, cw = _dims(cfg)
+    hd = cfg.ssm.head_dim
+    chunk = cfg.ssm.chunk
+    b, s, _ = x.shape
+
+    proj = jnp.einsum("bsd,dh->bsh", x, p["in_proj"])
+    proj = shard(proj, ("batch", None, "ff"))
+    z, xc, bc, cc, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xc, bc, cc], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"], None if state is None else state["conv"]
+    )
+    xc = conv_out[..., :d_in].astype(x.dtype)
+    bc = conv_out[..., d_in : d_in + n].astype(jnp.float32)  # (B,S,N)
+    cc = conv_out[..., d_in + n :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    a = -jnp.exp(p["A_log"])  # (nh,)
+    log_da = dt * a[None, None, :]  # (B,S,nh) log decay
+
+    xh = xc.reshape(b, s, nh, hd).astype(jnp.float32)
+    h0 = (
+        state["ssd"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, nh, hd, n), jnp.float32)
+    )
+
+    if s == 1:
+        # O(1) decode recurrence
+        da = jnp.exp(log_da[:, 0])  # (B,nh)
+        h = h0 * da[..., None, None] + (dt[:, 0])[..., None, None] * jnp.einsum(
+            "bhp,bn->bhpn", xh[:, 0], bc[:, 0]
+        )
+        y = jnp.einsum("bhpn,bn->bhp", h, cc[:, 0]) + p["D"][None, :, None] * xh[:, 0]
+        y = y[:, None]  # (B,1,nh,hd)
+        new_state = {"conv": conv_state, "ssd": h}
+    else:
+        # pad to a chunk multiple; padded steps are exact identities in the
+        # recurrence (dt := 0 ⇒ no decay, no input) so the final state is
+        # unaffected and padded outputs are sliced away.
+        s_orig = s
+        pad = (-s) % chunk
+        if pad:
+            step_mask = (jnp.arange(s + pad) < s).astype(jnp.float32)
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0))) * step_mask[None, :, None]
+            log_da = jnp.pad(log_da, ((0, 0), (0, pad), (0, 0)))
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            bc = jnp.pad(bc, ((0, 0), (0, pad), (0, 0)))
+            cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+            log_da = log_da * step_mask[None, :, None]
+            s = s + pad
+        nc = s // chunk
+        ld = log_da.reshape(b, nc, chunk, nh)
+        cum = jnp.cumsum(ld, axis=2)  # inclusive within-chunk cumulation
+        xcks = xh.reshape(b, nc, chunk, nh, hd)
+        bck = bc.reshape(b, nc, chunk, n)
+        cck = cc.reshape(b, nc, chunk, n)
+        dtk = dt.reshape(b, nc, chunk, nh)
+
+        # within-chunk (diagonal) term
+        li = cum[:, :, :, None, :]  # (b,nc,l,1,h)
+        sj = cum[:, :, None, :, :]  # (b,nc,1,s,h)
+        decay = jnp.exp(li - sj)  # (b,nc,l,s,h)
+        causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+        scores = (
+            jnp.einsum("bcln,bcsn->bcls", cck, bck)[..., None]
+            * decay
+            * causal[None, None, :, :, None]
+            * dtk[:, :, None, :, :]
+        )  # (b,nc,l,s,h)
+        y_diag = jnp.einsum("bclsh,bcshp->bclhp", scores, xcks)
+
+        # chunk summary states and cross-chunk scan
+        tail = jnp.exp(cum[:, :, -1:, :] - cum)  # decay from step s to chunk end
+        s_local = jnp.einsum(
+            "bcsh,bcsn,bcshp->bchpn", tail * dtk, bck, xcks
+        )  # (b,nc,nh,hd,n)
+        chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,nh)
+
+        def scan_body(h_prev, inp):
+            s_loc, cdec = inp
+            h_new = h_prev * cdec[..., None, None] + s_loc
+            return h_new, h_prev
+
+        (h_final, h_prevs) = jax.lax.scan(
+            scan_body,
+            h0,
+            (jnp.moveaxis(s_local, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        )
+        h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (b,nc,nh,hd,n) state entering chunk
+
+        y_off = jnp.einsum(
+            "bcln,bchpn,bclh->bclhp", cck, h_prevs, jnp.exp(cum)
+        )
+        y = (y_diag + y_off).reshape(b, s, nh, hd) + p["D"][None, None, :, None] * xh
+        y = y[:, :s_orig]
+        new_state = {"conv": conv_state, "ssd": h_final}
+
+    y = y.reshape(b, -1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsh,hd->bsd", y, p["out_proj"])
+    return out, (new_state if (return_state or state is not None) else None)
+
+
+def mamba2_state_spec(cfg, batch: int, dtype=DTYPE) -> Dict[str, Any]:
+    d_in, nh, n, cw = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cw - 1, conv_ch), dtype),
+        "ssd": jax.ShapeDtypeStruct((batch, nh, cfg.ssm.head_dim, n), jnp.float32),
+    }

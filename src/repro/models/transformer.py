@@ -1,0 +1,199 @@
+"""Decoder-only LM backbone (dense / MoE / VLM families).
+
+Layers are homogeneous → parameters are stacked on a leading L axis and the
+stack is traversed with jax.lax.scan (one compiled layer body regardless of
+depth: compile time and HLO size are O(1) in n_layers).  Remat policy wraps
+the scanned body.
+
+Three entry points (all pure):
+  lm_forward      — tokens → logits               (training loss path)
+  lm_prefill      — tokens → (last logits, cache) (serving prefill)
+  lm_decode_step  — (cache, token, pos) → (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_apply, attention_cache_spec, attention_init
+from .layers import DTYPE, dense_init, embed_init, mlp_init, rms_norm, scan_layers, swiglu
+from .moe import moe_apply, moe_init
+from ..parallel.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def _remat_policy(cfg):
+    """'full' → recompute-all; 'dots' → keep matmul outputs (§Perf A3:
+    trades activation memory for ~the remat recompute flops)."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+# ------------------------------------------------------------- init ----
+
+
+def _layer_init(key, cfg, dtype=DTYPE) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": attention_init(k1, cfg, dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def lm_init(key, cfg, dtype=DTYPE) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = [_layer_init(ks[i], cfg, dtype) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    p: Params = {
+        "embed": embed_init(ks[-3], cfg.vocab, cfg.d_model, dtype),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[-2], cfg.d_model, cfg.vocab, dtype)
+    if cfg.family == "vlm":
+        p["patch_proj"] = dense_init(ks[-1], cfg.d_model, cfg.d_model, dtype)
+    return p
+
+
+# ------------------------------------------------------------ blocks ---
+
+
+def _block(p: Params, x, cfg, positions, cache=None, pos=None, return_cache=False):
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    attn_out, new_cache = attention_apply(
+        p["attn"], h, cfg, positions, cache=cache, pos=pos, return_cache=return_cache
+    )
+    x = x + attn_out
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        mlp_out, aux = moe_apply(p["moe"], h, cfg)
+    else:
+        mlp_out = swiglu(h, **p["mlp"])
+        aux = {
+            "lb_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32),
+        }
+    x = x + mlp_out
+    # §Perf B5 (opt-in): sequence-shard the residual over the model axis —
+    # GSPMD then reduce-scatters the TP partial sums instead of all-reducing.
+    seq_axis = "seq_tp" if (cfg.seq_parallel_residual and cache is None) else "seq"
+    x = shard(x, ("batch", seq_axis, None))
+    return x, new_cache, aux
+
+
+def _embed_inputs(p: Params, cfg, tokens, patch_embeds=None):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.family == "vlm":
+        assert patch_embeds is not None, "vlm arch needs patch_embeds"
+        patches = jnp.einsum("bpd,de->bpe", patch_embeds.astype(x.dtype), p["patch_proj"])
+        x = jnp.concatenate([patches, x], axis=1)  # anyres patches prefix text
+    return shard(x, ("batch", "seq", None))
+
+
+def _unembed(p: Params, cfg, x):
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------- forward ----
+
+
+def lm_forward(
+    p: Params,
+    tokens: jax.Array,  # (B, S_text)
+    cfg,
+    *,
+    patch_embeds: Optional[jax.Array] = None,
+    remat: bool = True,
+    return_hidden: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence forward → (logits (B, S_total, V), aux losses).
+
+    ``return_hidden=True`` returns the final normed hidden states instead of
+    logits (the fused-loss path, §Perf B1).
+    """
+    x = _embed_inputs(p, cfg, tokens, patch_embeds)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, layer_p):
+        x, _, aux = _block(layer_p, x, cfg, positions)
+        return x, aux
+
+    if remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, auxs = scan_layers(body, x, p["layers"], cfg.unroll_layers)
+    aux = jax.tree.map(jnp.sum, auxs)
+    if return_hidden:
+        return rms_norm(x, p["final_norm"], cfg.norm_eps), aux
+    return _unembed(p, cfg, x), aux
+
+
+def lm_head_matrix(p: Params, cfg) -> jax.Array:
+    return p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+
+
+def lm_prefill(
+    p: Params,
+    tokens: jax.Array,
+    cfg,
+    *,
+    patch_embeds: Optional[jax.Array] = None,
+    remat: bool = False,
+) -> Tuple[jax.Array, Any]:
+    """Prefill → (logits of the last position (B, V), stacked cache (L, …))."""
+    x = _embed_inputs(p, cfg, tokens, patch_embeds)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, layer_p):
+        x, cache, _ = _block(layer_p, x, cfg, positions, return_cache=True)
+        return x, cache
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, caches = scan_layers(body, x, p["layers"], cfg.unroll_layers)
+    logits = _unembed(p, cfg, x[:, -1:, :])[:, 0]
+    return logits, caches
+
+
+def lm_decode_step(
+    p: Params,
+    cache: Any,  # stacked (L, …) pytree
+    tokens: jax.Array,  # (B,) next token ids
+    pos: jax.Array,  # scalar int32 — write position (== #valid entries)
+    cfg,
+) -> Tuple[jax.Array, Any]:
+    """One decode step → (logits (B, V), updated cache)."""
+    x = jnp.take(p["embed"], tokens[:, None], axis=0)
+    x = shard(x, ("batch", None, None))
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def body(x, scanned):
+        layer_p, layer_cache = scanned
+        x, new_cache, _ = _block(layer_p, x, cfg, positions, cache=layer_cache, pos=pos)
+        return x, new_cache
+
+    x, new_caches = scan_layers(body, x, (p["layers"], cache), cfg.unroll_layers)
+    logits = _unembed(p, cfg, x)[:, 0]
+    return logits, new_caches
+
+
+def lm_cache_spec(cfg, batch: int, seq_len: int, dtype=DTYPE):
+    """Stacked (L, …) ShapeDtypeStructs for the decode cache."""
+    per_layer = attention_cache_spec(cfg, batch, seq_len, dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype), per_layer
+    )

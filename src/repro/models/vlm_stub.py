@@ -1,0 +1,31 @@
+"""VLM / audio modality frontend STUBS (per the brief).
+
+``[audio]`` / ``[vlm]`` cells specify the transformer backbone only; the
+frontend is replaced by precomputed embeddings supplied via input_specs():
+
+  llava-next-34b : anyres tiling → patch embeddings (B, n_patches, d_model).
+    The real frontend (CLIP-ViT + 2-layer MLP projector + anyres grid
+    selection) is summarized by `fake_patch_embeds`, which reproduces only
+    its OUTPUT CONTRACT (count, dtype, scale).
+  whisper-base   : log-mel + conv1d×2 (stride 2) → frame embeddings
+    (B, S, d_model) via `fake_frame_embeds`.
+
+These exist so examples/tests can run end-to-end without image/audio data;
+the dry-run uses ShapeDtypeStructs and never calls them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE
+
+
+def fake_patch_embeds(key, batch: int, n_patches: int, d_model: int, dtype=DTYPE):
+    """Stand-in for the anyres vision tower output (unit-scale embeddings)."""
+    return jax.random.normal(key, (batch, n_patches, d_model)).astype(dtype)
+
+
+def fake_frame_embeds(key, batch: int, n_frames: int, d_model: int, dtype=DTYPE):
+    """Stand-in for the whisper conv frontend output."""
+    return jax.random.normal(key, (batch, n_frames, d_model)).astype(dtype)

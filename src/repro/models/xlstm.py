@@ -1,0 +1,271 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential recurrence) — Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM is a gated linear-attention form: C_t = f_t C_{t-1} + i_t v_t k_tᵀ,
+h_t = o_t ⊙ (C_t q_t / max(|n_t·q_t|, 1)), with exponential-gating
+stabilizer m_t.  We implement the exact chunkwise form (weak memory in
+chunk index, like SSD) — cross-chunk state (nh, dv, dk) carried by a scan.
+
+sLSTM keeps a true nonlinear recurrence (per-head scalar memory) and runs
+as a lax.scan over time — the one assigned mixer that is NOT
+chunk-parallelizable (noted in DESIGN.md §Arch-applicability).
+
+Block layout follows the paper's pre-up-projection variant for mLSTM
+(d_ff = 0 in the assigned config: the block carries its own 2× up/down
+projections) and post-FFN-free sLSTM block.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, dense_init, rms_norm
+from ..parallel.sharding import shard
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------ mLSTM ----
+
+
+def mlstm_init(key, cfg, dtype=DTYPE) -> Params:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    d_in = 2 * d  # pre-up-projection ×2
+    hd = d_in // nh
+    ks = jax.random.split(key, 5)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * d_in, dtype),  # [x_mlstm, z_gate]
+        "w_qkv": dense_init(ks[1], d_in, 3 * d_in, dtype),
+        "w_if": dense_init(ks[2], d_in, 2 * nh, dtype),  # input/forget gates
+        "gate_norm": jnp.ones((d_in,), dtype),
+        "down_proj": dense_init(ks[3], d_in, d, dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, log_i, h0, n0, m0, chunk):
+    """Exact chunkwise mLSTM.
+
+    q,k,v: (B,S,nh,hd);  log_f,log_i: (B,S,nh);  state:
+      h0 (B,nh,hd,hd)  matrix memory C,
+      n0 (B,nh,hd)     normalizer,
+      m0 (B,nh)        max-stabilizer.
+    """
+    b, s, nh, hd = q.shape
+    nc = s // chunk
+    qc = q.reshape(b, nc, chunk, nh, hd)
+    kc = k.reshape(b, nc, chunk, nh, hd)
+    vc = v.reshape(b, nc, chunk, nh, hd)
+    lf = log_f.reshape(b, nc, chunk, nh)
+    li = log_i.reshape(b, nc, chunk, nh)
+    cum_f = jnp.cumsum(lf, axis=2)  # inclusive
+
+    def body(carry, inp):
+        C, n, m = carry  # (b,nh,hd,hd), (b,nh,hd), (b,nh)
+        qk, kk, vk, cf, lik = inp
+        # intra-chunk kernel: D[l,s] = exp(cf[l]-cf[s]+li[s]) for s≤l
+        # (cf = inclusive within-chunk cumsum of log forget gates)
+        # log weights of source s for target l
+        logw = cf[:, :, None, :] - cf[:, None, :, :] + lik[:, None, :, :]
+        causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+        logw = jnp.where(causal[None, :, :, None] > 0, logw, -jnp.inf)
+        # cross-chunk contribution decay for target l: exp(cf[l]) relative to m
+        log_cross = cf + m[:, None, :]  # (b,l,nh)
+        m_new = jnp.maximum(
+            jnp.max(jnp.where(jnp.isfinite(logw), logw, -jnp.inf), axis=2),
+            log_cross,
+        )  # (b,l,nh)
+        w = jnp.exp(logw - m_new[:, :, None, :])  # (b,l,s,nh)
+        cross_scale = jnp.exp(log_cross - m_new)  # (b,l,nh)
+
+        scores = jnp.einsum("blhd,bshd->blsh", qk, kk) * (qk.shape[-1] ** -0.5)
+        intra = jnp.einsum("blsh,blsh,bshd->blhd", scores, w, vk)
+        inter = jnp.einsum("blhd,bhed->blhe", qk, C) * (
+            qk.shape[-1] ** -0.5
+        ) * cross_scale[..., None]
+        num = intra + inter
+        den_intra = jnp.einsum("blsh,blsh->blh", scores, w)
+        den_inter = jnp.einsum("blhd,bhd->blh", qk, n) * (
+            qk.shape[-1] ** -0.5
+        ) * cross_scale
+        den = jnp.abs(den_intra + den_inter)
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+
+        # chunk-end state update
+        tot_f = cf[:, -1]  # (b,nh)
+        m_next = jnp.maximum(tot_f + m, jnp.max(tot_f[:, None] - cf + lik, axis=1))
+        carry_scale = jnp.exp(tot_f + m - m_next)
+        src_w = jnp.exp(tot_f[:, None] - cf + lik - m_next[:, None])  # (b,s,nh)
+        C_new = C * carry_scale[..., None, None] + jnp.einsum(
+            "bshd,bshe,bsh->bhde", vk, kk, src_w
+        )
+        n_new = n * carry_scale[..., None] + jnp.einsum("bshd,bsh->bhd", kk, src_w)
+        return (C_new, n_new, m_next), h
+
+    inputs = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, cum_f, li)
+    )
+    (C, n, m), hs = jax.lax.scan(body, (h0, n0, m0), inputs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, nh, hd)
+    return h, (C, n, m)
+
+
+def mlstm_apply(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    state: Optional[Params] = None,
+    return_state: bool = False,
+    chunk: int = 64,
+) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    d_in = 2 * d
+    hd = d_in // nh
+
+    up = jnp.einsum("bsd,dh->bsh", x, p["up_proj"])
+    up = shard(up, ("batch", None, "ff"))
+    xm, z = jnp.split(up, 2, axis=-1)
+    qkv = jnp.einsum("bsh,hk->bsk", xm, p["w_qkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nh, hd)
+    v = v.reshape(b, s, nh, hd)
+    gates = jnp.einsum("bsh,hg->bsg", xm, p["w_if"]).astype(jnp.float32)
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)  # (B,S,nh) each
+    log_f = jax.nn.log_sigmoid(f_raw)
+
+    if state is None:
+        C0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    if s == 1:
+        # O(1) recurrence
+        lf, li_ = log_f[:, 0], log_i[:, 0]
+        m_new = jnp.maximum(lf + m0, li_)
+        C = C0 * jnp.exp(lf + m0 - m_new)[..., None, None] + jnp.exp(
+            li_ - m_new
+        )[..., None, None] * jnp.einsum("bhd,bhe->bhde", v[:, 0], k[:, 0])
+        n = n0 * jnp.exp(lf + m0 - m_new)[..., None] + jnp.exp(li_ - m_new)[
+            ..., None
+        ] * k[:, 0]
+        qs = q[:, 0] * (hd**-0.5)
+        num = jnp.einsum("bhd,bhed->bhe", qs, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n))
+        h = (num / jnp.maximum(den, jnp.exp(-m_new))[..., None])[:, None]
+        new_state = {"C": C, "n": n, "m": m_new}
+    else:
+        chunk = min(chunk, s)
+        s_orig = s
+        pad = (-s) % chunk
+        if pad:
+            # padded steps: log_f = 0 (no decay), log_i = -1e30 (no input) —
+            # exact identities in the recurrence.
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+            log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        h, (C, n, m) = _mlstm_chunk_scan(
+            q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            log_f, log_i, C0, n0, m0, chunk,
+        )
+        h = h[:, :s_orig]
+        new_state = {"C": C, "n": n, "m": m}
+
+    h = h.reshape(b, -1, d_in).astype(x.dtype)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    h = rms_norm(h, p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsh,hd->bsd", h, p["down_proj"])
+    return out, (new_state if (return_state or state is not None) else None)
+
+
+def mlstm_state_spec(cfg, batch: int) -> Dict[str, Any]:
+    nh = cfg.n_heads
+    hd = 2 * cfg.d_model // nh
+    return {
+        "C": jax.ShapeDtypeStruct((batch, nh, hd, hd), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+    }
+
+
+# ------------------------------------------------------------ sLSTM ----
+
+
+def slstm_init(key, cfg, dtype=DTYPE) -> Params:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 4)
+    return {
+        # input-driven gates+cell (i, f, z, o) and recurrent (block-diag per head)
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype),
+        "r_gates": (jax.random.normal(ks[1], (nh, hd, 4 * hd)) * (hd**-0.5)).astype(
+            dtype
+        ),
+        "gate_norm": jnp.ones((d,), dtype),
+        "up_proj": dense_init(ks[2], d, 2 * cfg.d_model, dtype),
+        "down_proj": dense_init(ks[3], 2 * cfg.d_model, d, dtype),
+    }
+
+
+def slstm_apply(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    state: Optional[Params] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """sLSTM with exponential gating and per-head recurrence (scan over S)."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+
+    wx = jnp.einsum("bsd,dh->bsh", x, p["w_gates"]).reshape(b, s, nh, 4 * hd)
+    if state is None:
+        h0 = jnp.zeros((b, nh, hd), jnp.float32)
+        c0 = jnp.zeros((b, nh, hd), jnp.float32)
+        n0 = jnp.ones((b, nh, hd), jnp.float32)
+        m0 = jnp.zeros((b, nh, hd), jnp.float32)
+    else:
+        h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+
+    r = p["r_gates"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        h, c, n, m = carry
+        pre = wx_t.astype(jnp.float32) + jnp.einsum("bhd,hdk->bhk", h, r)
+        i_, f_, z_, o_ = jnp.split(pre, 4, axis=-1)
+        log_f = jax.nn.log_sigmoid(f_)
+        m_new = jnp.maximum(log_f + m, i_)
+        i_g = jnp.exp(i_ - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(z_)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(o_) * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0), jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    # position-wise FFN inside the block (d_ff = 0 in config → ×2 internal)
+    u = jnp.einsum("bsd,dh->bsh", y, p["up_proj"])
+    u = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsh,hd->bsd", u, p["down_proj"])
+    new_state = {"h": h, "c": c, "n": n, "m": m}
+    return out, (new_state if (return_state or state is not None) else None)
+
+
+def slstm_state_spec(cfg, batch: int) -> Dict[str, Any]:
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    sds = lambda: jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32)
+    return {"h": sds(), "c": sds(), "n": sds(), "m": sds()}

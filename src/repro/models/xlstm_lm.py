@@ -1,0 +1,133 @@
+"""xLSTM language model: alternating mLSTM / sLSTM blocks (xlstm-125m).
+
+With ``slstm_every = 2`` the 12-layer stack is 6 scanned super-blocks of
+(mLSTM → sLSTM); recurrent state (not a KV cache) makes every decode shape
+O(1) in context — long_500k runs trivially (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, dense_init, embed_init, rms_norm, scan_layers
+from .xlstm import (
+    mlstm_apply,
+    mlstm_init,
+    mlstm_state_spec,
+    slstm_apply,
+    slstm_init,
+    slstm_state_spec,
+)
+from ..parallel.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def _n_pairs(cfg) -> int:
+    if cfg.slstm_every:
+        assert cfg.n_layers % 2 == 0, "alternating stack needs even n_layers"
+        return cfg.n_layers // 2
+    return cfg.n_layers
+
+
+def xlstm_lm_init(key, cfg, dtype=DTYPE) -> Params:
+    np_ = _n_pairs(cfg)
+    ks = jax.random.split(key, np_ + 2)
+
+    def pair(k):
+        k1, k2 = jax.random.split(k)
+        p = {"m_norm": jnp.ones((cfg.d_model,), dtype), "mlstm": mlstm_init(k1, cfg, dtype)}
+        if cfg.slstm_every:
+            p["s_norm"] = jnp.ones((cfg.d_model,), dtype)
+            p["slstm"] = slstm_init(k2, cfg, dtype)
+        return p
+
+    pairs = [pair(ks[i]) for i in range(np_)]
+    return {
+        "embed": embed_init(ks[-2], cfg.vocab, cfg.d_model, dtype),
+        "pairs": jax.tree.map(lambda *x: jnp.stack(x), *pairs),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[-1], cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def _pair_apply(lp, x, cfg, states=None, return_state=False):
+    h = rms_norm(x, lp["m_norm"], cfg.norm_eps)
+    m_out, m_state = mlstm_apply(
+        lp["mlstm"], h, cfg,
+        state=None if states is None else states["m"],
+        return_state=return_state,
+    )
+    x = x + m_out
+    s_state = None
+    if cfg.slstm_every:
+        h = rms_norm(x, lp["s_norm"], cfg.norm_eps)
+        s_out, s_state = slstm_apply(
+            lp["slstm"], h, cfg,
+            state=None if states is None else states["s"],
+            return_state=return_state,
+        )
+        x = x + s_out
+    new_states = None
+    if return_state or states is not None:
+        new_states = {"m": m_state} | ({"s": s_state} if cfg.slstm_every else {})
+    return x, new_states
+
+
+def xlstm_forward(
+    p: Params, tokens: jax.Array, cfg, *, remat: bool = True,
+    return_hidden: bool = False,
+) -> jax.Array:
+    x = jnp.take(p["embed"], tokens, axis=0)
+    x = shard(x, ("batch", "seq", None))
+
+    def body(x, lp):
+        x, _ = _pair_apply(lp, x, cfg)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = scan_layers(body, x, p["pairs"], cfg.unroll_layers)
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    return shard(jnp.einsum("bsd,dv->bsv", x, p["lm_head"]), ("batch", "seq", "vocab"))
+
+
+def xlstm_prefill(p: Params, tokens: jax.Array, cfg):
+    x = jnp.take(p["embed"], tokens, axis=0)
+
+    def body(x, lp):
+        x, st = _pair_apply(lp, x, cfg, return_state=True)
+        return x, st
+
+    x, states = scan_layers(body, x, p["pairs"], cfg.unroll_layers)
+    x = rms_norm(x[:, -1:], p["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])[:, 0]
+    return logits, states
+
+
+def xlstm_decode_step(p: Params, states, tokens: jax.Array, pos, cfg):
+    x = jnp.take(p["embed"], tokens[:, None], axis=0)
+
+    def body(x, scanned):
+        lp, st = scanned
+        x, new_st = _pair_apply(lp, x, cfg, states=st)
+        return x, new_st
+
+    x, new_states = scan_layers(body, x, (p["pairs"], states), cfg.unroll_layers)
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])[:, 0]
+    return logits, new_states
+
+
+def xlstm_cache_spec(cfg, batch: int, seq_len: int, dtype=DTYPE):
+    np_ = _n_pairs(cfg)
+    per = {"m": mlstm_state_spec(cfg, batch)}
+    if cfg.slstm_every:
+        per["s"] = slstm_state_spec(cfg, batch)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((np_,) + s.shape, s.dtype), per
+    )

@@ -1,0 +1,197 @@
+"""Zamba2-style hybrid backbone: Mamba2 trunk + one SHARED attention block
+applied every ``shared_attn_every`` layers (arXiv:2411.15242).
+
+81 Mamba2 layers are scanned (stacked params); the shared transformer block
+(full attention + SwiGLU MLP, one set of weights) fires at layer indices
+i % every == 0 via lax.cond inside the scan — ⌈81/6⌉ = 14 applications,
+each with its OWN KV cache slot (weights shared, caches not).
+
+Simplifications vs. the released checkpoints (DESIGN.md §Arch-applicability):
+the concat-with-embedding input and per-application LoRA deltas on the
+shared block are omitted — the compute/communication structure (the object
+of this reproduction) is unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import gqa_apply, gqa_init, gqa_cache_spec
+from .layers import DTYPE, dense_init, embed_init, mlp_init, rms_norm, scan_layers, swiglu
+from .ssm import mamba2_apply, mamba2_init, mamba2_state_spec
+from ..parallel.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def _n_apps(cfg) -> int:
+    return -(-cfg.n_layers // cfg.shared_attn_every)
+
+
+def zamba_init(key, cfg, dtype=DTYPE) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 5)
+    mamba_layers = [
+        {
+            "norm": jnp.ones((cfg.d_model,), dtype),
+            "mixer": mamba2_init(ks[i], cfg, dtype),
+        }
+        for i in range(cfg.n_layers)
+    ]
+    k1, k2 = jax.random.split(ks[-1])
+    return {
+        "embed": embed_init(ks[-2], cfg.vocab, cfg.d_model, dtype),
+        "mamba_layers": jax.tree.map(lambda *x: jnp.stack(x), *mamba_layers),
+        "shared_attn": {
+            "attn_norm": jnp.ones((cfg.d_model,), dtype),
+            "attn": gqa_init(k1, cfg, dtype),
+            "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+        },
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[-3], cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def _shared_block(p, x, cfg, positions, cache=None, pos=None, return_cache=False):
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    a, new_cache = gqa_apply(
+        p["attn"], h, cfg, positions, cache=cache, pos=pos, return_cache=return_cache
+    )
+    x = x + a
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    return x + swiglu(h, **p["mlp"]), new_cache
+
+
+def zamba_forward(
+    p: Params, tokens: jax.Array, cfg, *, remat: bool = True,
+    return_hidden: bool = False,
+) -> jax.Array:
+    x = jnp.take(p["embed"], tokens, axis=0)
+    x = shard(x, ("batch", "seq", None))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    every = cfg.shared_attn_every
+    shared = p["shared_attn"]
+
+    def body(x, scanned):
+        lp, idx = scanned
+        x = jax.lax.cond(
+            idx % every == 0,
+            lambda x: _shared_block(shared, x, cfg, positions)[0],
+            lambda x: x,
+            x,
+        )
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        m, _ = mamba2_apply(lp["mixer"], h, cfg)
+        return x + m, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = scan_layers(body, x, (p["mamba_layers"], jnp.arange(cfg.n_layers)), cfg.unroll_layers)
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    return shard(jnp.einsum("bsd,dv->bsv", x, p["lm_head"]), ("batch", "seq", "vocab"))
+
+
+def zamba_prefill(p: Params, tokens: jax.Array, cfg):
+    """→ (last logits, {"ssm": (L,…) states, "attn": (A,…) kv caches})."""
+    x = jnp.take(p["embed"], tokens, axis=0)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    every = cfg.shared_attn_every
+    shared = p["shared_attn"]
+    n_apps = _n_apps(cfg)
+
+    # attention cache template for stacking
+    def attn_app(x):
+        return _shared_block(shared, x, cfg, positions, return_cache=True)
+
+    def body(carry, scanned):
+        x, attn_caches = carry
+        lp, idx = scanned
+
+        def with_attn(x):
+            x2, cache = attn_app(x)
+            app = idx // every
+            new_caches = jax.tree.map(
+                lambda st, c: jax.lax.dynamic_update_slice_in_dim(
+                    st, c[None].astype(st.dtype), app, axis=0
+                ),
+                attn_caches,
+                cache,
+            )
+            return x2, new_caches
+
+        x, attn_caches = jax.lax.cond(
+            idx % every == 0, with_attn, lambda x: (x, attn_caches), x
+        )
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        m, state = mamba2_apply(lp["mixer"], h, cfg, return_state=True)
+        return (x + m, attn_caches), state
+
+    attn_caches0 = jax.tree.map(
+        lambda s: jnp.zeros((n_apps,) + s.shape, s.dtype),
+        gqa_cache_spec(cfg, tokens.shape[0], tokens.shape[1], dtype=x.dtype),
+    )
+    (x, attn_caches), ssm_states = scan_layers(
+        body, (x, attn_caches0), (p["mamba_layers"], jnp.arange(cfg.n_layers)),
+        cfg.unroll_layers,
+    )
+    x = rms_norm(x[:, -1:], p["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])[:, 0]
+    return logits, {"ssm": ssm_states, "attn": attn_caches}
+
+
+def zamba_decode_step(p: Params, cache, tokens: jax.Array, pos, cfg):
+    x = jnp.take(p["embed"], tokens[:, None], axis=0)
+    positions = jnp.full((1,), pos, jnp.int32)
+    every = cfg.shared_attn_every
+    shared = p["shared_attn"]
+
+    def body(carry, scanned):
+        x, attn_caches = carry
+        lp, ssm_state, idx = scanned
+
+        def with_attn(x):
+            app = idx // every
+            cache_app = jax.tree.map(lambda st: st[app], attn_caches)
+            x2, new_c = _shared_block(shared, x, cfg, positions, cache=cache_app, pos=pos)
+            new_caches = jax.tree.map(
+                lambda st, c: jax.lax.dynamic_update_slice_in_dim(
+                    st, c[None].astype(st.dtype), app, axis=0
+                ),
+                attn_caches,
+                new_c,
+            )
+            return x2, new_caches
+
+        x, attn_caches = jax.lax.cond(
+            idx % every == 0, with_attn, lambda x: (x, attn_caches), x
+        )
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        m, new_state = mamba2_apply(lp["mixer"], h, cfg, state=ssm_state)
+        return (x + m, attn_caches), new_state
+
+    (x, attn_caches), new_ssm = scan_layers(
+        body, (x, cache["attn"]),
+        (p["mamba_layers"], cache["ssm"], jnp.arange(cfg.n_layers)),
+        cfg.unroll_layers,
+    )
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])[:, 0]
+    return logits, {"ssm": new_ssm, "attn": attn_caches}
+
+
+def zamba_cache_spec(cfg, batch: int, seq_len: int, dtype=DTYPE):
+    n_apps = _n_apps(cfg)
+    ssm = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+        mamba2_state_spec(cfg, batch, dtype),
+    )
+    attn = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_apps,) + s.shape, s.dtype),
+        gqa_cache_spec(cfg, batch, seq_len, dtype),
+    )
+    return {"ssm": ssm, "attn": attn}

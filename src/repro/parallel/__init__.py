@@ -1,0 +1,9 @@
+"""Distribution substrate: logical sharding rules, halo sequence parallelism."""
+from .sharding import (
+    shard,
+    logical_to_spec,
+    param_pspecs,
+    set_sp_mode,
+    sp_mode_enabled,
+    mesh_axis_size,
+)

@@ -1,0 +1,1 @@
+from .fault import FaultTolerantLoop, StragglerMonitor, ElasticPlan, plan_remesh

@@ -1,0 +1,150 @@
+"""Fault tolerance runtime: preemption, stragglers, elastic re-meshing.
+
+SPMD has no per-task retry (unlike the paper's Spark host system), so the
+fault model is: detect → checkpoint (or fall back to the last async
+checkpoint) → re-plan the mesh without the failed hosts → restore → resume.
+The pieces:
+
+  * FaultTolerantLoop — wraps the step loop: periodic async checkpoints,
+    SIGTERM/preemption hook that flushes a final checkpoint, automatic
+    resume from the latest checkpoint on (re)start.
+  * StragglerMonitor — EWMA step-time tracker; flags steps slower than
+    ``threshold ×`` the running median.  On TPU pods a straggling *host*
+    stalls the whole program, so mitigation = surface it (callback) and, at
+    the orchestration layer, restart excluding the slow host (plan_remesh).
+  * plan_remesh — given a surviving device count, pick the largest
+    (data, model) grid compatible with the model's divisibility constraints
+    — the elastic-scaling decision function (unit-tested; drives
+    restore-time shardings via checkpoint.restore_pytree).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    data: int
+    model: int
+    dropped_devices: int
+
+    @property
+    def world(self) -> int:
+        return self.data * self.model
+
+
+def plan_remesh(
+    surviving_devices: int,
+    *,
+    model_divisors: Tuple[int, ...] = (16, 8, 4, 2, 1),
+    prefer_model: int = 16,
+) -> ElasticPlan:
+    """Largest usable (data × model) grid ≤ surviving_devices.
+
+    Keeps the model axis at the largest divisor ≤ prefer_model that still
+    divides a usable world size; data gets the rest.  Drops remainder
+    devices (they idle until the next full re-plan).
+    """
+    for m in model_divisors:
+        if m > prefer_model:
+            continue
+        data = surviving_devices // m
+        if data >= 1:
+            return ElasticPlan(data=data, model=m,
+                               dropped_devices=surviving_devices - data * m)
+    raise ValueError("no usable mesh for zero devices")
+
+
+class StragglerMonitor:
+    """EWMA + median step-time tracking with a slow-step callback."""
+
+    def __init__(self, threshold: float = 2.0, window: int = 64,
+                 on_straggle: Optional[Callable[[int, float, float], None]] = None):
+        self.threshold = threshold
+        self.window = window
+        self.times: List[float] = []
+        self.flagged: List[int] = []
+        self.on_straggle = on_straggle
+
+    def record(self, step: int, seconds: float) -> bool:
+        self.times.append(seconds)
+        hist = self.times[-self.window :]
+        med = float(np.median(hist))
+        slow = len(hist) >= 8 and seconds > self.threshold * med
+        if slow:
+            self.flagged.append(step)
+            if self.on_straggle:
+                self.on_straggle(step, seconds, med)
+        return slow
+
+
+class FaultTolerantLoop:
+    """Checkpointed, preemption-aware step loop driver.
+
+    Usage:
+        loop = FaultTolerantLoop(ckpt_dir, every=100)
+        state, start = loop.restore_or(init_state)       # resume if possible
+        for step in range(start, total):
+            state, metrics = step_fn(state, batch)
+            loop.after_step(step, state)                  # async ckpt + timing
+    """
+
+    def __init__(
+        self,
+        directory: str,
+        *,
+        every: int = 100,
+        keep: int = 3,
+        straggler_threshold: float = 2.0,
+        install_signal_handler: bool = False,
+    ):
+        self.manager = CheckpointManager(directory, keep=keep)
+        self.every = every
+        self.monitor = StragglerMonitor(threshold=straggler_threshold)
+        self._last_state: Any = None
+        self._last_step: int = -1
+        self._t_prev = time.monotonic()
+        self.preempted = False
+        if install_signal_handler:
+            signal.signal(signal.SIGTERM, self._on_preempt)
+
+    # -- resume -----------------------------------------------------------
+    def restore_or(self, init_state: Any, shardings: Any = None) -> Tuple[Any, int]:
+        from ..checkpoint.manager import restore_pytree
+
+        step = self.manager.latest_step()
+        if step is None:
+            return init_state, 0
+        state = restore_pytree(init_state, self.manager.directory, step, shardings)
+        return state, step + 1
+
+    # -- per-step ---------------------------------------------------------
+    def after_step(self, step: int, state: Any) -> None:
+        now = time.monotonic()
+        self.monitor.record(step, now - self._t_prev)
+        self._t_prev = now
+        self._last_state, self._last_step = state, step
+        if self.every and (step + 1) % self.every == 0:
+            self.manager.save(state, step)
+        if self.preempted:
+            self.checkpoint_now()
+            raise SystemExit(f"preempted at step {step}; checkpoint flushed")
+
+    # -- preemption -------------------------------------------------------
+    def _on_preempt(self, signum, frame):  # pragma: no cover - signal path
+        self.preempted = True
+
+    def checkpoint_now(self) -> None:
+        if self._last_state is not None:
+            self.manager.save(self._last_state, self._last_step)
+        self.manager.flush()
+
+    def close(self) -> None:
+        self.manager.close()

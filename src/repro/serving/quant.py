@@ -1,0 +1,93 @@
+"""Weight-only int8 quantization for serving (§Perf C3).
+
+Decode at small batch is weight-bandwidth-bound: every step streams the
+full parameter set from HBM.  Storing weights as int8 codes + per-channel
+f32 scales halves (bf16) or quarters (f32) that stream; dequantization is
+fused into the consuming matmul by XLA (the bf16 tensor never round-trips
+HBM on TPU).
+
+Usage:
+    qparams = quantize_tree(params)                 # host/one-time
+    logits, cache = decode_step(dequantize_tree(qparams), cache, batch, cfg)
+    # under jit, HBM holds int8; dequant is a fused convert
+
+Per-channel absmax scaling over the contraction (−2) axis; small leaves
+(norm scales, biases) stay in full precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantTensor:
+    codes: jax.Array  # int8, original shape
+    scale: jax.Array  # f32, shape with axis −2 reduced to 1
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def nbytes(self) -> int:
+        return self.codes.size + self.scale.size * 4
+
+
+def quantize_leaf(w: jax.Array) -> QuantTensor:
+    wf = w.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(wf), axis=-2, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QuantTensor(codes=codes, scale=scale)
+
+
+def dequantize_leaf(q: QuantTensor, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.codes.astype(jnp.float32) * q.scale).astype(dtype)
+
+
+def _eligible(leaf) -> bool:
+    return (
+        hasattr(leaf, "ndim")
+        and leaf.ndim >= 2
+        and leaf.size >= 65536
+        and jnp.issubdtype(leaf.dtype, jnp.floating)
+    )
+
+
+def quantize_tree(params: Any) -> Any:
+    """Quantize every large ≥2-D float leaf; leave the rest untouched."""
+    return jax.tree.map(
+        lambda l: quantize_leaf(l) if _eligible(l) else l, params
+    )
+
+
+def dequantize_tree(params: Any, dtype=jnp.bfloat16) -> Any:
+    return jax.tree.map(
+        lambda l: dequantize_leaf(l, dtype) if isinstance(l, QuantTensor) else l,
+        params,
+        is_leaf=lambda l: isinstance(l, QuantTensor),
+    )
+
+
+def tree_param_bytes(params: Any) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(
+        params, is_leaf=lambda l: isinstance(l, QuantTensor)
+    ):
+        if isinstance(leaf, QuantTensor):
+            total += leaf.nbytes
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total

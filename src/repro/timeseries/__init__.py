@@ -1,0 +1,25 @@
+"""Time-series data substrate: synthetic generation, distributed storage,
+irregular-series alignment."""
+from .generator import (
+    random_stable_var,
+    random_invertible_ma,
+    simulate_var,
+    simulate_vma,
+    simulate_varma,
+    companion_matrix,
+    spectral_radius,
+)
+from .dataset import TimeSeriesStore
+from .irregular import regularize
+
+__all__ = [
+    "random_stable_var",
+    "random_invertible_ma",
+    "simulate_var",
+    "simulate_vma",
+    "simulate_varma",
+    "companion_matrix",
+    "spectral_radius",
+    "TimeSeriesStore",
+    "regularize",
+]

@@ -1,0 +1,155 @@
+"""TimeSeriesStore — the distributed overlapping dataset (paper §10, Fig. 4).
+
+Owns a (possibly huge) series partitioned **along time** across a mesh axis.
+Construction replicates the halo once at ingest (the paper's scheme); the
+store then serves embarrassingly-parallel estimator sweeps with zero data
+motion.  Alternatively a disjoint store can materialize halos on demand via
+collective-permute (`halo_mode="exchange"`) — the beyond-paper variant.
+
+On one host this degrades gracefully to a (P, W, d) array with a vmap axis;
+on a mesh the leading axis is sharded (NamedSharding over ``axis``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Literal, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.overlap import OverlapSpec, make_overlapping_blocks, reconstruct
+from ..core.mapreduce import block_partials
+from ..core import halo as halo_mod
+
+HaloMode = Literal["replicate", "exchange"]
+
+__all__ = ["TimeSeriesStore"]
+
+
+@dataclasses.dataclass
+class TimeSeriesStore:
+    """Distributed overlapping time-series container.
+
+    Attributes:
+      blocks: (P, width, d) — padded blocks (replicate mode) or disjoint
+        cores (exchange mode).
+      spec: the overlap geometry.
+      mesh / axis: where the block axis lives (None → single host).
+      halo_mode: "replicate" (paper) or "exchange" (ppermute on demand).
+    """
+
+    blocks: jax.Array
+    spec: OverlapSpec
+    mesh: Optional[Mesh] = None
+    axis: str = "data"
+    halo_mode: HaloMode = "replicate"
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_series(
+        cls,
+        x: jax.Array,
+        block_size: int,
+        h_left: int,
+        h_right: int,
+        mesh: Optional[Mesh] = None,
+        axis: str = "data",
+        halo_mode: HaloMode = "replicate",
+    ) -> "TimeSeriesStore":
+        if x.ndim == 1:
+            x = x[:, None]
+        spec = OverlapSpec(
+            n=x.shape[0], block_size=block_size, h_left=h_left, h_right=h_right
+        )
+        if halo_mode == "replicate":
+            blocks, _ = make_overlapping_blocks(x, spec)
+        else:
+            # Disjoint cores; halos materialized per sweep by ppermute.
+            pad = spec.num_blocks * spec.block_size - spec.n
+            xp = jnp.pad(x, ((0, pad), (0, 0)))
+            blocks = xp.reshape(spec.num_blocks, spec.block_size, x.shape[1])
+        if mesh is not None:
+            if spec.num_blocks % mesh.shape[axis] != 0:
+                raise ValueError(
+                    f"num_blocks={spec.num_blocks} must divide over mesh axis "
+                    f"{axis}={mesh.shape[axis]}"
+                )
+            sharding = NamedSharding(mesh, P(axis))
+            blocks = jax.device_put(blocks, sharding)
+        return cls(blocks=blocks, spec=spec, mesh=mesh, axis=axis, halo_mode=halo_mode)
+
+    # -- views ---------------------------------------------------------------
+    def padded_blocks_local(self, blocks_local: jax.Array) -> jax.Array:
+        """Inside shard_map: return halo-padded blocks for local computation.
+
+        replicate mode: identity (halos were materialized at ingest).
+        exchange mode: stitch neighbouring cores with one collective-permute.
+        The two paths are bit-identical (property-tested).
+        """
+        if self.halo_mode == "replicate":
+            return blocks_local
+        s = self.spec
+        p_local, nb, d = blocks_local.shape
+        flat = blocks_local.reshape(p_local * nb, d)
+        padded_flat = halo_mod.halo_exchange(
+            flat, s.h_left, s.h_right, self.axis, time_axis=0
+        )
+        # Re-window into per-block padded views.
+        idx = (
+            jnp.arange(p_local)[:, None] * nb
+            + jnp.arange(s.h_left + nb + s.h_right)[None, :]
+        )
+        return padded_flat[idx]
+
+    def padded_blocks_single_host(self) -> jax.Array:
+        """Single-host padded view (for tests / examples without a mesh)."""
+        if self.halo_mode == "replicate":
+            return self.blocks
+        s = self.spec
+        flat = self.blocks.reshape(-1, self.blocks.shape[-1])[: s.n]
+        blocks, _ = make_overlapping_blocks(flat, s)
+        return blocks
+
+    # -- compute ---------------------------------------------------------------
+    def map_reduce(self, kernel: Callable[[jax.Array], Any]) -> Any:
+        """Run a weak-memory estimator over the store (paper §10.2.1).
+
+        Single reduction of the sufficient statistic; data never moves.
+        """
+        s = self.spec
+        if self.mesh is None:
+            blocks = self.padded_blocks_single_host()
+            partials = block_partials(kernel, blocks, s)
+            return jax.tree.map(lambda l: jnp.sum(l, axis=0), partials)
+
+        blocks_per_device = s.num_blocks // self.mesh.shape[self.axis]
+
+        def local(blocks_local):
+            offset = jax.lax.axis_index(self.axis) * blocks_per_device
+            padded = self.padded_blocks_local(blocks_local)
+            partials = block_partials(kernel, padded, s, block_offset=offset)
+            local_sum = jax.tree.map(lambda l: jnp.sum(l, axis=0), partials)
+            return jax.lax.psum(local_sum, self.axis)
+
+        fn = jax.shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=P(self.axis),
+            out_specs=P(),
+            check_vma=False,
+        )
+        return fn(self.blocks)
+
+    def to_series(self) -> jax.Array:
+        """Gather back the contiguous (n, d) series (small-data paths only)."""
+        if self.halo_mode == "replicate":
+            return reconstruct(self.blocks, self.spec)
+        flat = self.blocks.reshape(-1, self.blocks.shape[-1])
+        return flat[: self.spec.n]
+
+    @property
+    def replication_overhead(self) -> float:
+        from ..core.overlap import replication_overhead as ro
+
+        return ro(self.spec) if self.halo_mode == "replicate" else 0.0

@@ -1,0 +1,141 @@
+"""Synthetic VAR / VMA / VARMA generation with stability control (paper §1.3).
+
+Causality: the companion matrix of A(z) must have spectral radius < 1; we
+sample random coefficient matrices and rescale the companion spectrum to a
+target radius, guaranteeing a causal (stationary) simulation.  Invertibility
+of the MA part is enforced the same way on B's companion.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "companion_matrix",
+    "spectral_radius",
+    "random_stable_var",
+    "random_invertible_ma",
+    "simulate_var",
+    "simulate_vma",
+    "simulate_varma",
+]
+
+
+def companion_matrix(A: np.ndarray) -> np.ndarray:
+    """(p·d, p·d) companion of coefficient stack A (p, d, d) — paper §1.2."""
+    p, d = A.shape[0], A.shape[1]
+    top = np.concatenate([A[i] for i in range(p)], axis=1)
+    if p == 1:
+        return top
+    eye = np.eye((p - 1) * d)
+    bottom = np.concatenate([eye, np.zeros(((p - 1) * d, d))], axis=1)
+    return np.concatenate([top, bottom], axis=0)
+
+
+def spectral_radius(A: np.ndarray) -> float:
+    return float(np.max(np.abs(np.linalg.eigvals(companion_matrix(A)))))
+
+
+def _rescale_to_radius(A: np.ndarray, radius: float) -> np.ndarray:
+    """Scale A_i ← s^i A_i so the companion spectral radius becomes ``radius``
+    (eigenvalues of the rescaled companion are s·λ)."""
+    p = A.shape[0]
+    rho = spectral_radius(A)
+    if rho == 0:
+        return A
+    s = radius / rho
+    return np.stack([A[i] * s ** (i + 1) for i in range(p)])
+
+
+def random_stable_var(
+    key: jax.Array, p: int, d: int, radius: float = 0.7
+) -> jnp.ndarray:
+    """Random causal AR coefficients (p, d, d) with companion radius ``radius``."""
+    a = jax.random.normal(key, (p, d, d)) / np.sqrt(d * p)
+    return jnp.asarray(_rescale_to_radius(np.asarray(a), radius))
+
+
+def random_invertible_ma(
+    key: jax.Array, q: int, d: int, radius: float = 0.5
+) -> jnp.ndarray:
+    """Random invertible MA coefficients (q, d, d) (paper §1.3.2: spectrum of
+    the −B companion bounded by 1)."""
+    b = jax.random.normal(key, (q, d, d)) / np.sqrt(d * q)
+    return jnp.asarray(_rescale_to_radius(np.asarray(b), radius))
+
+
+def _noise(key: jax.Array, n: int, d: int, sigma: Optional[jnp.ndarray]) -> jnp.ndarray:
+    eps = jax.random.normal(key, (n, d))
+    if sigma is not None:
+        chol = jnp.linalg.cholesky(sigma)
+        eps = eps @ chol.T
+    return eps
+
+
+def simulate_var(
+    key: jax.Array,
+    A: jnp.ndarray,
+    n: int,
+    sigma: Optional[jnp.ndarray] = None,
+    burn_in: int = 256,
+) -> jnp.ndarray:
+    """Simulate a causal VAR(p): (n, d).  Burn-in discards init transients."""
+    p, d = A.shape[0], A.shape[1]
+    eps = _noise(key, n + burn_in, d, sigma)
+
+    def body(lags, e):
+        x = jnp.einsum("pij,pj->i", A, lags) + e
+        lags = jnp.concatenate([x[None], lags[:-1]], axis=0)
+        return lags, x
+
+    _, xs = jax.lax.scan(body, jnp.zeros((p, d)), eps)
+    return xs[burn_in:]
+
+
+def simulate_vma(
+    key: jax.Array,
+    B: jnp.ndarray,
+    n: int,
+    sigma: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Simulate a VMA(q): X_t = ε_t + Σ B_j ε_{t-j} — exact, no burn-in."""
+    q, d = B.shape[0], B.shape[1]
+    eps = _noise(key, n + q, d, sigma)
+
+    def at(t):
+        x = eps[t + q]
+        for j in range(1, q + 1):
+            x = x + B[j - 1] @ eps[t + q - j]
+        return x
+
+    return jax.vmap(at)(jnp.arange(n))
+
+
+def simulate_varma(
+    key: jax.Array,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    n: int,
+    sigma: Optional[jnp.ndarray] = None,
+    burn_in: int = 256,
+) -> jnp.ndarray:
+    """Simulate a causal ARMA(p, q): (n, d)."""
+    p, d = A.shape[0], A.shape[1]
+    q = B.shape[0]
+    eps = _noise(key, n + burn_in + q, d, sigma)
+
+    def body(carry, t):
+        xlags, = carry
+        e_t = eps[t + q]
+        ma = e_t
+        for j in range(1, q + 1):
+            ma = ma + B[j - 1] @ eps[t + q - j]
+        x = jnp.einsum("pij,pj->i", A, xlags) + ma
+        xlags = jnp.concatenate([x[None], xlags[:-1]], axis=0)
+        return (xlags,), x
+
+    _, xs = jax.lax.scan(body, (jnp.zeros((p, d)),), jnp.arange(n + burn_in))
+    return xs[burn_in:]

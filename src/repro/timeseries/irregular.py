@@ -1,0 +1,49 @@
+"""Irregular → regular alignment (paper §1: LOCF / linear interpolation).
+
+The paper's GPU treatment of irregular series (skip lists, per-thread binary
+search, §12.3) is pointer-chasing with no TPU analogue; per DESIGN.md we
+regularize at ingest instead — which is also what the paper's own §1
+prescribes for the estimation path ("an interpolation technique is often
+used in order to align observations on a regular time index grid").
+Vectorized searchsorted = the TPU-friendly binary search.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["regularize"]
+
+
+def regularize(
+    t: jax.Array,
+    x: jax.Array,
+    grid: jax.Array,
+    method: Literal["locf", "linear"] = "locf",
+) -> jax.Array:
+    """Sample an irregular series onto a regular grid.
+
+    Args:
+      t: (n,) strictly increasing observation timestamps.
+      x: (n, d) observations.
+      grid: (m,) query timestamps (must lie within [t[0], t[-1]]).
+      method: "locf" (last observation carried forward) or "linear".
+
+    Returns (m, d).
+    """
+    if x.ndim == 1:
+        x = x[:, None]
+    idx = jnp.searchsorted(t, grid, side="right") - 1
+    idx = jnp.clip(idx, 0, t.shape[0] - 1)
+    left = x[idx]
+    if method == "locf":
+        return left
+    idx_next = jnp.clip(idx + 1, 0, t.shape[0] - 1)
+    t0 = t[idx]
+    t1 = t[idx_next]
+    dt = jnp.where(t1 > t0, t1 - t0, 1.0)
+    w = jnp.clip((grid - t0) / dt, 0.0, 1.0)
+    right = x[idx_next]
+    return left + w[:, None] * (right - left)

@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, train step, gradient compression, trainer."""
+from .optimizer import AdamWState, adamw_init, adamw_update, cosine_schedule, global_norm
+from .train_step import make_train_step, loss_fn
+from .compression import compress_int8, decompress_int8, error_feedback_allreduce

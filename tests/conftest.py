@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Tests see ONE device (brief: only dryrun.py forces 512).  Distributed
+# tests spawn subprocesses that set XLA_FLAGS themselves.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,178 @@
+"""Statistical estimators vs oracles and synthetic ground truth (paper §2-§5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.estimators.arma import arma_psi_weights, fit_arma, solve_arma_from_psi
+from repro.core.estimators.innovation import fit_ma, innovation_algorithm
+from repro.core.estimators.mle import (
+    ar_conditional_nll,
+    fit_ar_mle,
+    fit_ar_sgd,
+    optimal_step_size,
+)
+from repro.core.estimators.prediction import (
+    ar_forecast,
+    ar_one_step,
+    arma_innovations_filter,
+)
+from repro.core.estimators.stats import (
+    autocorrelation,
+    autocovariance,
+    autocovariance_blocked,
+    mean,
+    partial_autocorrelation,
+)
+from repro.core.estimators.yule_walker import block_levinson, levinson_durbin, yule_walker
+from repro.timeseries import (
+    random_invertible_ma,
+    random_stable_var,
+    simulate_var,
+    simulate_varma,
+    simulate_vma,
+    spectral_radius,
+)
+
+
+@pytest.fixture(scope="module")
+def var2_data():
+    A = random_stable_var(jax.random.PRNGKey(1), 2, 3, radius=0.6)
+    xs = simulate_var(jax.random.PRNGKey(2), A, 120_000)
+    return A, xs
+
+
+def test_autocovariance_blocked_equals_serial():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5000, 4))
+    g1 = autocovariance(x, 8)
+    g2 = autocovariance_blocked(x, 8, block_size=512)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_autocovariance_numpy_oracle():
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (2000, 2)))
+    g = np.asarray(autocovariance(jnp.asarray(x), 3, normalization="paper"))
+    n = x.shape[0]
+    for h in range(4):
+        ref = sum(np.outer(x[k], x[k + h]) for k in range(n - h)) / (n - h - 1)
+        np.testing.assert_allclose(g[h], ref, rtol=1e-4, atol=1e-5)
+
+
+def test_white_noise_acf_vanishes():
+    x = jax.random.normal(jax.random.PRNGKey(4), (100_000, 2))
+    rho = autocorrelation(autocovariance(x, 5))
+    assert np.allclose(rho[0], np.eye(2), atol=0.02)
+    assert np.max(np.abs(np.asarray(rho[1:]))) < 0.02
+
+
+def test_yule_walker_recovers_var(var2_data):
+    A, xs = var2_data
+    g = autocovariance(xs, 3, normalization="standard")
+    Ahat, sigma = yule_walker(g, 2)
+    assert float(jnp.max(jnp.abs(Ahat - A))) < 0.02
+    assert np.allclose(np.asarray(sigma), np.eye(3), atol=0.05)
+
+
+def test_block_levinson_matches_dense(var2_data):
+    _, xs = var2_data
+    g = autocovariance(xs, 5, normalization="standard")
+    A_dense, s_dense = yule_walker(g, 4)
+    A_lev, s_lev, pacf = block_levinson(g, 4)
+    np.testing.assert_allclose(A_dense, A_lev, rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(s_dense, s_lev, rtol=1e-3, atol=1e-5)
+
+
+def test_pacf_cutoff_for_ar_p(var2_data):
+    """PACF of an AR(2) vanishes for lags > 2 (paper §3.1 order selection)."""
+    _, xs = var2_data
+    g = autocovariance(xs, 6, normalization="standard")
+    pacf = partial_autocorrelation(g, 5)
+    assert float(jnp.max(jnp.abs(pacf[2:]))) < 0.02  # lags 3..5 ≈ 0
+    assert float(jnp.max(jnp.abs(pacf[1]))) > 0.05  # lag 2 present
+
+
+def test_levinson_durbin_univariate():
+    phi_true = np.array([0.5, -0.3])
+    A = jnp.asarray(phi_true).reshape(2, 1, 1)
+    xs = simulate_var(jax.random.PRNGKey(5), A, 200_000)
+    g = autocovariance(xs, 3, normalization="standard")[:, 0, 0]
+    phi, v, pacf = levinson_durbin(g, 2)
+    np.testing.assert_allclose(phi, phi_true, atol=0.02)
+    assert abs(float(v) - 1.0) < 0.05
+
+
+def test_ma_innovation_recovery():
+    B = jnp.asarray([[[0.5]]])
+    xs = simulate_vma(jax.random.PRNGKey(6), B, 200_000)
+    g = autocovariance(xs, 20, normalization="standard")
+    Bh, sigma = fit_ma(g, 1, m=20)
+    assert abs(float(Bh[0, 0, 0]) - 0.5) < 0.03
+    assert abs(float(sigma[0, 0]) - 1.0) < 0.05
+
+
+def test_arma_exact_from_true_psi():
+    A = random_stable_var(jax.random.PRNGKey(7), 2, 2, radius=0.5)
+    B = random_invertible_ma(jax.random.PRNGKey(8), 1, 2, radius=0.4)
+    psi = arma_psi_weights(A, B, 12)
+    Ah, Bh = solve_arma_from_psi(psi, 2, 1)
+    np.testing.assert_allclose(Ah, A, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(Bh, B, rtol=1e-4, atol=1e-5)
+
+
+def test_arma_statistical_fit():
+    A = random_stable_var(jax.random.PRNGKey(9), 1, 2, radius=0.5)
+    B = random_invertible_ma(jax.random.PRNGKey(10), 1, 2, radius=0.4)
+    xs = simulate_varma(jax.random.PRNGKey(11), A, B, 300_000)
+    g = autocovariance(xs, 30, normalization="standard")
+    Ah, Bh, sig = fit_arma(g, 1, 1, m=25)
+    assert float(jnp.max(jnp.abs(Ah - A))) < 0.05
+    assert float(jnp.max(jnp.abs(Bh - B))) < 0.05
+
+
+def test_mle_gd_matches_least_squares():
+    A = random_stable_var(jax.random.PRNGKey(12), 1, 3, radius=0.6)
+    xs = simulate_var(jax.random.PRNGKey(13), A, 30_000)
+    res = fit_ar_mle(xs, 1, n_steps=150, block_size=4096)
+    assert float(jnp.max(jnp.abs(res.A - A))) < 0.03
+    # NLL trace is monotone decreasing (convex objective + 2/(m+L) step)
+    t = np.asarray(res.nll_trace)
+    assert (np.diff(t) < 1e-6).mean() > 0.95
+
+
+def test_sgd_converges():
+    A = random_stable_var(jax.random.PRNGKey(14), 1, 2, radius=0.6)
+    xs = simulate_var(jax.random.PRNGKey(15), A, 30_000)
+    res = fit_ar_sgd(xs, 1, n_steps=1200, batch=256)
+    assert float(jnp.max(jnp.abs(res.A - A))) < 0.05
+
+
+def test_optimal_step_size_bounds():
+    x = jax.random.normal(jax.random.PRNGKey(16), (5000, 3)) * jnp.asarray([1.0, 2.0, 0.5])
+    lr = float(optimal_step_size(x))
+    c = np.cov(np.asarray(x), rowvar=False)
+    ev = np.linalg.eigvalsh(c)
+    assert lr == pytest.approx(2.0 / (ev[0] + ev[-1]), rel=1e-3)
+
+
+def test_prediction_ar_consistency(var2_data):
+    A, xs = var2_data
+    hist = xs[:100]
+    one = ar_one_step(A, hist)
+    multi = ar_forecast(A, hist, 3)
+    np.testing.assert_allclose(one, multi[0], rtol=1e-5, atol=1e-5)
+
+
+def test_innovations_filter_whitens():
+    """Innovations of the true ARMA model ≈ the driving white noise."""
+    A = random_stable_var(jax.random.PRNGKey(17), 1, 2, radius=0.5)
+    B = random_invertible_ma(jax.random.PRNGKey(18), 1, 2, radius=0.3)
+    xs = simulate_varma(jax.random.PRNGKey(19), A, B, 50_000)
+    _, innov = arma_innovations_filter(A, B, xs)
+    g = autocovariance(innov[500:], 3, normalization="standard")
+    rho = autocorrelation(g)
+    assert float(jnp.max(jnp.abs(rho[1:]))) < 0.03  # serially uncorrelated
+
+
+def test_generator_stability():
+    A = random_stable_var(jax.random.PRNGKey(20), 3, 4, radius=0.8)
+    assert spectral_radius(np.asarray(A)) == pytest.approx(0.8, rel=1e-5)

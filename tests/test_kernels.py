@@ -1,0 +1,124 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret=True vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.banded_matvec import ops as bmv
+from repro.kernels.swa_attention import ops as swa
+from repro.kernels.window_stats import ops as ws
+
+
+# ------------------------------------------------------- window_stats --
+
+
+@pytest.mark.parametrize("n", [64, 1000, 4097])
+@pytest.mark.parametrize("d", [1, 8])
+@pytest.mark.parametrize("max_lag", [0, 7])
+def test_window_stats_shapes(n, d, max_lag):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    got = ws.lagged_sums(x, max_lag, block_t=128, interpret=True)
+    ref = ws.lagged_sums_reference(x, max_lag)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=5e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_window_stats_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(1), (512, 4)).astype(dtype)
+    got = ws.lagged_sums(x, 5, block_t=128, interpret=True)
+    ref = ws.lagged_sums_reference(x, 5)
+    np.testing.assert_allclose(got, ref, rtol=1e-3, atol=1e-2)
+
+
+def test_window_stats_lag_equals_block():
+    x = jax.random.normal(jax.random.PRNGKey(2), (300, 3))
+    got = ws.lagged_sums(x, 16, block_t=16, interpret=True)
+    ref = ws.lagged_sums_reference(x, 16)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=5e-3)
+
+
+def test_window_stats_autocov_matches_core():
+    from repro.core.estimators.stats import autocovariance
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (2048, 6))
+    got = ws.autocovariance(x, 9, block_t=256, interpret=True)
+    ref = autocovariance(x, 9)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------ swa_attention --
+
+
+@pytest.mark.parametrize("window", [1, 16, 70, 4096])
+def test_swa_window_sweep(window):
+    q = jax.random.normal(jax.random.PRNGKey(4), (1, 4, 256, 32))
+    k = jax.random.normal(jax.random.PRNGKey(5), (1, 2, 256, 32))
+    v = jax.random.normal(jax.random.PRNGKey(6), (1, 2, 256, 32))
+    got = swa.swa_attention(q, k, v, window, block_q=64, block_k=64, interpret=True)
+    ref = swa.swa_attention_reference(q, k, v, window)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("s,bq,bk", [(300, 64, 64), (128, 128, 128), (250, 128, 64)])
+def test_swa_shape_sweep(s, bq, bk):
+    q = jax.random.normal(jax.random.PRNGKey(7), (2, 4, s, 16))
+    k = jax.random.normal(jax.random.PRNGKey(8), (2, 4, s, 16))
+    v = jax.random.normal(jax.random.PRNGKey(9), (2, 4, s, 16))
+    got = swa.swa_attention(q, k, v, 50, block_q=bq, block_k=bk, interpret=True)
+    ref = swa.swa_attention_reference(q, k, v, 50)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_dtypes(dtype):
+    q = jax.random.normal(jax.random.PRNGKey(10), (1, 2, 128, 32)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(11), (1, 2, 128, 32)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(12), (1, 2, 128, 32)).astype(dtype)
+    got = swa.swa_attention(q, k, v, 32, interpret=True)
+    ref = swa.swa_attention_reference(q, k, v, 32)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), ref.astype(jnp.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_swa_matches_chunked_model_path():
+    """Kernel == the model's differentiable chunked-halo attention."""
+    from repro.models.attention import _chunked_attention
+
+    b, h, s, hd, w = 1, 4, 256, 16, 48
+    q = jax.random.normal(jax.random.PRNGKey(13), (b, h, s, hd))
+    k = jax.random.normal(jax.random.PRNGKey(14), (b, h, s, hd))
+    v = jax.random.normal(jax.random.PRNGKey(15), (b, h, s, hd))
+    got = swa.swa_attention(q, k, v, w, block_q=64, block_k=64, interpret=True)
+    qg = jnp.moveaxis(q, 1, 2).reshape(b, s, h, 1, hd)  # kvh=h, g=1
+    kk = jnp.moveaxis(k, 1, 2)
+    vv = jnp.moveaxis(v, 1, 2)
+    ref = _chunked_attention(qg, kk, vv, hd**-0.5, window=w, chunk=64)
+    ref = jnp.moveaxis(ref.reshape(b, s, h, hd), 1, 2)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=2e-5)
+
+
+# ------------------------------------------------------ banded_matvec --
+
+
+@pytest.mark.parametrize("d,b,rows", [(500, 5, 128), (64, 1, 64), (1000, 0, 256), (100, 30, 64)])
+def test_banded_sweep(d, b, rows):
+    diags = jax.random.normal(jax.random.PRNGKey(16), (d, 2 * b + 1))
+    x = jax.random.normal(jax.random.PRNGKey(17), (d, 2))
+    got = bmv.banded_matvec(diags, x, block_rows=rows, interpret=True)
+    ref = bmv.banded_matvec_reference(diags, x)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_banded_1d_and_dense_oracle():
+    from repro.core.estimators.spatial import banded_to_dense
+
+    d, b = 200, 3
+    diags = jax.random.normal(jax.random.PRNGKey(18), (d, 2 * b + 1)) * 0.3
+    rows = np.arange(d)[:, None]
+    cols = rows + np.arange(-b, b + 1)[None, :]
+    diags = diags * jnp.asarray((cols >= 0) & (cols < d))
+    x = jax.random.normal(jax.random.PRNGKey(19), (d,))
+    got = bmv.banded_matvec(diags, x, block_rows=64, interpret=True)
+    dense = banded_to_dense(diags)
+    np.testing.assert_allclose(got, dense @ x, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,148 @@
+"""Per-arch reduced-config smoke tests (brief deliverable f) + exact
+prefill/decode/forward consistency across all families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, cell_is_runnable
+from repro.models import cache_spec, decode_step, forward, init_params, prefill
+from repro.models.layers import cross_entropy_loss
+from repro.models.vlm_stub import fake_frame_embeds, fake_patch_embeds
+
+B, S = 2, 64
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(r, key):
+    toks = jax.random.randint(key, (B, S), 0, r.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if r.family == "vlm":
+        batch["tokens"] = toks[:, : S - r.n_patches]
+        batch["patch_embeds"] = fake_patch_embeds(key, B, r.n_patches, r.d_model, jnp.float32)
+    if r.family == "encdec":
+        batch["frames"] = fake_frame_embeds(key, B, S, r.d_model, jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    """init params once per arch (module scoped for speed)."""
+    out = {}
+    for name in ALL_ARCHS:
+        r = ARCHS[name].reduced()
+        out[name] = (r, init_params(jax.random.PRNGKey(3), r, dtype=jnp.float32))
+    return out
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_shapes_and_finite(name, fitted):
+    r, params = fitted[name]
+    batch = _batch(r, jax.random.PRNGKey(4))
+    logits, aux = forward(params, batch, r)
+    assert logits.shape == (B, S, r.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert np.isfinite(float(aux["lb_loss"])) and np.isfinite(float(aux["z_loss"]))
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_one_train_step_no_nans(name, fitted):
+    from repro.training.optimizer import adamw_init
+    from repro.training.train_step import make_train_step
+
+    r, params = fitted[name]
+    batch = _batch(r, jax.random.PRNGKey(5))
+    step = make_train_step(r, lr_fn=1e-3)
+    opt = adamw_init(params)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    finite = jax.tree.map(lambda a: bool(jnp.all(jnp.isfinite(a))), new_params)
+    assert all(jax.tree.leaves(finite))
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_prefill_decode_matches_forward(name, fitted):
+    """prefill(S−1) + decode(token S−1) == forward(S) at the last position."""
+    r, params = fitted[name]
+    batch = _batch(r, jax.random.PRNGKey(6))
+    logits_full, _ = forward(params, batch, r)
+    batch_p = dict(batch)
+    batch_p["tokens"] = batch["tokens"][:, :-1]
+    lg_p, cache = prefill(params, batch_p, r)
+    spec = cache_spec(r, B, S, dtype=jnp.float32)
+
+    def fit(a, s):
+        pads = [(0, sd - ad) for ad, sd in zip(a.shape, s.shape)]
+        if any(p[1] for p in pads):
+            cv = -1 if jnp.issubdtype(a.dtype, jnp.integer) else 0
+            a = jnp.pad(a, pads, constant_values=cv)
+        return a.astype(s.dtype)
+
+    cache = jax.tree.map(fit, cache, spec)
+    pos = jnp.asarray(S - 1, jnp.int32)  # absolute position (incl. patches)
+    db = {"tokens": batch["tokens"][:, -1], "pos": pos}
+    lg_d, _ = decode_step(params, cache, db, r)
+    np.testing.assert_allclose(lg_d, logits_full[:, -1], rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_cache_spec_matches_decode_output(name, fitted):
+    """decode_step must return a cache structurally identical to cache_spec."""
+    r, params = fitted[name]
+    spec = cache_spec(r, B, S, dtype=jnp.float32)
+    zero_cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+    db = {"tokens": jnp.zeros((B,), jnp.int32), "pos": jnp.asarray(3, jnp.int32)}
+    _, new_cache = decode_step(params, zero_cache, db, r)
+    spec_shapes = jax.tree.map(lambda s: (s.shape, s.dtype), spec)
+    got_shapes = jax.tree.map(lambda a: (a.shape, a.dtype), new_cache)
+    assert jax.tree.structure(spec_shapes) == jax.tree.structure(got_shapes)
+    assert jax.tree.leaves(spec_shapes) == jax.tree.leaves(got_shapes)
+
+
+def test_cell_runnability_rules():
+    long = SHAPES_BY_NAME["long_500k"]
+    assert not cell_is_runnable(ARCHS["glm4-9b"], long)[0]
+    assert not cell_is_runnable(ARCHS["llama4-maverick-400b-a17b"], long)[0]
+    assert cell_is_runnable(ARCHS["h2o-danube-1.8b"], long)[0]  # SWA
+    assert cell_is_runnable(ARCHS["xlstm-125m"], long)[0]
+    assert cell_is_runnable(ARCHS["zamba2-7b"], long)[0]
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        for a in ARCHS.values():
+            assert cell_is_runnable(a, SHAPES_BY_NAME[s])[0]
+
+
+def test_cross_entropy_masking():
+    logits = jnp.zeros((1, 4, 10))
+    labels = jnp.asarray([[1, 2, -1, 3]])
+    loss = cross_entropy_loss(logits, labels)
+    assert float(loss) == pytest.approx(np.log(10), rel=1e-5)
+
+
+def test_moe_dispatch_variants_equivalent():
+    """gather dispatch (default) == einsum dispatch (§Perf iteration-0 ref)."""
+    import dataclasses
+
+    from repro.models.moe import moe_apply, moe_init
+
+    base = ARCHS["deepseek-v2-236b"].reduced()
+    p = moe_init(jax.random.PRNGKey(11), base, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(12), (2, 16, base.d_model)) * 0.5
+    cfg_g = dataclasses.replace(base, moe=dataclasses.replace(base.moe, dispatch="gather"))
+    cfg_e = dataclasses.replace(base, moe=dataclasses.replace(base.moe, dispatch="einsum"))
+    y_g, aux_g = moe_apply(p, x, cfg_g)
+    y_e, aux_e = moe_apply(p, x, cfg_e)
+    np.testing.assert_allclose(y_g, y_e, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(aux_g["lb_loss"]), float(aux_e["lb_loss"]), rtol=1e-5)
+
+
+def test_seq_parallel_residual_flag_preserves_math():
+    """B5 residual sharding is a layout hint: identical logits on 1 device."""
+    import dataclasses
+
+    r = ARCHS["qwen3-0.6b"].reduced()
+    p = init_params(jax.random.PRNGKey(13), r, dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(14), (2, 32), 0, r.vocab)
+    l1, _ = forward(p, {"tokens": toks}, r)
+    r2 = dataclasses.replace(r, seq_parallel_residual=True)
+    l2, _ = forward(p, {"tokens": toks}, r2)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6, atol=1e-6)

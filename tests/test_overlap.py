@@ -1,0 +1,66 @@
+"""Overlapping block data structure (paper §10) — construction invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.overlap import (
+    OverlapSpec,
+    block_core,
+    core_mask,
+    make_overlapping_blocks,
+    reconstruct,
+    replication_overhead,
+)
+
+
+@pytest.mark.parametrize("n,bs,hl,hr", [(100, 10, 3, 5), (97, 16, 0, 7), (64, 64, 2, 2), (10, 3, 4, 4)])
+def test_roundtrip(n, bs, hl, hr):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, 4))
+    spec = OverlapSpec(n=n, block_size=bs, h_left=hl, h_right=hr)
+    blocks, mask = make_overlapping_blocks(x, spec)
+    assert blocks.shape == (spec.num_blocks, spec.padded_width, 4)
+    np.testing.assert_allclose(reconstruct(blocks, spec), x, rtol=0, atol=0)
+
+
+def test_halo_slots_are_replicas():
+    n, bs, h = 64, 16, 4
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, 2))
+    spec = OverlapSpec(n=n, block_size=bs, h_left=h, h_right=h)
+    blocks, mask = make_overlapping_blocks(x, spec)
+    # block i's left halo == block i-1's core tail
+    for i in range(1, spec.num_blocks):
+        np.testing.assert_array_equal(
+            blocks[i, :h], blocks[i - 1, h + bs - h : h + bs]
+        )
+
+
+def test_boundary_zero_fill():
+    x = jnp.ones((20, 1))
+    spec = OverlapSpec(n=20, block_size=5, h_left=2, h_right=3)
+    blocks, mask = make_overlapping_blocks(x, spec)
+    assert float(blocks[0, :2].sum()) == 0.0  # before series start
+    assert float(blocks[-1, -3:].sum()) == 0.0  # past series end
+    assert not bool(mask[0, 0]) and bool(mask[0, 2])
+
+
+def test_replication_overhead_formula():
+    spec = OverlapSpec(n=1000, block_size=100, h_left=5, h_right=5)
+    ov = replication_overhead(spec)
+    assert ov == pytest.approx(10 * 110 / 1000 - 1.0)
+
+
+def test_core_mask_tail_padding():
+    spec = OverlapSpec(n=10, block_size=4, h_left=1, h_right=1)
+    m = core_mask(spec)
+    assert m.shape == (3, 4)
+    assert m[:2].all() and list(m[2]) == [True, True, False, False]
+
+
+def test_invalid_specs_raise():
+    with pytest.raises(ValueError):
+        OverlapSpec(n=0, block_size=4, h_left=0, h_right=0)
+    with pytest.raises(ValueError):
+        OverlapSpec(n=10, block_size=0, h_left=0, h_right=0)
+    with pytest.raises(ValueError):
+        OverlapSpec(n=10, block_size=4, h_left=-1, h_right=0)

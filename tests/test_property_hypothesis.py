@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.differencing import difference, integrate
+from repro.core.mapreduce import block_window_map_reduce, serial_window_map_reduce
+from repro.core.overlap import OverlapSpec, make_overlapping_blocks, reconstruct
+from repro.training.compression import compress_int8, decompress_int8
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    n=st.integers(8, 300),
+    bs=st.integers(1, 64),
+    hl=st.integers(0, 8),
+    hr=st.integers(0, 8),
+    d=st.integers(1, 4),
+)
+@settings(**SETTINGS)
+def test_overlap_roundtrip_any_geometry(n, bs, hl, hr, d):
+    """make_overlapping_blocks ∘ reconstruct == id for every admissible spec."""
+    x = jax.random.normal(jax.random.PRNGKey(n * 7 + bs), (n, d))
+    spec = OverlapSpec(n=n, block_size=bs, h_left=hl, h_right=hr)
+    blocks, _ = make_overlapping_blocks(x, spec)
+    np.testing.assert_array_equal(np.asarray(reconstruct(blocks, spec)), np.asarray(x))
+
+
+@given(
+    n=st.integers(20, 200),
+    bs=st.integers(4, 50),
+    hl=st.integers(0, 5),
+    hr=st.integers(0, 5),
+)
+@settings(**SETTINGS)
+def test_blocked_reduction_equals_serial_any_geometry(n, bs, hl, hr):
+    """The paper's central claim, as a property over all geometries."""
+    if n - hl - hr <= 0:
+        return
+    x = jax.random.normal(jax.random.PRNGKey(n * 13 + bs), (n, 2))
+    kern = lambda w: (jnp.sum(w * w), jnp.outer(w[0], w[-1]))
+    s = serial_window_map_reduce(kern, x, hl, hr)
+    b = block_window_map_reduce(
+        kern, x, OverlapSpec(n=n, block_size=bs, h_left=hl, h_right=hr)
+    )
+    np.testing.assert_allclose(s[0], b[0], rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(s[1], b[1], rtol=1e-4, atol=1e-3)
+
+
+@given(order=st.integers(1, 3), n=st.integers(10, 100))
+@settings(**SETTINGS)
+def test_difference_integrate_inverse(order, n):
+    if n <= order:
+        return
+    x = jnp.cumsum(jax.random.normal(jax.random.PRNGKey(n), (n, 2)), axis=0)
+    dx = difference(x, order)
+    initial = jnp.stack([difference(x, k)[0] for k in range(order)])
+    back = integrate(dx, initial, order)
+    # repeated f32 cumsum amplifies roundoff with order; scale the tolerance
+    scale = float(jnp.max(jnp.abs(x))) * n ** (order - 1) + 1.0
+    np.testing.assert_allclose(back, x, rtol=1e-4, atol=1e-5 * scale)
+
+
+@given(scale=st.floats(1e-3, 1e3), n=st.integers(10, 2000))
+@settings(**SETTINGS)
+def test_int8_quantization_error_bound(scale, n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,)) * scale
+    codes, s = compress_int8(x)
+    back = decompress_int8(codes, s, x.shape)
+    blockmax = np.asarray(s).reshape(-1) * 127.0
+    err = np.abs(np.asarray(back - x))
+    per_block_bound = np.repeat(np.asarray(s).reshape(-1), 256)[:n] * 0.5 + 1e-9
+    assert (err <= per_block_bound).all()
+
+
+@given(
+    dims=st.lists(st.sampled_from([2, 3, 4, 6, 8, 16, 30]), min_size=1, max_size=3)
+)
+@settings(**SETTINGS)
+def test_logical_spec_divisibility_fallback(dims):
+    """logical_to_spec never produces a spec whose mesh axes don't divide."""
+    import math
+
+    from repro.parallel.sharding import logical_to_spec, mesh_axis_size
+
+    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    spec = logical_to_spec(["batch", "heads", "ff"][: len(dims)], dims, mesh)
+    for dim, entry in zip(dims, spec):
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        assert dim % mesh_axis_size(mesh, names) == 0
+
+
+@given(h=st.integers(0, 6), n=st.integers(30, 120))
+@settings(**SETTINGS)
+def test_autocov_transpose_symmetry(h, n):
+    """γ̂(-h) = γ̂(h)ᵀ consistency: raw sums S(h) of x equal S(h)ᵀ of reversed x."""
+    from repro.core.estimators.stats import raw_lag_sums
+
+    if h >= n - 1:
+        return
+    x = jax.random.normal(jax.random.PRNGKey(h * 31 + n), (n, 3))
+    s = raw_lag_sums(x, h)[-1]
+    s_rev = raw_lag_sums(x[::-1], h)[-1]
+    np.testing.assert_allclose(s, s_rev.T, rtol=1e-4, atol=1e-3)

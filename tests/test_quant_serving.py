@@ -1,0 +1,69 @@
+"""Weight-only int8 serving quantization (§Perf C3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import forward, init_params
+from repro.serving.quant import (
+    QuantTensor,
+    dequantize_tree,
+    quantize_leaf,
+    quantize_tree,
+    tree_param_bytes,
+)
+
+
+def test_quantize_roundtrip_error():
+    w = jax.random.normal(jax.random.PRNGKey(0), (512, 256))
+    q = quantize_leaf(w)
+    back = (q.codes.astype(jnp.float32) * q.scale)
+    err = jnp.abs(back - w)
+    step = jnp.broadcast_to(q.scale, w.shape)
+    assert bool(jnp.all(err <= step * 0.5 + 1e-6))
+
+
+def test_tree_quantization_selective_and_smaller():
+    r = ARCHS["qwen3-0.6b"].reduced()
+    params = init_params(jax.random.PRNGKey(1), r, dtype=jnp.float32)
+    qp = quantize_tree(params)
+    # embedding (512×64=32768 < threshold) stays fp in reduced config; check
+    # at least SOME leaves quantized for a wider model
+    big = init_params(jax.random.PRNGKey(1), ARCHS["qwen3-0.6b"], dtype=jnp.bfloat16)
+    # use eval_shape-scale? full init is heavy; use a 2-layer variant
+    import dataclasses
+
+    cfg2 = dataclasses.replace(ARCHS["qwen3-0.6b"], n_layers=2)
+    big = init_params(jax.random.PRNGKey(1), cfg2, dtype=jnp.bfloat16)
+    qbig = quantize_tree(big)
+    n_q = sum(
+        isinstance(l, QuantTensor)
+        for l in jax.tree.leaves(qbig, is_leaf=lambda l: isinstance(l, QuantTensor))
+    )
+    assert n_q >= 5
+    assert tree_param_bytes(qbig) < 0.6 * tree_param_bytes(big)
+
+
+def test_quantized_generation_close_to_fp():
+    """Greedy generation with int8 weights matches fp argmax on most steps
+    (random init is unusually quant-sensitive; trained nets do better)."""
+    r = ARCHS["h2o-danube-1.8b"].reduced()
+    params = init_params(jax.random.PRNGKey(2), r, dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 24), 0, r.vocab)
+    logits_fp, _ = forward(params, {"tokens": toks}, r)
+    qp = dequantize_tree(quantize_tree(params), dtype=jnp.float32)
+    logits_q, _ = forward(qp, {"tokens": toks}, r)
+    # logits close in the metric that matters for sampling
+    top_fp = jnp.argmax(logits_fp, -1)
+    top_q = jnp.argmax(logits_q, -1)
+    agree = float(jnp.mean(top_fp == top_q))
+    assert agree > 0.9, agree
+
+
+def test_dequantize_preserves_structure():
+    r = ARCHS["xlstm-125m"].reduced()
+    params = init_params(jax.random.PRNGKey(4), r, dtype=jnp.float32)
+    qp = quantize_tree(params)
+    back = dequantize_tree(qp, dtype=jnp.float32)
+    assert jax.tree.structure(back) == jax.tree.structure(params)

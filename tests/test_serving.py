@@ -1,0 +1,64 @@
+"""Serving engine: batched greedy generation == step-by-step full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import forward, init_params
+from repro.models.vlm_stub import fake_frame_embeds
+from repro.serving.engine import ServeEngine
+
+
+def _greedy_by_full_forward(params, cfg, prompts, max_new, extra=None):
+    toks = prompts
+    out = []
+    for _ in range(max_new):
+        batch = {"tokens": toks, **(extra or {})}
+        logits, _ = forward(params, batch, cfg)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        out.append(nxt)
+        toks = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    return np.stack([np.asarray(t) for t in out], axis=1)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "h2o-danube-1.8b", "zamba2-7b", "xlstm-125m"])
+def test_generate_matches_full_forward(arch):
+    r = ARCHS[arch].reduced()
+    params = init_params(jax.random.PRNGKey(0), r, dtype=jnp.float32)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, r.vocab)
+    eng = ServeEngine(r, params, max_len=32)
+    got = eng.generate(prompts, max_new=6).tokens
+    ref = _greedy_by_full_forward(params, r, prompts, 6)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_generate_encdec():
+    r = ARCHS["whisper-base"].reduced()
+    params = init_params(jax.random.PRNGKey(2), r, dtype=jnp.float32)
+    frames = fake_frame_embeds(jax.random.PRNGKey(3), 2, 16, r.d_model, jnp.float32)
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0, r.vocab)
+    eng = ServeEngine(r, params, max_len=24)
+    got = eng.generate(prompts, max_new=4, extra={"frames": frames}).tokens
+    ref = _greedy_by_full_forward(params, r, prompts, 4, extra={"frames": frames})
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_generate_rejects_overflow():
+    r = ARCHS["qwen3-0.6b"].reduced()
+    params = init_params(jax.random.PRNGKey(5), r, dtype=jnp.float32)
+    eng = ServeEngine(r, params, max_len=16)
+    prompts = jnp.zeros((1, 14), jnp.int32)
+    with pytest.raises(ValueError):
+        eng.generate(prompts, max_new=8)
+
+
+def test_generate_quantized_engine():
+    """int8 ServeEngine produces valid generations (structure + finiteness)."""
+    r = ARCHS["qwen3-0.6b"].reduced()
+    params = init_params(jax.random.PRNGKey(7), r, dtype=jnp.float32)
+    prompts = jax.random.randint(jax.random.PRNGKey(8), (2, 10), 0, r.vocab)
+    eng_q = ServeEngine(r, params, max_len=24, quantize=True)
+    out = eng_q.generate(prompts, max_new=5)
+    assert out.tokens.shape == (2, 5)
+    assert (out.tokens >= 0).all() and (out.tokens < r.vocab).all()

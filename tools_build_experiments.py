@@ -1,0 +1,121 @@
+"""Assemble EXPERIMENTS.md from results/dryrun + results/dryrun_opt + the
+handwritten §Perf narrative.  Rerun after refreshing dry-run JSONs.
+
+  PYTHONPATH=src python tools_build_experiments.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+
+from repro.launch import report
+from repro.launch.dryrun import RESULTS_DIR
+
+OPT_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun_opt")
+
+HEADER = """# EXPERIMENTS
+
+Paper: *Embarrassingly Parallel Time Series Analysis for Large Scale Weak
+Memory Systems* (Belletti et al.).  This file records (§Repro) the
+paper-claim validations, (§Dry-run) the multi-pod compile proof for all 40
+assigned (arch × shape) cells on both production meshes, (§Roofline) the
+three-term analysis per cell, and (§Perf) the hypothesis→change→measure log
+— paper-faithful baseline and beyond-paper optimized variants SEPARATELY.
+
+Hardware model (TPU v5e, per brief): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+4×50 GB/s ICI links/chip.  This container is CPU-only: all numbers are
+derived from AOT-compiled artifacts (`.lower().compile()`), not wall time.
+
+**Methodology caveats (verified, see DESIGN.md §8 and launch/costing.py):**
+1. `cost_analysis()` counts scan bodies once — all FLOP/byte/wire numbers
+   below are *calibrated* by lowering each cell python-unrolled at two
+   depths and extrapolating (exact for these homogeneous stacks).
+2. `bytes accessed` from the CPU backend is fusion-blind and inserts
+   bf16→f32 weight converts that TPUs don't need (MXU reads bf16 natively);
+   measured ×~3 inflation on decode cells.  T_memory is therefore an upper
+   bound; *relative* changes remain meaningful and are what §Perf reports.
+3. Collective wire bytes are parsed from post-SPMD HLO with ring-algorithm
+   multipliers (all-reduce 2×, gather/scatter 1×, permute 1×).
+
+## §Repro — paper-claim validation (CPU-run, tests + benchmarks)
+
+| paper claim | result | where |
+|---|---|---|
+| overlapping blocks reconstruct the series exactly | exact (property-tested over all geometries) | tests/test_overlap.py, test_property_hypothesis.py |
+| block map-reduce ≡ serial estimator (the central claim) | exact to f32 roundoff, any (N, P, H), nonlinear kernels incl. | tests/test_mapreduce.py |
+| replication overhead = (P−1)·H/N | 2.48% at P=25, H=6, N=200k | examples/quickstart.py |
+| autocovariance → Yule-Walker recovers VAR(p) | ‖Â−A‖∞ = 0.0057 at N=2e5 (≈1/√N) | tests/test_estimators.py |
+| 1/√N convergence (§2) | fitted exponent −0.49 (YW), −0.43 (MA) | benchmarks/bench_accuracy.py (bench_output.txt) |
+| innovation algorithm fits MA(q) (§3.3) | B̂ = 0.5001 vs 0.5, Σ̂ = 0.997 vs 1 at N=3e5 | tests/test_estimators.py |
+| ARMA via innovations+Toeplitz (§3.4) | exact from true Ψ; ≤0.05 statistical at N=3e5 | tests/test_estimators.py |
+| PACF cuts off after p (§3.1) | AR(2): PACF(3..5) < 0.02 | tests/test_estimators.py |
+| Z-estimator GD with 2/(m+L) step (§6.3) | monotone NLL descent, matches least-squares | tests/test_estimators.py |
+| SGD with hyperbolic decay (§5.1.3) | ‖Â−A‖∞ < 0.05 in 1200 steps | tests/test_estimators.py |
+| banded predictor partition-exact (§6.1) | bit-exact across 2/4/8 partitions | tests/test_spatial_graphs.py |
+| block-diag precision separates likelihood (§6.2) | exact | tests/test_spatial_graphs.py |
+| graph (H,K) map-reduce ≡ serial (§9) | exact on grid/line graphs | tests/test_spatial_graphs.py |
+| traffic DBN is (1,1)-local (§11.1.1) | far perturbations don't affect local updates | tests/test_spatial_graphs.py |
+| GPU shared-memory windows (§12, Fig. 9) → VMEM | Pallas window_stats ≡ oracle (interpret=True) | tests/test_kernels.py |
+| long-memory reduction by finite-support kernel (§10.3) | truncated (1−L)^d whitens ARFIMA(0,0.4,0): max ρ 0.60 → <0.05 | tests/test_system.py |
+| overlap structure reused for spectral estimation (beyond-paper) | Welch PSD: Parseval ±5%, AR(1) spectrum ±10% | tests/test_spectral.py |
+| halo exchange ≡ pre-replication (beyond-paper) | bit-identical on 8-device mesh | tests/test_distributed.py |
+
+"""
+
+PERF = open(os.path.join(os.path.dirname(__file__), "EXPERIMENTS_PERF.md")).read()
+
+
+def cap(fn, *a):
+    import io
+    from contextlib import redirect_stdout
+
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        fn(*a)
+    return buf.getvalue()
+
+
+def main():
+    out = [HEADER]
+    out.append("## §Dry-run — baseline (paper-faithful code path)\n")
+    out.append("Every runnable cell lowers AND compiles on both meshes; 7 cells/mesh are\n"
+               "skipped by the brief's long_500k rule (noted per row).  'fits v5e?' uses\n"
+               "peak = args+temp+out vs 16 GB; MoE-400B-class training genuinely needs\n"
+               ">256 chips — the dry-run proves the sharding is coherent, the memory row\n"
+               "says how much hardware the cell actually requires.\n")
+    out.append("### single pod 16×16 (256 chips)\n")
+    out.append("\n".join(report.dryrun_table("pod16x16")))
+    out.append("\n### multi-pod 2×16×16 (512 chips)\n")
+    out.append("\n".join(report.dryrun_table("pod2x16x16")))
+
+    out.append("\n## §Roofline — baseline, single pod, calibrated\n")
+    out.append("\n".join(report.roofline_table()))
+    out.append("\n### collective schedule (calibrated per-step counts)\n")
+    out.append("\n".join(report.collective_table("pod16x16")))
+
+    # optimized tables if present
+    if os.path.isdir(OPT_DIR) and len(os.listdir(OPT_DIR)) > 10:
+        old = report.RESULTS_DIR
+        report.RESULTS_DIR = OPT_DIR
+        try:
+            out.append("\n## §Dry-run / §Roofline — OPTIMIZED code path "
+                       "(sort-dispatch MoE, non-absorbed-MLA train, fused CE, donation)\n")
+            out.append("### single pod 16×16\n")
+            out.append("\n".join(report.dryrun_table("pod16x16")))
+            out.append("\n### multi-pod 2×16×16\n")
+            out.append("\n".join(report.dryrun_table("pod2x16x16")))
+            out.append("\n### roofline (optimized, calibrated)\n")
+            out.append("\n".join(report.roofline_table()))
+        finally:
+            report.RESULTS_DIR = old
+
+    out.append("\n" + PERF)
+    path = os.path.join(os.path.dirname(__file__), "EXPERIMENTS.md")
+    with open(path, "w") as f:
+        f.write("\n".join(out))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()
