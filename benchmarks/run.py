@@ -9,6 +9,7 @@ import traceback
 
 MODULES = [
     "bench_autocov",        # paper Fig. 2 (+ Fig. 9 kernel check)
+    "bench_streaming",      # streaming monoid: chunked + multi-series paths
     "bench_overlap_scaling",  # paper Fig. 4
     "bench_mle",            # paper §5 / §7.2 Z-estimators
     "bench_spatial",        # paper §6 banded high-d

@@ -11,10 +11,13 @@ from .stats import (
     autocovariance_sharded,
     autocorrelation,
     partial_autocorrelation,
+    lag_sum_engine,
+    streaming_autocovariance,
+    streaming_mean,
 )
-from .yule_walker import yule_walker, levinson_durbin, block_levinson
+from .yule_walker import yule_walker, levinson_durbin, block_levinson, streaming_yule_walker
 from .innovation import innovation_algorithm, fit_ma
-from .arma import fit_arma, arma_psi_weights
+from .arma import fit_arma, arma_psi_weights, fit_arma_streaming
 from .mle import (
     ar_conditional_nll,
     fit_ar_mle,
@@ -29,7 +32,7 @@ from .spatial import (
     SpatialPartition,
 )
 from .prediction import ar_one_step, ar_forecast, arma_innovations_filter, arma_forecast
-from .spectral import welch_psd, welch_csd, hann_window
+from .spectral import welch_psd, welch_csd, hann_window, welch_engine, streaming_welch
 
 __all__ = [
     "mean",
@@ -38,13 +41,20 @@ __all__ = [
     "autocovariance_sharded",
     "autocorrelation",
     "partial_autocorrelation",
+    "lag_sum_engine",
+    "streaming_autocovariance",
+    "streaming_mean",
     "yule_walker",
     "levinson_durbin",
     "block_levinson",
+    "streaming_yule_walker",
     "innovation_algorithm",
     "fit_ma",
     "fit_arma",
     "arma_psi_weights",
+    "fit_arma_streaming",
+    "welch_engine",
+    "streaming_welch",
     "ar_conditional_nll",
     "fit_ar_mle",
     "fit_ar_sgd",

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from .innovation import innovation_algorithm
 
-__all__ = ["arma_psi_weights", "solve_arma_from_psi", "fit_arma"]
+__all__ = ["arma_psi_weights", "solve_arma_from_psi", "fit_arma", "fit_arma_streaming"]
 
 
 def arma_psi_weights(A: jax.Array, B: jax.Array, n_weights: int) -> jax.Array:
@@ -110,3 +110,30 @@ def fit_arma(
     )
     A, B = solve_arma_from_psi(psi, p, q)
     return A, B, V[m]
+
+
+def fit_arma_streaming(
+    engine,
+    state,
+    p: int,
+    q: int,
+    m: int | None = None,
+    normalization: str = "standard",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fit ARMA(p, q) from a streaming lag-sum PartialState.
+
+    Same innovations + block-Hankel pipeline as :func:`fit_arma`, but the
+    γ̂ input comes from the mergeable streaming sufficient statistic
+    (`estimators.stats.lag_sum_engine`) instead of a materialized series.
+    ``engine.h_right`` must cover the recursion depth (≥ m, default p+q).
+    """
+    m_eff = max(m if m is not None else p + q, p + q)
+    if engine.h_right < m_eff:
+        raise ValueError(
+            f"state tracks lags 0..{engine.h_right}, innovation recursion "
+            f"needs {m_eff}"
+        )
+    from .stats import streaming_autocovariance
+
+    gamma = streaming_autocovariance(engine, state, normalization)
+    return fit_arma(gamma, p, q, m_eff)

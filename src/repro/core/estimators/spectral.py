@@ -17,12 +17,32 @@ import jax
 import jax.numpy as jnp
 
 from ..overlap import OverlapSpec, make_overlapping_blocks
+from ..streaming import PartialState, StreamingEngine
 
-__all__ = ["hann_window", "welch_psd", "welch_csd", "ar1_theoretical_psd"]
+__all__ = [
+    "hann_window",
+    "welch_psd",
+    "welch_csd",
+    "ar1_theoretical_psd",
+    "welch_engine",
+    "streaming_welch",
+]
 
 
 def hann_window(n: int) -> jax.Array:
     return 0.5 - 0.5 * jnp.cos(2 * jnp.pi * jnp.arange(n) / n)
+
+
+def _one_sided(psd: jax.Array, nperseg: int, fs: float) -> Tuple[jax.Array, jax.Array]:
+    """Two-sided → one-sided: double all bins but DC (and Nyquist when
+    ``nperseg`` is even); return (freqs, psd).  Shared by the batch and
+    streaming Welch paths so the convention can never desynchronize."""
+    nfreq = psd.shape[0]
+    mult = jnp.ones((nfreq,)).at[1:].set(2.0)
+    if nperseg % 2 == 0:
+        mult = mult.at[-1].set(1.0)
+    freqs = jnp.fft.rfftfreq(nperseg, d=1.0 / fs)
+    return freqs, psd * mult[:, None]
 
 
 def _segments(x: jax.Array, nperseg: int, overlap: int) -> jax.Array:
@@ -63,14 +83,7 @@ def welch_psd(
         return (jnp.abs(f) ** 2) * scale
 
     psd = jnp.mean(jax.vmap(kernel)(segs), axis=0)
-    # one-sided: double everything except DC (and Nyquist when nperseg even)
-    nfreq = psd.shape[0]
-    mult = jnp.ones((nfreq,)).at[1:].set(2.0)
-    if nperseg % 2 == 0:
-        mult = mult.at[-1].set(1.0)
-    psd = psd * mult[:, None]
-    freqs = jnp.fft.rfftfreq(nperseg, d=1.0 / fs)
-    return freqs, psd
+    return _one_sided(psd, nperseg, fs)
 
 
 def welch_csd(
@@ -95,6 +108,58 @@ def welch_csd(
     csd = jnp.mean(jax.vmap(kernel)(segs), axis=0)
     freqs = jnp.fft.rfftfreq(nperseg, d=1.0 / fs)
     return freqs, csd
+
+
+def welch_engine(
+    nperseg: int = 256,
+    overlap: Optional[int] = None,
+    d: int = 1,
+    fs: float = 1.0,
+) -> StreamingEngine:
+    """Streaming engine accumulating Welch periodogram-segment partials.
+
+    A Welch segment is a width-``nperseg`` window starting at global
+    multiples of ``step = nperseg - overlap`` — i.e. an order-(0, nperseg-1)
+    weak-memory kernel with ``stride=step``.  The engine's global start
+    indices keep segment alignment exact across chunk boundaries and
+    merges, so the streamed estimate matches :func:`welch_psd` on the
+    concatenated series (segments straddling a chunk boundary are recovered
+    from the carried halos).  ``state.stat`` holds the running segment-PSD
+    sum and segment count.
+    """
+    overlap = nperseg // 2 if overlap is None else overlap
+    if not 0 <= overlap < nperseg:
+        raise ValueError(f"need 0 <= overlap < nperseg, got {overlap}/{nperseg}")
+    step = nperseg - overlap
+    w = hann_window(nperseg)
+    scale = 1.0 / (fs * jnp.sum(w**2))
+
+    def kernel(seg):  # (nperseg, d) → per-segment periodogram + count
+        f = jnp.fft.rfft((seg - seg.mean(axis=0)) * w[:, None], axis=0)
+        return {"psd": (jnp.abs(f) ** 2) * scale, "n_seg": jnp.asarray(1.0)}
+
+    engine = StreamingEngine(
+        d=d, h_left=0, h_right=nperseg - 1, kernel=kernel, stride=step
+    )
+    engine.welch_fs = fs  # carried to streaming_welch so the frequency grid
+    # and the per-segment density scale can never disagree
+    return engine
+
+
+def streaming_welch(
+    engine: StreamingEngine, state: PartialState
+) -> Tuple[jax.Array, jax.Array]:
+    """Finalize Welch partials into (freqs, one-sided psd (nfreq, d)).
+
+    The sample rate is read from the engine (set at :func:`welch_engine`
+    construction), where it already entered the per-segment scale.
+
+    If the state has absorbed fewer samples than one full segment
+    (``n_seg == 0``) the PSD is undefined and every bin is NaN — check
+    ``state.stat["n_seg"]`` before trusting early-stream queries.
+    """
+    psd = state.stat["psd"] / state.stat["n_seg"]
+    return _one_sided(psd, engine.window, engine.welch_fs)
 
 
 def ar1_theoretical_psd(phi: float, sigma2: float, freqs: jax.Array) -> jax.Array:

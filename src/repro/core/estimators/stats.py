@@ -11,6 +11,14 @@ and its h-shifted padded view — this is the TPU adaptation of the paper's
 per-thread GPU kernel (one MXU matmul computes every center of the block at
 once; the halo makes the shifted view local).  `repro.kernels.window_stats`
 implements the same contraction as an explicit Pallas VMEM kernel.
+
+A fourth, *streaming* path (`core.streaming`) computes the same statistic
+over data arriving in chunks of arbitrary uneven sizes:
+:func:`lag_sum_engine` builds a `StreamingEngine` whose chunk kernel is the
+same lagged matmul, and :func:`streaming_autocovariance` finalizes a
+`PartialState` into γ̂ — equal to the serial estimator within float
+round-off (the ragged end-of-series terms are recovered from the state's
+carried tail halo).
 """
 from __future__ import annotations
 
@@ -21,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..overlap import OverlapSpec, make_overlapping_blocks
+from ..streaming import PartialState, StreamingEngine
 
 Normalization = Literal["paper", "standard"]
 
@@ -34,6 +43,9 @@ __all__ = [
     "autocorrelation",
     "partial_autocorrelation",
     "gamma_normalizer",
+    "lag_sum_engine",
+    "streaming_autocovariance",
+    "streaming_mean",
 ]
 
 
@@ -167,15 +179,89 @@ def autocovariance_sharded(
     statistic is reduced.  This is the paper's core scaling claim.
     """
 
+    from ...parallel.sharding import psum_tree, shard_map_compat
+
     def local(blocks_local):
         partial = block_lag_sums(blocks_local, spec, max_lag)
-        return jax.lax.psum(jnp.sum(partial, axis=0), axis)
+        return psum_tree(jnp.sum(partial, axis=0), axis)
 
-    s = jax.shard_map(local, mesh=mesh, in_specs=P(axis), out_specs=P(), check_vma=False)(
-        blocks
-    )
+    s = shard_map_compat(local, mesh=mesh, in_specs=P(axis), out_specs=P())(blocks)
     norm = gamma_normalizer(spec.n, max_lag, normalization)
     return s * norm[:, None, None]
+
+
+def _lag_sum_chunk_kernel(max_lag: int):
+    """Masked-window lag sums in the MXU matmul form (ChunkKernel contract).
+
+    For y_padded (L + max_lag, d) and start_mask (L,):
+    S(h) = Σ_{s: mask[s]} y_s y_{s+h}ᵀ — one lagged matmul per lag, never a
+    per-center vmap (same contraction as :func:`block_lag_sums`).
+    """
+
+    def ck(y_padded: jax.Array, start_mask: jax.Array) -> jax.Array:
+        L = start_mask.shape[0]
+        head = jnp.where(start_mask[:, None], y_padded[:L], 0.0)
+
+        def one(h):
+            shifted = jax.lax.dynamic_slice_in_dim(y_padded, h, L, axis=0)
+            return jnp.einsum("ti,tj->ij", head, shifted)
+
+        return jax.vmap(one)(jnp.arange(max_lag + 1))
+
+    return ck
+
+
+def lag_sum_engine(max_lag: int, d: int) -> StreamingEngine:
+    """Streaming engine for the lag-sum sufficient statistic S(0..max_lag).
+
+    ``state.stat`` is (max_lag+1, d, d); each chunk update carries only the
+    last ``max_lag`` samples of context.  Finalize with
+    :func:`streaming_autocovariance` (γ̂, feeds Yule-Walker/ARMA) or read
+    the raw windowed sums directly.
+    """
+    return StreamingEngine(
+        d=d, h_left=0, h_right=max_lag, chunk_kernel=_lag_sum_chunk_kernel(max_lag)
+    )
+
+
+def _ragged_tail_lag_sums(tail: jax.Array, max_lag: int) -> jax.Array:
+    """End-of-series correction: Σ_{j} t_j t_{j+h}ᵀ over the carried tail.
+
+    The windowed stream counts only starts with a *full* forward window
+    (s ≤ n-1-max_lag); the serial :func:`raw_lag_sums` is ragged — lag h
+    keeps starts up to n-1-h.  The missing pairs live entirely within the
+    last ``max_lag`` samples, i.e. in ``state.tail`` (right-aligned, zero
+    where invalid, so the masked rows vanish from the products).
+    """
+    H = max_lag
+    tpad = jnp.concatenate([tail, jnp.zeros_like(tail)])
+
+    def one(h):
+        shifted = jax.lax.dynamic_slice_in_dim(tpad, h, H, axis=0)
+        return jnp.einsum("ti,tj->ij", tail, shifted)
+
+    return jax.vmap(one)(jnp.arange(H + 1))
+
+
+def streaming_autocovariance(
+    engine: StreamingEngine,
+    state: PartialState,
+    normalization: Normalization = "paper",
+) -> jax.Array:
+    """Finalize a lag-sum PartialState into γ̂(0..max_lag): (H+1, d, d).
+
+    Equivalent to :func:`autocovariance` on the concatenated stream (the
+    cross-strategy equivalence suite pins this to 1e-5).
+    """
+    H = engine.h_right
+    s = state.stat + _ragged_tail_lag_sums(state.tail, H)
+    norm = gamma_normalizer(state.length, H, normalization)
+    return s * norm[:, None, None]
+
+
+def streaming_mean(state: PartialState) -> jax.Array:
+    """μ̂ from any PartialState — the order-0 rolling statistic."""
+    return state.sample_sum / state.length
 
 
 def autocorrelation(gamma: jax.Array) -> jax.Array:

@@ -25,7 +25,14 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["yule_walker", "levinson_durbin", "block_levinson", "_block_toeplitz", "_stack_rhs"]
+__all__ = [
+    "yule_walker",
+    "levinson_durbin",
+    "block_levinson",
+    "streaming_yule_walker",
+    "_block_toeplitz",
+    "_stack_rhs",
+]
 
 
 def _gamma_at(gamma: jax.Array, h: int) -> jax.Array:
@@ -66,6 +73,33 @@ def yule_walker(gamma: jax.Array, p: int) -> Tuple[jax.Array, jax.Array]:
     A = jnp.stack([sol[i * d : (i + 1) * d, :].T for i in range(p)])
     sigma = gamma[0] - sum(A[i] @ gamma[i + 1] for i in range(p))
     return A, sigma
+
+
+def streaming_yule_walker(
+    engine, state, p: int, normalization: str = "standard"
+) -> Tuple[jax.Array, jax.Array]:
+    """YW solve straight from a streaming lag-sum PartialState.
+
+    The state is the mergeable sufficient statistic
+    (`estimators.stats.lag_sum_engine`); only γ̂ finalization touches it —
+    the solve itself never sees the raw series (paper's point, now rolling).
+
+    Args:
+      engine: the `StreamingEngine` the state was built with
+        (``engine.h_right`` must be ≥ p).
+      state: lag-sum PartialState.
+      p: AR order.
+
+    Returns: (A (p, d, d), sigma (d, d)) — as :func:`yule_walker`.
+    """
+    if engine.h_right < p:
+        raise ValueError(
+            f"state tracks lags 0..{engine.h_right}, need {p} for order-{p} YW"
+        )
+    from .stats import streaming_autocovariance
+
+    gamma = streaming_autocovariance(engine, state, normalization)
+    return yule_walker(gamma[: p + 1], p)
 
 
 def levinson_durbin(gamma: jax.Array, p: int) -> Tuple[jax.Array, jax.Array, jax.Array]:

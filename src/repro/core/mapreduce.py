@@ -22,6 +22,18 @@ Estimators that admit a faster algebraic form (autocovariance = lagged
 matmuls feeding the MXU) bypass the per-center vmap and implement a *block
 kernel* directly; see `repro.core.estimators.stats` and
 `repro.kernels.window_stats`.
+
+A fourth strategy lives in `repro.core.streaming`: the same ⊕ exposed as an
+explicit **PartialState monoid** (init / update(chunk) / merge / finalize)
+for data that is not fully materialized — chunks of arbitrary uneven sizes,
+arriving over time, possibly on different machines, with an optional
+vmapped batch axis over independent series.  Estimators opt in by providing
+a ``ChunkKernel`` (masked-window reducer) front-end: `stats.lag_sum_engine`
+(autocovariance → Yule-Walker → ARMA) and `spectral.welch_engine` are the
+references.  All four strategies are pinned to each other by
+`tests/test_streaming.py`.  On a mesh, per-shard partials built from
+halo-complete blocks merge with the single psum of
+`repro.parallel.sharding.psum_tree`.
 """
 from __future__ import annotations
 
@@ -164,12 +176,14 @@ def sharded_window_map_reduce(
     blocks_per_device = spec.num_blocks // mesh.shape[axis]
 
     def local(blocks_local):
+        from ..parallel.sharding import psum_tree
+
         offset = jax.lax.axis_index(axis) * blocks_per_device
         partials = block_partials(kernel, blocks_local, spec, block_offset=offset)
         local_sum = jax.tree.map(lambda l: jnp.sum(l, axis=0), partials)
-        return jax.lax.psum(local_sum, axis)
+        return psum_tree(local_sum, axis)
 
-    fn = jax.shard_map(
-        local, mesh=mesh, in_specs=P(axis), out_specs=P(), check_vma=False
-    )
+    from ..parallel.sharding import shard_map_compat
+
+    fn = shard_map_compat(local, mesh=mesh, in_specs=P(axis), out_specs=P())
     return fn(blocks)

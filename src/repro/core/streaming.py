@@ -1,0 +1,326 @@
+"""Streaming sufficient statistics: the weak-memory monoid made explicit.
+
+The paper's central observation (§7–§10) is that every order-(h_left,
+h_right) weak-memory estimator is a sum of per-window kernel contributions
+
+    Est(X) = ⊕_s k( X[s : s+W] ),        W = h_left + 1 + h_right,
+
+for a commutative-associative ⊕.  `core.mapreduce` exploits this for one
+fully-materialized series per call; this module exploits it for data that
+*arrives over time*, in chunks of arbitrary uneven sizes, possibly on
+different machines: partial results form a **monoid** and can be merged in
+any order, at any granularity, from any source.
+
+The carrier is :class:`PartialState` — the partial ⊕-sum of all windows
+fully inside the covered segment, plus the only context a future merge can
+ever need: the first and last ``W-1`` samples of the segment (the halo), the
+segment length, and its global start index.  The API is the classic
+streaming quartet:
+
+  * ``engine.init()``           — the neutral element;
+  * ``engine.update(s, chunk)`` — absorb the next chunk of the segment
+    (needs only ``h_left + h_right`` carried samples, never the series);
+  * ``engine.merge(a, b)``      — combine two adjacent segments, adding the
+    boundary-straddling windows from the carried halos.  Commutative: the
+    operands are ordered internally by global start index;
+  * ``engine.finalize(s)``      — read out the raw statistic (estimator
+    front-ends apply normalization / ragged boundary corrections).
+
+``stride`` generalizes the window walk to strided segment estimators
+(Welch periodograms: windows start only at global multiples of
+``nperseg - overlap``); global start indices keep strided alignment exact
+across chunk boundaries and merges.
+
+Every operation is pure jnp on fixed shapes, so a leading **batch axis over
+independent series** comes for free via ``jax.vmap`` — one device pass
+updates rolling statistics for thousands of series at once
+(``init_batch`` / ``update_batch`` / ``merge_batch``).
+
+Relation to the block paths: a per-shard partial built from halo-*padded*
+blocks (`core.mapreduce.block_partials`) already contains every window the
+shard owns, so the global merge degenerates to a plain pytree sum — on a
+mesh, the single ``psum`` of `repro.parallel.sharding.psum_tree`.  The
+streaming merge is the general case: it is what that psum is *allowed to
+forget*, re-derived from first principles for halo-free ingestion.
+
+Estimator front-ends live next to their batch counterparts:
+`estimators.stats.lag_sum_engine` (autocovariance → Yule-Walker → ARMA) and
+`estimators.spectral.welch_engine`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .mapreduce import tree_sum
+
+__all__ = ["PartialState", "StreamingEngine"]
+
+# (window (W, d)) -> pytree contribution
+WindowKernel = Callable[[jax.Array], Any]
+# (y_padded (L + W - 1, d), start_mask (L,)) -> pytree: the ⊕-sum of
+# k(y_padded[s : s+W]) over starts s with start_mask[s].  Whenever
+# start_mask[s] is True, rows [s, s+W) hold real data.
+ChunkKernel = Callable[[jax.Array, jax.Array], Any]
+
+_FAR = jnp.iinfo(jnp.int32).max
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["stat", "sample_sum", "head", "tail", "length", "t0"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class PartialState:
+    """Mergeable partial result of a weak-memory estimator over one segment.
+
+    Attributes:
+      stat: pytree — ⊕-sum of kernel contributions of every window fully
+        inside the covered segment (strided windows only, if stride > 1).
+      sample_sum: (d,) — plain sum of all covered samples (order-0
+        statistic; rolling means come for free).
+      head: (W-1, d) — first ``min(length, W-1)`` samples, left-aligned,
+        zero elsewhere.  A future merge-from-the-left reads these.
+      tail: (W-1, d) — last ``min(length, W-1)`` samples, right-aligned,
+        zero elsewhere.  A future merge-from-the-right (or a ragged
+        boundary correction at finalize) reads these.
+      length: () int32 — number of samples covered.
+      t0: () int32 — global index of the segment's first sample.  Orders
+        merge operands and anchors strided window alignment.
+    """
+
+    stat: Any
+    sample_sum: jax.Array
+    head: jax.Array
+    tail: jax.Array
+    length: jax.Array
+    t0: jax.Array
+
+
+class StreamingEngine:
+    """init / update / merge / finalize for one weak-memory estimator.
+
+    Args:
+      d: series dimension.
+      h_left, h_right: kernel window half-widths (W = h_left + 1 + h_right).
+      kernel: per-window kernel (vmapped generic path).  Optional when
+        ``chunk_kernel`` is given.
+      chunk_kernel: fused masked-window reducer (e.g. the lagged-matmul MXU
+        form for autocovariance) honouring the :data:`ChunkKernel` contract.
+      stride: windows start only at global indices ≡ 0 (mod stride).
+    """
+
+    def __init__(
+        self,
+        d: int,
+        h_left: int = 0,
+        h_right: int = 0,
+        kernel: Optional[WindowKernel] = None,
+        chunk_kernel: Optional[ChunkKernel] = None,
+        stride: int = 1,
+    ):
+        if kernel is None and chunk_kernel is None:
+            raise ValueError("need a per-window kernel or a chunk_kernel")
+        if h_left < 0 or h_right < 0:
+            raise ValueError("halo widths must be non-negative")
+        if stride < 1:
+            raise ValueError(f"stride must be >= 1, got {stride}")
+        self.d = d
+        self.h_left = h_left
+        self.h_right = h_right
+        self.stride = stride
+        self.window = h_left + 1 + h_right
+        self.carry = self.window - 1  # samples of context an update keeps
+
+        if chunk_kernel is None:
+            chunk_kernel = self._vmapped_chunk_kernel(kernel)
+        self.chunk_kernel = chunk_kernel
+        self._stat_struct = jax.eval_shape(
+            chunk_kernel,
+            jax.ShapeDtypeStruct((self.window, d), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.bool_),
+        )
+
+        # Batched (multi-series) entry points: PartialState is a pytree of
+        # arrays, so a leading series axis is just vmap.
+        self.update_batch = jax.vmap(self.update)
+        self.merge_batch = jax.vmap(self.merge)
+
+    # -- internals ---------------------------------------------------------
+    def _vmapped_chunk_kernel(self, kernel: WindowKernel) -> ChunkKernel:
+        w = self.window
+
+        def ck(y_padded: jax.Array, start_mask: jax.Array) -> Any:
+            starts = jnp.arange(start_mask.shape[0])
+            wins = jax.vmap(
+                lambda s: jax.lax.dynamic_slice_in_dim(y_padded, s, w, axis=0)
+            )(starts)
+            contribs = jax.vmap(kernel)(wins)
+
+            def reduce(leaf):
+                m = start_mask.reshape(start_mask.shape + (1,) * (leaf.ndim - 1))
+                return jnp.sum(jnp.where(m, leaf, 0), axis=0)
+
+            return jax.tree.map(reduce, contribs)
+
+        return ck
+
+    def _zeros_stat(self) -> Any:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), self._stat_struct)
+
+    # -- monoid ------------------------------------------------------------
+    def init(self, t0: int | jax.Array = 0) -> PartialState:
+        """The neutral element (an empty segment starting at ``t0``)."""
+        return PartialState(
+            stat=self._zeros_stat(),
+            sample_sum=jnp.zeros((self.d,)),
+            head=jnp.zeros((self.carry, self.d)),
+            tail=jnp.zeros((self.carry, self.d)),
+            length=jnp.asarray(0, jnp.int32),
+            t0=jnp.asarray(t0, jnp.int32),
+        )
+
+    def from_chunk(self, chunk: jax.Array, t0: int | jax.Array = 0) -> PartialState:
+        """Lift one contiguous chunk into a PartialState.
+
+        Only windows fully inside the chunk enter ``stat``; boundary
+        windows appear later, when a merge supplies the neighbour's halo.
+        """
+        if chunk.ndim == 1:
+            chunk = chunk[:, None]
+        c = chunk.shape[0]
+        if c == 0:  # an empty chunk is the neutral element
+            return self.init(t0)
+        w, carry = self.window, self.carry
+        t0 = jnp.asarray(t0, jnp.int32)
+
+        y = jnp.concatenate([chunk, jnp.zeros((carry, self.d), chunk.dtype)])
+        starts = jnp.arange(c)
+        mask = starts <= c - w
+        if self.stride > 1:
+            mask &= (t0 + starts) % self.stride == 0
+        stat = self.chunk_kernel(y, mask)
+
+        rows = jnp.arange(carry)
+        head = jnp.where(
+            (rows < c)[:, None], chunk[jnp.clip(rows, 0, c - 1)], 0.0
+        )
+        tidx = c - carry + rows
+        tail = jnp.where(
+            (tidx >= 0)[:, None], chunk[jnp.clip(tidx, 0, c - 1)], 0.0
+        )
+        return PartialState(
+            stat=stat,
+            sample_sum=jnp.sum(chunk, axis=0),
+            head=head,
+            tail=tail,
+            length=jnp.asarray(c, jnp.int32),
+            t0=t0,
+        )
+
+    def update(
+        self,
+        state: PartialState,
+        chunk: jax.Array,
+        t0: Optional[jax.Array] = None,
+    ) -> PartialState:
+        """Absorb the next chunk of the state's segment.
+
+        ``update(s, c) == merge(s, from_chunk(c, end-of-s))`` — the
+        homomorphism property; every update exercises the merge path.
+        ``t0`` (optional) seeds the global start index when ``state`` is
+        still empty (e.g. a shard that starts mid-stream).
+        """
+        start = state.t0 + state.length
+        if t0 is not None:
+            start = jnp.where(state.length == 0, jnp.asarray(t0, jnp.int32), start)
+        return self.merge(state, self.from_chunk(chunk, start))
+
+    def merge(self, a: PartialState, b: PartialState) -> PartialState:
+        """⊕ of two partial states covering *adjacent* segments.
+
+        Commutative (operands are ordered by ``t0`` internally; empty
+        states are neutral regardless of their ``t0``) and associative:
+        the boundary-straddling windows are recovered exactly once from
+        the carried halos, whatever the merge tree looks like.
+        """
+        carry, w = self.carry, self.window
+
+        # Order operands by global start; empty states sort last so the
+        # neutral element never claims the t0/halo of a real segment.
+        key_a = jnp.where(a.length > 0, a.t0, _FAR)
+        key_b = jnp.where(b.length > 0, b.t0, _FAR)
+        swap = key_b < key_a
+        pick = lambda x, y: jax.tree.map(
+            lambda u, v: jnp.where(swap, v, u), x, y
+        )
+        first: PartialState = pick(a, b)
+        second: PartialState = pick(b, a)
+
+        stat = tree_sum(first.stat, second.stat)
+        if carry > 0:
+            k_first = jnp.minimum(first.length, carry)
+            k_second = jnp.minimum(second.length, carry)
+            # z = first's tail halo ++ second's head halo: every complete
+            # window in z straddles the boundary (each side is < W wide),
+            # and every straddling window lies inside z.
+            z = jnp.concatenate([first.tail, second.head])
+            starts = jnp.arange(carry)
+            mask = (starts >= carry - k_first) & (starts + w <= carry + k_second)
+            if self.stride > 1:
+                # z[carry - k_first] is the first valid row and holds global
+                # sample first.t0 + first.length - k_first, so row s of z sits
+                # at global index first.t0 + first.length - carry + s.
+                z0 = first.t0 + first.length - carry
+                mask &= (z0 + starts) % self.stride == 0
+            stat = tree_sum(stat, self.chunk_kernel(z, mask))
+
+            rows = jnp.arange(carry)
+            head = jnp.where(
+                (rows < first.length)[:, None],
+                first.head,
+                second.head[jnp.clip(rows - first.length, 0, carry - 1)],
+            )
+            tail = jnp.where(
+                (rows >= carry - second.length)[:, None],
+                second.tail,
+                first.tail[jnp.clip(rows + second.length, 0, carry - 1)],
+            )
+        else:
+            head = first.head
+            tail = first.tail
+
+        return PartialState(
+            stat=stat,
+            sample_sum=first.sample_sum + second.sample_sum,
+            head=head,
+            tail=tail,
+            length=first.length + second.length,
+            t0=jnp.where(first.length > 0, first.t0, second.t0),
+        )
+
+    def finalize(self, state: PartialState) -> Any:
+        """Raw windowed statistic.  Estimator front-ends wrap this with
+        normalization and (where the serial estimator is ragged at the
+        series end, e.g. lag sums) a boundary correction read from
+        ``state.tail``."""
+        return state.stat
+
+    # -- batching ----------------------------------------------------------
+    def init_batch(self, batch: int, t0: int | jax.Array = 0) -> PartialState:
+        """Neutral states for ``batch`` independent series (leading axis).
+
+        ``t0`` may be scalar (broadcast) or a (batch,) array of per-series
+        global start indices.
+        """
+        t0 = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (batch,))
+        one = self.init()
+        tiled = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (batch,) + l.shape), one
+        )
+        return dataclasses.replace(tiled, t0=t0)

@@ -3,6 +3,7 @@ from .sharding import (
     shard,
     logical_to_spec,
     param_pspecs,
+    psum_tree,
     set_sp_mode,
     sp_mode_enabled,
     mesh_axis_size,

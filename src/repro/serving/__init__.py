@@ -1,1 +1,2 @@
 from .engine import ServeEngine, GenerationResult
+from .rolling import RollingStatsService

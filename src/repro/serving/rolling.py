@@ -1,0 +1,119 @@
+"""Rolling-statistics serving endpoint over streaming partial states.
+
+The production shape of the paper's thesis (ROADMAP north star): millions
+of user series, each receiving samples over time, each wanting rolling
+statistics (mean / autocovariance / AR fits / spectra) on demand.  Because
+weak-memory partials form a mergeable monoid (`repro.core.streaming`), the
+service never stores raw series — only per-user `PartialState`s, which are
+
+  * updated in place by batched, vmapped chunk ingestion (one device pass
+    for a whole arrival batch),
+  * held in ``num_shards`` independent ingest lanes (e.g. one per ingest
+    node or mesh host) that never coordinate on the write path,
+  * merged **on request**: a query ⊕-combines the user's per-lane partials
+    and finalizes.  On a mesh, lane partials built from halo-complete
+    blocks reduce with the single ``psum`` of
+    `repro.parallel.sharding.psum_tree` — the read path's only collective.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.streaming import PartialState, StreamingEngine
+
+__all__ = ["RollingStatsService"]
+
+
+class RollingStatsService:
+    """Batched per-user rolling statistics with mergeable ingest lanes.
+
+    Args:
+      engine: streaming engine defining the tracked statistic.
+      num_users: number of user series served.
+      num_shards: independent ingest lanes.  A user's stream may be split
+        across lanes in contiguous time segments (pass ``t0`` at the first
+        ingest of a mid-stream lane); queries merge lanes in any order.
+    """
+
+    def __init__(self, engine: StreamingEngine, num_users: int, num_shards: int = 1):
+        if num_users <= 0 or num_shards <= 0:
+            raise ValueError("num_users and num_shards must be positive")
+        self.engine = engine
+        self.num_users = num_users
+        self.num_shards = num_shards
+        self._lanes = [engine.init_batch(num_users) for _ in range(num_shards)]
+
+        def scatter_update(lane, user_ids, chunks, t0):
+            sub = jax.tree.map(lambda l: l[user_ids], lane)
+            new = jax.vmap(engine.update)(sub, chunks, t0)
+            return jax.tree.map(lambda l, nl: l.at[user_ids].set(nl), lane, new)
+
+        # jit caches one program per (arrival batch, chunk length) shape.
+        self._scatter_update = jax.jit(scatter_update)
+
+    # -- write path --------------------------------------------------------
+    def ingest(
+        self,
+        user_ids: jax.Array,
+        chunks: jax.Array,
+        shard: int = 0,
+        t0: Optional[jax.Array] = None,
+    ) -> None:
+        """Absorb one arrival batch: ``chunks[i]`` extends user
+        ``user_ids[i]``'s series on lane ``shard``.
+
+        Args:
+          user_ids: (k,) int — distinct users in this batch.
+          chunks: (k, c, d) — equal-length chunk per user (pad+resend
+            shorter arrivals separately; chunk granularity is free).
+          t0: (k,) global start indices, used only for users whose lane
+            state is still empty (a lane that picks up mid-stream).
+        """
+        user_ids = jnp.asarray(user_ids, jnp.int32)
+        # .at[ids].set would silently keep only one of two conflicting
+        # scattered states — reject the caller slip instead of losing data.
+        if int(jnp.unique(user_ids).shape[0]) != int(user_ids.shape[0]):
+            raise ValueError("user_ids must be distinct within one ingest batch")
+        if t0 is None:
+            # update() falls back to each state's own cursor.
+            t0 = jnp.zeros(user_ids.shape, jnp.int32)
+        self._lanes[shard] = self._scatter_update(
+            self._lanes[shard], user_ids, jnp.asarray(chunks), jnp.asarray(t0)
+        )
+
+    # -- read path ---------------------------------------------------------
+    def partial(self, user_id: int) -> PartialState:
+        """The user's merged cross-lane PartialState (lane order free)."""
+        states = [
+            jax.tree.map(lambda l: l[user_id], lane) for lane in self._lanes
+        ]
+        return functools.reduce(self.engine.merge, states)
+
+    def query(self, user_id: int, finalizer: Callable, *args, **kwargs) -> Any:
+        """Rolling estimate for one user: merge lanes, then finalize with an
+        estimator front-end, e.g.
+        ``svc.query(7, streaming_autocovariance, normalization="standard")``.
+        """
+        return finalizer(self.engine, self.partial(user_id), *args, **kwargs)
+
+    def query_batch(
+        self, user_ids: Sequence[int] | jax.Array, finalizer: Callable, *args, **kwargs
+    ) -> Any:
+        """Vmapped multi-user read: one device pass merges every requested
+        user's lanes and finalizes (leading axis = user)."""
+        user_ids = jnp.asarray(user_ids, jnp.int32)
+        subs = [
+            jax.tree.map(lambda l: l[user_ids], lane) for lane in self._lanes
+        ]
+        merged = functools.reduce(self.engine.merge_batch, subs)
+        return jax.vmap(
+            lambda s: finalizer(self.engine, s, *args, **kwargs)
+        )(merged)
+
+    def lengths(self) -> jax.Array:
+        """(num_users,) samples absorbed per user, summed over lanes."""
+        return sum(lane.length for lane in self._lanes)

@@ -10,6 +10,7 @@ from .generator import (
     spectral_radius,
 )
 from .dataset import TimeSeriesStore
+from .streaming import StreamingEstimator
 from .irregular import regularize
 
 __all__ = [
@@ -21,5 +22,6 @@ __all__ = [
     "companion_matrix",
     "spectral_radius",
     "TimeSeriesStore",
+    "StreamingEstimator",
     "regularize",
 ]

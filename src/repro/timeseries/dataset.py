@@ -126,20 +126,35 @@ class TimeSeriesStore:
         blocks_per_device = s.num_blocks // self.mesh.shape[self.axis]
 
         def local(blocks_local):
+            from ..parallel.sharding import psum_tree
+
             offset = jax.lax.axis_index(self.axis) * blocks_per_device
             padded = self.padded_blocks_local(blocks_local)
             partials = block_partials(kernel, padded, s, block_offset=offset)
             local_sum = jax.tree.map(lambda l: jnp.sum(l, axis=0), partials)
-            return jax.lax.psum(local_sum, self.axis)
+            return psum_tree(local_sum, self.axis)
 
-        fn = jax.shard_map(
-            local,
-            mesh=self.mesh,
-            in_specs=P(self.axis),
-            out_specs=P(),
-            check_vma=False,
+        from ..parallel.sharding import shard_map_compat
+
+        fn = shard_map_compat(
+            local, mesh=self.mesh, in_specs=P(self.axis), out_specs=P()
         )
         return fn(self.blocks)
+
+    def iter_chunks(self, chunk_size: int):
+        """Yield contiguous ``(≤chunk_size, d)`` chunks of the series in time
+        order — the ingestion-side view of the store, consumed by
+        `repro.timeseries.streaming.StreamingEstimator`.
+
+        The final chunk may be shorter; the streaming monoid is indifferent
+        to chunk granularity (property-tested).  Small-data path: gathers
+        the series on the host first.
+        """
+        if chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+        x = self.to_series()
+        for start in range(0, self.spec.n, chunk_size):
+            yield x[start : min(start + chunk_size, self.spec.n)]
 
     def to_series(self) -> jax.Array:
         """Gather back the contiguous (n, d) series (small-data paths only)."""

@@ -1,0 +1,100 @@
+"""StreamingEstimator — the ingestion driver over the weak-memory monoid.
+
+Binds a `repro.core.streaming.StreamingEngine` to a stream of chunks (any
+iterator of (c, d) arrays — `TimeSeriesStore.iter_chunks`, a socket, a
+queue) and maintains the rolling `PartialState`.  Two axes of scale:
+
+  * **time** — chunks of arbitrary uneven sizes are absorbed with
+    ``h_left + h_right`` carried samples of context, never the series;
+  * **series** — with ``batch=B`` every operation runs vmapped over B
+    independent series in one device pass (states are pytrees with a
+    leading batch axis).
+
+Estimator results are read out through the front-end finalizers
+(``estimators.stats.streaming_autocovariance``,
+``estimators.yule_walker.streaming_yule_walker``,
+``estimators.arma.fit_arma_streaming``,
+``estimators.spectral.streaming_welch``) via :meth:`finalize`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.streaming import PartialState, StreamingEngine
+
+__all__ = ["StreamingEstimator"]
+
+
+class StreamingEstimator:
+    """Stateful driver: ingest chunks, merge peers, finalize estimates.
+
+    Args:
+      engine: the estimator's streaming engine (defines kernel + halo).
+      batch: number of independent series (None → a single series).
+        With a batch, every ingested chunk is (batch, c, d) and updates all
+        series in one vmapped device pass.
+      t0: global start index (scalar, or per-series (batch,) array).
+    """
+
+    def __init__(
+        self,
+        engine: StreamingEngine,
+        batch: Optional[int] = None,
+        t0: int | jax.Array = 0,
+    ):
+        self.engine = engine
+        self.batch = batch
+        if batch is None:
+            self.state = engine.init(t0)
+            self._update = engine.update
+            self._merge = engine.merge
+        else:
+            self.state = engine.init_batch(batch, t0)
+            self._update = engine.update_batch
+            self._merge = engine.merge_batch
+
+    @classmethod
+    def from_store(
+        cls, engine: StreamingEngine, store, chunk_size: int
+    ) -> "StreamingEstimator":
+        """Stream a `TimeSeriesStore` through the engine chunk by chunk."""
+        est = cls(engine)
+        est.ingest_iter(store.iter_chunks(chunk_size))
+        return est
+
+    def ingest(self, chunk: jax.Array) -> "StreamingEstimator":
+        """Absorb the next chunk ((c, d), or (batch, c, d) when batched)."""
+        self.state = self._update(self.state, chunk)
+        return self
+
+    def ingest_iter(self, chunks: Iterable[jax.Array]) -> "StreamingEstimator":
+        for chunk in chunks:
+            self.ingest(chunk)
+        return self
+
+    def merge_from(self, other: "StreamingEstimator | PartialState") -> "StreamingEstimator":
+        """⊕ another partial into this one (adjacent segment, any order)."""
+        state = other.state if isinstance(other, StreamingEstimator) else other
+        self.state = self._merge(self.state, state)
+        return self
+
+    def finalize(self, finalizer: Callable, *args, **kwargs) -> Any:
+        """Apply an estimator front-end finalizer to the current state.
+
+        ``finalizer(engine, state, *args, **kwargs)`` — e.g.
+        ``est.finalize(streaming_autocovariance, normalization="standard")``.
+        Batched drivers vmap the finalizer over the series axis.
+        """
+        if self.batch is None:
+            return finalizer(self.engine, self.state, *args, **kwargs)
+        return jax.vmap(lambda s: finalizer(self.engine, s, *args, **kwargs))(
+            self.state
+        )
+
+    @property
+    def length(self) -> jax.Array:
+        """Samples absorbed so far (per series when batched)."""
+        return self.state.length

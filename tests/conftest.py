@@ -7,5 +7,41 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow",
+        action="store_true",
+        default=False,
+        help="include tests marked slow (jit-heavy model/system suites)",
+    )
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: jit-heavy model/system test, deselected by default; "
+        "include with --runslow (or select directly with -m slow)",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    """Fast default run: deselect ``slow`` unless --runslow or an explicit
+    -m expression is given, so ``python -m pytest -x -q`` stays quick and
+    deterministic (the estimator/streaming equivalence tier).  Naming a
+    test file or node id directly also opts in — ``pytest
+    tests/test_models.py`` should run it, not report 'no tests ran'."""
+    explicit = any(
+        a.endswith(".py") or "::" in a for a in config.invocation_params.args
+    )
+    if config.getoption("--runslow") or config.getoption("-m") or explicit:
+        return
+    selected = [i for i in items if "slow" not in i.keywords]
+    deselected = [i for i in items if "slow" in i.keywords]
+    if deselected:
+        config.hook.pytest_deselected(items=deselected)
+        items[:] = selected

@@ -15,6 +15,9 @@ from repro.checkpoint.manager import (
 )
 from repro.runtime.fault import FaultTolerantLoop, StragglerMonitor, plan_remesh
 
+pytestmark = pytest.mark.slow  # jit-heavy: deselected by default, use --runslow
+
+
 
 def _tree(seed=0):
     k = jax.random.PRNGKey(seed)

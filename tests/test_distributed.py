@@ -7,6 +7,9 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # jit-heavy: deselected by default, use --runslow
+
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -8,6 +8,9 @@ from repro.kernels.banded_matvec import ops as bmv
 from repro.kernels.swa_attention import ops as swa
 from repro.kernels.window_stats import ops as ws
 
+pytestmark = pytest.mark.slow  # jit-heavy: deselected by default, use --runslow
+
+
 
 # ------------------------------------------------------- window_stats --
 

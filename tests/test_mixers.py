@@ -16,6 +16,9 @@ from repro.models.xlstm import (
     slstm_state_spec,
 )
 
+pytestmark = pytest.mark.slow  # jit-heavy: deselected by default, use --runslow
+
+
 B = 2
 
 

@@ -10,6 +10,9 @@ from repro.models import cache_spec, decode_step, forward, init_params, prefill
 from repro.models.layers import cross_entropy_loss
 from repro.models.vlm_stub import fake_frame_embeds, fake_patch_embeds
 
+pytestmark = pytest.mark.slow  # jit-heavy: deselected by default, use --runslow
+
+
 B, S = 2, 64
 ALL_ARCHS = sorted(ARCHS)
 

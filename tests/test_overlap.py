@@ -57,6 +57,72 @@ def test_core_mask_tail_padding():
     assert m[:2].all() and list(m[2]) == [True, True, False, False]
 
 
+@pytest.mark.parametrize(
+    "n,bs,hl,hr",
+    [
+        (5, 8, 0, 2),   # block_size > n: single partially-filled block
+        (5, 64, 3, 3),  # block_size ≫ n
+        (40, 4, 6, 9),  # halo ≥ block_size on both sides
+        (40, 4, 4, 4),  # halo == block_size
+        (7, 11, 13, 17),  # block_size > n AND halo > block_size
+    ],
+)
+def test_edge_geometry_roundtrip(n, bs, hl, hr):
+    """Streaming relies on degenerate geometries (tiny chunks, wide halos):
+    reconstruct ∘ make_overlapping_blocks must stay exact there."""
+    x = jax.random.normal(jax.random.PRNGKey(n * 31 + bs), (n, 3))
+    spec = OverlapSpec(n=n, block_size=bs, h_left=hl, h_right=hr)
+    blocks, mask = make_overlapping_blocks(x, spec)
+    assert blocks.shape == (spec.num_blocks, spec.padded_width, 3)
+    # every invalid slot is zero-filled, every valid slot is real data
+    np.testing.assert_array_equal(np.asarray(blocks)[~np.asarray(mask)], 0.0)
+    np.testing.assert_array_equal(np.asarray(reconstruct(blocks, spec)), np.asarray(x))
+
+
+def test_block_size_exceeding_n_single_block():
+    spec = OverlapSpec(n=5, block_size=8, h_left=0, h_right=2)
+    assert spec.num_blocks == 1
+    x = jnp.arange(5.0)[:, None]
+    blocks, mask = make_overlapping_blocks(x, spec)
+    # core holds the 5 real samples then tail padding; halo is all padding
+    np.testing.assert_array_equal(np.asarray(blocks[0, :5, 0]), np.arange(5.0))
+    assert float(jnp.abs(blocks[0, 5:]).sum()) == 0.0
+    assert not bool(mask[0, 5])
+
+
+def test_halo_wider_than_block_replicas():
+    """halo ≥ block_size: halos span several neighbouring cores, and interior
+    blocks still replicate exactly the global slice around their core."""
+    n, bs, h = 24, 3, 7
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, 2))
+    spec = OverlapSpec(n=n, block_size=bs, h_left=h, h_right=h)
+    blocks, _ = make_overlapping_blocks(x, spec)
+    i = 3  # interior block: [i*bs - h, (i+1)*bs + h) is fully in range
+    np.testing.assert_array_equal(
+        np.asarray(blocks[i]), np.asarray(x[i * bs - h : (i + 1) * bs + h])
+    )
+
+
+def test_replication_overhead_monotonicity():
+    """Overhead grows with halo width and shrinks with block size (the
+    paper's parallelism-vs-replication trade, §10)."""
+    n = 4096
+    ovs = [
+        replication_overhead(OverlapSpec(n=n, block_size=64, h_left=h, h_right=h))
+        for h in range(0, 33, 4)
+    ]
+    assert all(b > a for a, b in zip(ovs, ovs[1:]))
+    ovs_bs = [
+        replication_overhead(OverlapSpec(n=n, block_size=bs, h_left=8, h_right=8))
+        for bs in (16, 32, 64, 128, 256)
+    ]
+    assert all(b < a for a, b in zip(ovs_bs, ovs_bs[1:]))
+    # and with no halo + exact tiling there is no overhead at all
+    assert replication_overhead(
+        OverlapSpec(n=n, block_size=64, h_left=0, h_right=0)
+    ) == pytest.approx(0.0)
+
+
 def test_invalid_specs_raise():
     with pytest.raises(ValueError):
         OverlapSpec(n=0, block_size=4, h_left=0, h_right=0)

@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency: property tests need hypothesis"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.differencing import difference, integrate
@@ -83,9 +88,9 @@ def test_logical_spec_divisibility_fallback(dims):
     """logical_to_spec never produces a spec whose mesh axes don't divide."""
     import math
 
-    from repro.parallel.sharding import logical_to_spec, mesh_axis_size
+    from repro.parallel.sharding import abstract_mesh, logical_to_spec, mesh_axis_size
 
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = abstract_mesh((2, 2), ("data", "model"))
     spec = logical_to_spec(["batch", "heads", "ff"][: len(dims)], dims, mesh)
     for dim, entry in zip(dims, spec):
         if entry is None:

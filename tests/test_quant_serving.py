@@ -14,6 +14,8 @@ from repro.serving.quant import (
     tree_param_bytes,
 )
 
+pytestmark = pytest.mark.slow  # jit-heavy: deselected by default, use --runslow
+
 
 def test_quantize_roundtrip_error():
     w = jax.random.normal(jax.random.PRNGKey(0), (512, 256))

@@ -9,6 +9,9 @@ from repro.models import forward, init_params
 from repro.models.vlm_stub import fake_frame_embeds
 from repro.serving.engine import ServeEngine
 
+pytestmark = pytest.mark.slow  # jit-heavy: deselected by default, use --runslow
+
+
 
 def _greedy_by_full_forward(params, cfg, prompts, max_new, extra=None):
     toks = prompts

@@ -24,6 +24,9 @@ from repro.core.graphs import (
 )
 from repro.timeseries import simulate_var
 
+pytestmark = pytest.mark.slow  # jit-heavy: deselected by default, use --runslow
+
+
 
 def _valid_band_mask(d, b):
     rows = np.arange(d)[:, None]

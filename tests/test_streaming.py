@@ -1,0 +1,253 @@
+"""Streaming sufficient statistics: cross-strategy equivalence + monoid laws.
+
+The paper's algebra says serial ≡ blocked ≡ sharded ≡ streamed for every
+weak-memory estimator; this suite pins all four execution strategies to the
+serial oracle and checks the PartialState monoid laws (associativity,
+commutativity, identity, chunk-size invariance) plus vmapped multi-series
+batching against a per-series Python loop.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.estimators.arma import fit_arma, fit_arma_streaming
+from repro.core.estimators.spectral import streaming_welch, welch_engine, welch_psd
+from repro.core.estimators.stats import (
+    autocovariance,
+    autocovariance_blocked,
+    autocovariance_sharded,
+    lag_sum_engine,
+    streaming_autocovariance,
+    streaming_mean,
+)
+from repro.core.estimators.yule_walker import streaming_yule_walker, yule_walker
+from repro.core.mapreduce import serial_window_map_reduce
+from repro.core.overlap import OverlapSpec, make_overlapping_blocks
+from repro.core.streaming import StreamingEngine
+from repro.serving import RollingStatsService
+from repro.timeseries import StreamingEstimator, TimeSeriesStore
+
+UNEVEN = [1, 7, 229, 13, 501, 64, 185]  # sums to 1000; includes size-1
+
+
+def _stream(engine, x, splits):
+    assert sum(splits) == x.shape[0]
+    st = engine.init()
+    off = 0
+    for c in splits:
+        st = engine.update(st, x[off : off + c])
+        off += c
+    return st
+
+
+def _series(n=1000, d=2, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+# ---------------------------------------------------------------- equivalence
+
+
+@pytest.mark.parametrize("normalization", ["paper", "standard"])
+def test_autocovariance_four_strategies_agree(normalization):
+    """serial ≡ blocked ≡ sharded ≡ streaming (chunked) to 1e-5."""
+    x = _series()
+    H = 5
+    serial = autocovariance(x, H, normalization=normalization)
+    blocked = autocovariance_blocked(x, H, block_size=128, normalization=normalization)
+
+    spec = OverlapSpec(n=x.shape[0], block_size=125, h_left=0, h_right=H)
+    blocks, _ = make_overlapping_blocks(x, spec)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    sharded = autocovariance_sharded(
+        blocks, spec, H, mesh, normalization=normalization
+    )
+
+    engine = lag_sum_engine(H, x.shape[1])
+    streamed = streaming_autocovariance(
+        engine, _stream(engine, x, UNEVEN), normalization
+    )
+
+    np.testing.assert_allclose(blocked, serial, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(sharded, serial, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(streamed, serial, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "splits",
+    [[1000], [500, 500], [999, 1], [1, 999], UNEVEN],
+    ids=["mono", "halves", "tail1", "head1", "uneven"],
+)
+def test_streaming_autocov_chunking_invariant(splits):
+    x = _series(seed=1)
+    engine = lag_sum_engine(6, 2)
+    g = streaming_autocovariance(engine, _stream(engine, x, splits))
+    np.testing.assert_allclose(g, autocovariance(x, 6), rtol=1e-5, atol=1e-5)
+
+
+def test_streaming_yule_walker_equals_dense():
+    x = _series(seed=2, d=3)
+    engine = lag_sum_engine(4, 3)
+    st = _stream(engine, x, UNEVEN)
+    A_s, sig_s = streaming_yule_walker(engine, st, 3)
+    A_d, sig_d = yule_walker(autocovariance(x, 4, normalization="standard"), 3)
+    np.testing.assert_allclose(A_s, A_d, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(sig_s, sig_d, rtol=1e-4, atol=1e-5)
+
+
+def test_streaming_arma_equals_batch():
+    x = _series(seed=3, d=2)
+    engine = lag_sum_engine(8, 2)
+    st = _stream(engine, x, UNEVEN)
+    A_s, B_s, sig_s = fit_arma_streaming(engine, st, 1, 1, m=8)
+    g = autocovariance(x, 8, normalization="standard")
+    A_b, B_b, sig_b = fit_arma(g, 1, 1, m=8)
+    np.testing.assert_allclose(A_s, A_b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(B_s, B_b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(sig_s, sig_b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nperseg,overlap", [(32, None), (32, 24), (16, 0)])
+def test_streaming_welch_equals_welch_psd(nperseg, overlap):
+    """Strided (Welch) windows survive chunk boundaries and merges."""
+    x = _series(seed=4, d=2)
+    engine = welch_engine(nperseg=nperseg, overlap=overlap, d=2)
+    st = _stream(engine, x, UNEVEN)
+    f_s, p_s = streaming_welch(engine, st)
+    f_b, p_b = welch_psd(x, nperseg=nperseg, overlap=overlap)
+    np.testing.assert_allclose(f_s, f_b, rtol=0, atol=0)
+    np.testing.assert_allclose(p_s, p_b, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("hl,hr", [(0, 0), (3, 0), (0, 4), (2, 5)])
+def test_generic_kernel_any_halo_matches_serial(hl, hr):
+    """Arbitrary pytree kernels at every h_left/h_right combination."""
+    x = _series(n=311, seed=5, d=2)
+    kern = lambda w: {"sq": jnp.sum(w * w), "edge": jnp.outer(w[0], w[-1])}
+    engine = StreamingEngine(d=2, h_left=hl, h_right=hr, kernel=kern)
+    st = _stream(engine, x, [1, 17, 130, 7, 156])
+    oracle = serial_window_map_reduce(kern, x, hl, hr)
+    np.testing.assert_allclose(st.stat["sq"], oracle["sq"], rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(st.stat["edge"], oracle["edge"], rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------- monoid laws
+
+
+def _assert_states_close(a, b, rtol=1e-5, atol=1e-5):
+    jax.tree.map(
+        lambda u, v: np.testing.assert_allclose(u, v, rtol=rtol, atol=atol), a, b
+    )
+
+
+@pytest.mark.parametrize("make_engine", [
+    lambda: lag_sum_engine(4, 2),
+    lambda: welch_engine(nperseg=16, overlap=8, d=2),
+], ids=["lag_sums", "welch"])
+def test_merge_associative(make_engine):
+    engine = make_engine()
+    x = _series(seed=6)
+    cuts = [0, 230, 237, 1000]  # middle segment narrower than the halo carry
+    a, b, c = (
+        engine.update(engine.init(t0=cuts[i]), x[cuts[i] : cuts[i + 1]], t0=cuts[i])
+        for i in range(3)
+    )
+    _assert_states_close(
+        engine.merge(engine.merge(a, b), c), engine.merge(a, engine.merge(b, c))
+    )
+
+
+@pytest.mark.parametrize("make_engine", [
+    lambda: lag_sum_engine(4, 2),
+    lambda: welch_engine(nperseg=16, overlap=8, d=2),
+], ids=["lag_sums", "welch"])
+def test_merge_commutative(make_engine):
+    """Operands are ordered by global start index — ⊕ is commutative."""
+    engine = make_engine()
+    x = _series(seed=7)
+    a = engine.update(engine.init(), x[:400])
+    b = engine.update(engine.init(t0=400), x[400:], t0=400)
+    _assert_states_close(engine.merge(a, b), engine.merge(b, a), rtol=0, atol=0)
+
+
+def test_identity_neutral():
+    """init() is the neutral element on either side, regardless of its t0."""
+    engine = lag_sum_engine(3, 2)
+    a = engine.update(engine.init(t0=50), _series(n=200, seed=8), t0=50)
+    for e in (engine.init(), engine.init(t0=123)):
+        _assert_states_close(engine.merge(e, a), a, rtol=0, atol=0)
+        _assert_states_close(engine.merge(a, e), a, rtol=0, atol=0)
+
+
+def test_chunk_size_invariance_one_prime_n():
+    """Same answer streaming by 1, by a prime, and all-at-once."""
+    n = 221
+    x = _series(n=n, seed=9)
+    engine = lag_sum_engine(4, 2)
+    outs = []
+    for size in (1, 13, n):
+        splits = [size] * (n // size) + ([n % size] if n % size else [])
+        outs.append(streaming_autocovariance(engine, _stream(engine, x, splits)))
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(outs[1], outs[2], rtol=1e-5, atol=1e-5)
+
+
+def test_batched_vmap_matches_per_series_loop():
+    """The leading multi-series axis is a plain vmap: one device pass equals
+    the per-series Python loop, state-for-state and estimate-for-estimate."""
+    B, n, d = 6, 300, 2
+    xb = jax.random.normal(jax.random.PRNGKey(10), (B, n, d))
+    engine = lag_sum_engine(3, d)
+
+    batched = engine.init_batch(B)
+    for off in range(0, n, 100):
+        batched = engine.update_batch(batched, xb[:, off : off + 100])
+    g_batched = jax.vmap(lambda s: streaming_autocovariance(engine, s))(batched)
+    mu_batched = jax.vmap(streaming_mean)(batched)
+
+    for i in range(B):
+        st = _stream(engine, xb[i], [100, 100, 100])
+        _assert_states_close(jax.tree.map(lambda l: l[i], batched), st)
+        np.testing.assert_allclose(
+            g_batched[i], streaming_autocovariance(engine, st), rtol=1e-6, atol=1e-6
+        )
+        np.testing.assert_allclose(mu_batched[i], xb[i].mean(0), rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------- drivers and endpoints
+
+
+def test_streaming_estimator_from_store():
+    x = _series(seed=11)
+    engine = lag_sum_engine(4, 2)
+    store = TimeSeriesStore.from_series(x, block_size=128, h_left=0, h_right=4)
+    est = StreamingEstimator.from_store(engine, store, chunk_size=333)
+    assert int(est.length) == x.shape[0]
+    np.testing.assert_allclose(
+        est.finalize(streaming_autocovariance),
+        autocovariance(x, 4),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_rolling_service_cross_lane_merge():
+    """Per-user partials split across ingest lanes merge correctly on query."""
+    U, n, d, H = 4, 600, 2, 3
+    xu = jax.random.normal(jax.random.PRNGKey(12), (U, n, d))
+    engine = lag_sum_engine(H, d)
+    svc = RollingStatsService(engine, num_users=U, num_shards=2)
+    ids = jnp.arange(U)
+    for off in range(0, 300, 150):  # first half → lane 0
+        svc.ingest(ids, xu[:, off : off + 150], shard=0)
+    for off in range(300, n, 100):  # second half → lane 1, mid-stream t0
+        svc.ingest(ids, xu[:, off : off + 100], shard=1, t0=jnp.full((U,), 300))
+    assert np.asarray(svc.lengths()).tolist() == [n] * U
+
+    got = svc.query_batch(ids, streaming_autocovariance)
+    want = jnp.stack([autocovariance(xu[i], H) for i in range(U)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    A_one, _ = svc.query(2, streaming_yule_walker, 2)
+    A_ref, _ = yule_walker(autocovariance(xu[2], H, normalization="standard"), 2)
+    np.testing.assert_allclose(A_one, A_ref, rtol=1e-4, atol=1e-5)

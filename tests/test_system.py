@@ -10,6 +10,9 @@ from repro.core.estimators.stats import autocovariance
 from repro.core.estimators.yule_walker import yule_walker
 from repro.timeseries import TimeSeriesStore, random_stable_var, simulate_var
 
+pytestmark = pytest.mark.slow  # jit-heavy: deselected by default, use --runslow
+
+
 
 def test_paper_pipeline_end_to_end():
     """The paper's full workflow: simulate → overlapping store → map-reduce

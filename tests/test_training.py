@@ -12,6 +12,9 @@ from repro.training.compression import compress_int8, decompress_int8
 from repro.training.optimizer import adamw_init, adamw_update, cosine_schedule, global_norm
 from repro.training.train_step import make_train_step
 
+pytestmark = pytest.mark.slow  # jit-heavy: deselected by default, use --runslow
+
+
 
 def test_adamw_first_step_is_lr_signed():
     """With bias correction, |Δp| of step 1 ≈ lr·sign(g) (wd=0)."""
@@ -106,8 +109,10 @@ def test_error_feedback_allreduce_unbiased_over_steps():
 
     from jax.sharding import PartitionSpec as P
 
+    from repro.parallel.sharding import shard_map_compat
+
     fm = jax.jit(
-        jax.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()), check_vma=False)
+        shard_map_compat(f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()))
     )
     acc_exact = jnp.zeros((512,))
     acc_comp = jnp.zeros((512,))
