@@ -1,6 +1,9 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmark contract).
+``bench_backends`` additionally emits ``BENCH_backends.json`` at the repo
+root (jnp vs pallas-interpret timings on fixed shapes) so the
+kernel-backend perf trajectory populates per commit.
 """
 from __future__ import annotations
 
@@ -9,6 +12,7 @@ import traceback
 
 MODULES = [
     "bench_autocov",        # paper Fig. 2 (+ Fig. 9 kernel check)
+    "bench_backends",       # compute-registry shootout → BENCH_backends.json
     "bench_streaming",      # streaming monoid: chunked + multi-series paths
     "bench_overlap_scaling",  # paper Fig. 4
     "bench_mle",            # paper §5 / §7.2 Z-estimators

@@ -4,12 +4,22 @@ kernels), in JAX.
 
 Layering:
   overlap.py      — the data structure (OverlapSpec, block build/reconstruct)
+  backend.py      — the compute registry (jnp / Pallas / auto substrates)
   mapreduce.py    — the execution engine (serial / blocked / shard_map paths)
   halo.py         — replication vs collective-permute halo materialization
   estimators/     — M- and Z-estimators of the paper (§2–§6)
   graphs.py       — order-(H,K) graph generalization + traffic DBN (§9, §11)
   differencing.py — integrated-process reduction (§1.4, §10.3)
 """
+from .backend import (
+    Backend,
+    JnpBackend,
+    PallasBackend,
+    get_backend,
+    register_backend,
+    list_backends,
+    set_default_backend,
+)
 from .overlap import (
     OverlapSpec,
     make_overlapping_blocks,

@@ -1,0 +1,374 @@
+"""Unified kernel-backend dispatch: one compute registry for every estimator.
+
+The paper's thesis (§12) is that the overlapping-block weak-memory scheme is
+*system-agnostic* — the identical map-reduce runs on Spark executors or on
+GPU shared-memory tiles.  This module makes the execution substrate a
+pluggable policy instead of a fork in every call site: every weak-memory
+estimator in the repo reduces to a handful of primitive contractions, and a
+:class:`Backend` supplies one implementation of each:
+
+  ``lagged_sums(x, max_lag)``            S(h) = Σ_k x_k x_{k+h}ᵀ (ragged
+                                         full sums, the autocovariance core)
+  ``masked_lagged_sums(y, mask, H)``     Σ_{s: mask[s]} y_s y_{s+h}ᵀ — the
+                                         streaming ChunkKernel form
+  ``windowed_moments(x, window)``        per-window [Σx, Σx²] (rolling
+                                         mean/variance)
+  ``segment_fft_power(segs, taper)``     per-segment |rfft|² (Welch / Whittle)
+  ``banded_matvec(diags, x)``            x̂ = A x for b-banded A (§6.1)
+
+Backends in the registry:
+
+  ``"jnp"``     pure jax.numpy on whatever XLA device is active — the
+                correctness oracle and the CPU/cluster default.
+  ``"pallas"``  explicit VMEM tile kernels (`repro.kernels.window_stats`,
+                `repro.kernels.banded_matvec`) — the TPU re-instantiation of
+                the paper's §12 GPU shared-memory scheme.  Runs in interpret
+                mode off-TPU so CPU tests exercise the identical tiling.
+                Primitives without a Pallas kernel (``segment_fft_power``:
+                there is no Pallas FFT) fall back to the jnp implementation.
+  ``"auto"``    per-call policy (the default): Pallas when running on a TPU
+                AND the problem is large enough to fill tiles, jnp otherwise.
+                Selection rules (see :class:`AutoBackend`):
+                  * off-TPU → always jnp (interpret mode is a testing
+                    vehicle, not a serving path);
+                  * lagged/masked sums and windowed moments → Pallas when the
+                    series has ≥ ``min_rows`` rows (default 4096);
+                  * banded matvec → Pallas when d ≥ ``min_rows``;
+                  * segment FFT power → always jnp.
+
+Registering a new backend (a GPU Triton port, a CPU-vectorized build, …):
+
+    class TritonBackend: ...    # implement the five primitives
+    register_backend("triton", TritonBackend())
+    gamma = autocovariance(x, 8, backend="triton")
+
+Every estimator (`estimators.stats`, `estimators.spectral`,
+`estimators.yule_walker`, `estimators.arma`, `estimators.spatial`), the
+streaming engine (`core.streaming` — its ChunkKernels are built from
+``masked_lagged_sums`` / ``segment_fft_power``), the block/sharded paths
+(`core.mapreduce`, `parallel.sharding`), and the serving ingest lanes
+(`serving.rolling`) accept ``backend=`` (a name or a Backend instance) and
+route through this registry — changing where the math runs is a config knob,
+never an estimator rewrite.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Protocol, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Backend",
+    "JnpBackend",
+    "PallasBackend",
+    "AutoBackend",
+    "register_backend",
+    "get_backend",
+    "list_backends",
+    "set_default_backend",
+]
+
+BackendSpec = Union[None, str, "Backend"]
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """The primitive contractions every weak-memory estimator reduces to."""
+
+    name: str
+
+    def lagged_sums(self, x: jax.Array, max_lag: int) -> jax.Array:
+        """(n, d) → (max_lag+1, d, d): S(h) = Σ_{k=0}^{n-1-h} x_k x_{k+h}ᵀ."""
+        ...
+
+    def masked_lagged_sums(
+        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int
+    ) -> jax.Array:
+        """Σ_{s: start_mask[s]} y_s y_{s+h}ᵀ → (max_lag+1, d, d).
+
+        ``y_padded`` carries ≥ L rows (L = len(start_mask)); rows
+        [s, s+max_lag] are read for every unmasked start (zero-extended when
+        shorter than L + max_lag).  This is the streaming ChunkKernel form.
+        """
+        ...
+
+    def windowed_moments(self, x: jax.Array, window: int) -> jax.Array:
+        """(n, d) → (n-window+1, 2, d) of per-window [Σ x, Σ x²]."""
+        ...
+
+    def segment_fft_power(
+        self, segments: jax.Array, taper: jax.Array, detrend: bool = True
+    ) -> jax.Array:
+        """(S, W, d) segments → (S, W//2+1, d) per-segment |rfft|² power."""
+        ...
+
+    def banded_matvec(self, diags: jax.Array, x: jax.Array) -> jax.Array:
+        """(d, 2b+1) stacked diagonals, x (..., d) → A x (..., d)."""
+        ...
+
+
+def _as_2d(x: jax.Array) -> jax.Array:
+    return x[:, None] if x.ndim == 1 else x
+
+
+class JnpBackend:
+    """Pure jax.numpy implementations — the correctness oracle.
+
+    All accumulation happens in float32 whatever the input dtype, matching
+    the Pallas kernels' ``preferred_element_type`` so cross-backend parity
+    holds for bf16 inputs too.
+    """
+
+    name = "jnp"
+
+    def lagged_sums(self, x: jax.Array, max_lag: int) -> jax.Array:
+        x = _as_2d(x).astype(jnp.float32)
+        n = x.shape[0]
+
+        if n <= max_lag:
+            # Tiny series (every lag ragged): direct masked form, O(n·H·d²).
+            def one_ragged(h):
+                idx = jnp.arange(n)
+                valid = (idx + h) <= (n - 1)
+                shifted = x[jnp.clip(idx + h, 0, n - 1)]
+                shifted = jnp.where(valid[:, None], shifted, 0.0)
+                return jnp.einsum("ti,tj->ij", x, shifted)
+
+            return jax.vmap(one_ragged)(jnp.arange(max_lag + 1))
+
+        def one(h):
+            head = jax.lax.dynamic_slice_in_dim(x, 0, n - max_lag, axis=0)
+            shifted = jax.lax.dynamic_slice_in_dim(x, h, n - max_lag, axis=0)
+            # Only the common full-length prefix enters this vectorized form;
+            # the ragged tail (k in [n-max_lag, n-h)) is added below.
+            return jnp.einsum("ti,tj->ij", head, shifted)
+
+        full = jax.vmap(one)(jnp.arange(max_lag + 1))
+
+        # Ragged tail: for lag h, centers k = n-max_lag .. n-1-h.
+        def tail(h):
+            ks = jnp.arange(max_lag)  # offsets into the tail region
+            k = n - max_lag + ks
+            valid = (k + h) <= (n - 1)
+            xk = x[jnp.clip(k, 0, n - 1)]
+            xkh = x[jnp.clip(k + h, 0, n - 1)]
+            contrib = jnp.einsum("ti,tj->tij", xk, xkh)
+            return jnp.sum(jnp.where(valid[:, None, None], contrib, 0.0), axis=0)
+
+        if max_lag > 0:
+            full = full + jax.vmap(tail)(jnp.arange(max_lag + 1))
+        return full
+
+    def masked_lagged_sums(
+        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int
+    ) -> jax.Array:
+        y_padded = _as_2d(y_padded).astype(jnp.float32)
+        L = start_mask.shape[0]
+        need = L + max_lag
+        if y_padded.shape[0] < need:
+            y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
+        head = jnp.where(start_mask[:, None], y_padded[:L], 0.0)
+
+        def one(h):
+            shifted = jax.lax.dynamic_slice_in_dim(y_padded, h, L, axis=0)
+            return jnp.einsum("ti,tj->ij", head, shifted)
+
+        return jax.vmap(one)(jnp.arange(max_lag + 1))
+
+    def windowed_moments(self, x: jax.Array, window: int) -> jax.Array:
+        x = _as_2d(x).astype(jnp.float32)
+        n, d = x.shape
+        if n - window + 1 < 1:
+            raise ValueError(f"series of length {n} has no full window of width {window}")
+        zero = jnp.zeros((1, d), jnp.float32)
+        cs = jnp.concatenate([zero, jnp.cumsum(x, axis=0)])
+        cs2 = jnp.concatenate([zero, jnp.cumsum(x * x, axis=0)])
+        s1 = cs[window:] - cs[:-window]
+        s2 = cs2[window:] - cs2[:-window]
+        return jnp.stack([s1, s2], axis=1)
+
+    def segment_fft_power(
+        self, segments: jax.Array, taper: jax.Array, detrend: bool = True
+    ) -> jax.Array:
+        segments = segments.astype(jnp.float32)
+
+        def one(seg):
+            if detrend:
+                seg = seg - seg.mean(axis=0)
+            f = jnp.fft.rfft(seg * taper[:, None], axis=0)
+            return jnp.abs(f) ** 2
+
+        return jax.vmap(one)(segments)
+
+    def banded_matvec(self, diags: jax.Array, x: jax.Array) -> jax.Array:
+        d, w = diags.shape
+        b = (w - 1) // 2
+        # gather the b-halo neighbourhood of every row: (..., d, 2b+1)
+        cols = jnp.arange(d)[:, None] + jnp.arange(-b, b + 1)[None, :]
+        valid = (cols >= 0) & (cols < d)
+        xn = jnp.take(x.astype(jnp.float32), jnp.clip(cols, 0, d - 1), axis=-1)
+        xn = jnp.where(valid, xn, 0.0)
+        return jnp.einsum("...dw,dw->...d", xn, diags.astype(jnp.float32))
+
+
+class PallasBackend:
+    """Explicit VMEM tile kernels (the paper's §12 scheme on TPU).
+
+    Args:
+      block_t: core tile length for the windowed-contraction kernels.
+      block_rows: row tile for the banded matvec.
+      interpret: force Pallas interpret mode.  ``None`` (default) resolves
+        per call: compiled on TPU, interpret everywhere else — so the same
+        backend object validates on CPU and serves on TPU.
+    """
+
+    name = "pallas"
+
+    def __init__(
+        self,
+        block_t: int = 512,
+        block_rows: int = 256,
+        interpret: Optional[bool] = None,
+    ):
+        self.block_t = block_t
+        self.block_rows = block_rows
+        self.interpret = interpret
+        self._jnp = JnpBackend()
+
+    def _interp(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    def lagged_sums(self, x: jax.Array, max_lag: int) -> jax.Array:
+        from ..kernels.window_stats import ops as ws
+
+        return ws.lagged_sums(
+            x, max_lag, block_t=self.block_t, interpret=self._interp()
+        )
+
+    def masked_lagged_sums(
+        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int
+    ) -> jax.Array:
+        from ..kernels.window_stats import ops as ws
+
+        return ws.masked_lagged_sums(
+            y_padded, start_mask, max_lag, block_t=self.block_t, interpret=self._interp()
+        )
+
+    def windowed_moments(self, x: jax.Array, window: int) -> jax.Array:
+        from ..kernels.window_stats import ops as ws
+
+        return ws.windowed_moments(
+            x, window, block_t=self.block_t, interpret=self._interp()
+        )
+
+    def segment_fft_power(
+        self, segments: jax.Array, taper: jax.Array, detrend: bool = True
+    ) -> jax.Array:
+        # No Pallas FFT primitive exists; the spectral path runs through XLA's
+        # rfft on every backend (documented selection rule).
+        return self._jnp.segment_fft_power(segments, taper, detrend)
+
+    def banded_matvec(self, diags: jax.Array, x: jax.Array) -> jax.Array:
+        from ..kernels.banded_matvec import ops as bmv
+
+        d = diags.shape[0]
+        lead = x.shape[:-1]
+        # kernel contract is (d, nrhs): fold any leading batch axes into nrhs.
+        xr = x.reshape(-1, d).T if lead else x
+        y = bmv.banded_matvec(
+            diags, xr, block_rows=self.block_rows, interpret=self._interp()
+        )
+        return y.T.reshape(*lead, d) if lead else y
+
+
+class AutoBackend:
+    """Per-call dispatch by platform and problem size.
+
+    Off-TPU every primitive routes to jnp (Pallas interpret mode is a
+    validation vehicle, ~100× slower than XLA).  On TPU the tiled kernels
+    take over once the problem fills tiles: windowed contractions when the
+    series has ≥ ``min_rows`` rows, banded matvec when d ≥ ``min_rows``;
+    ``segment_fft_power`` always runs through jnp (no Pallas FFT).
+    """
+
+    name = "auto"
+
+    def __init__(
+        self,
+        jnp_backend: Optional[JnpBackend] = None,
+        pallas_backend: Optional[PallasBackend] = None,
+        min_rows: int = 4096,
+    ):
+        self._jnp = jnp_backend or JnpBackend()
+        self._pallas = pallas_backend or PallasBackend()
+        self.min_rows = min_rows
+
+    def _pick(self, rows: int) -> Backend:
+        if jax.default_backend() == "tpu" and rows >= self.min_rows:
+            return self._pallas
+        return self._jnp
+
+    def lagged_sums(self, x: jax.Array, max_lag: int) -> jax.Array:
+        return self._pick(x.shape[0]).lagged_sums(x, max_lag)
+
+    def masked_lagged_sums(
+        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int
+    ) -> jax.Array:
+        return self._pick(start_mask.shape[0]).masked_lagged_sums(
+            y_padded, start_mask, max_lag
+        )
+
+    def windowed_moments(self, x: jax.Array, window: int) -> jax.Array:
+        return self._pick(x.shape[0]).windowed_moments(x, window)
+
+    def segment_fft_power(
+        self, segments: jax.Array, taper: jax.Array, detrend: bool = True
+    ) -> jax.Array:
+        return self._jnp.segment_fft_power(segments, taper, detrend)
+
+    def banded_matvec(self, diags: jax.Array, x: jax.Array) -> jax.Array:
+        return self._pick(diags.shape[0]).banded_matvec(diags, x)
+
+
+_REGISTRY: Dict[str, Backend] = {
+    "jnp": JnpBackend(),
+    "pallas": PallasBackend(),
+    "auto": AutoBackend(),
+}
+_DEFAULT = "auto"
+
+
+def register_backend(name: str, backend: Backend) -> None:
+    """Add (or replace) a named backend — the one place a new substrate
+    (GPU Triton, CPU-vectorized, …) plugs into every estimator at once."""
+    _REGISTRY[name] = backend
+
+
+def list_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def set_default_backend(name: str) -> None:
+    """Change what ``backend=None`` resolves to (deployment-wide policy)."""
+    global _DEFAULT
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown backend {name!r}; registered: {list_backends()}")
+    _DEFAULT = name
+
+
+def get_backend(spec: BackendSpec = None) -> Backend:
+    """Resolve ``backend=`` arguments: None → default, str → registry lookup,
+    Backend instance → itself."""
+    if spec is None:
+        spec = _DEFAULT
+    if isinstance(spec, str):
+        try:
+            return _REGISTRY[spec]
+        except KeyError:
+            raise KeyError(
+                f"unknown backend {spec!r}; registered: {list_backends()}"
+            ) from None
+    return spec

@@ -11,6 +11,7 @@ from .stats import (
     autocovariance_sharded,
     autocorrelation,
     partial_autocorrelation,
+    windowed_moments,
     lag_sum_engine,
     streaming_autocovariance,
     streaming_mean,
@@ -41,6 +42,7 @@ __all__ = [
     "autocovariance_sharded",
     "autocorrelation",
     "partial_autocorrelation",
+    "windowed_moments",
     "lag_sum_engine",
     "streaming_autocovariance",
     "streaming_mean",

@@ -88,20 +88,33 @@ def solve_arma_from_psi(
 
 
 def fit_arma(
-    gamma: jax.Array, p: int, q: int, m: int | None = None
+    gamma: jax.Array,
+    p: int,
+    q: int,
+    m: int | None = None,
+    backend=None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Fit ARMA(p, q) from autocovariances γ̂ (paper §3.4).
 
     Args:
-      gamma: (≥m+1, d, d) stacked γ̂(0..) — the weak-memory statistic.
+      gamma: (≥m+1, d, d) stacked γ̂(0..) — the weak-memory statistic; OR a
+        raw series (ndim < 3), in which case γ̂(0..m) is computed first
+        through the compute-backend registry ("standard" normalization).
       m: innovation recursion depth (default p+q, the paper's choice; larger
         m gives better Ψ estimates at O(m² d³) driver cost).
+      backend: compute-backend spec for the series → γ̂ contraction (ignored
+        when ``gamma`` is already stacked autocovariances).
 
     Returns: A (p,d,d), B (q,d,d), sigma (d,d).
     """
     if m is None:
         m = p + q
     m = max(m, p + q)
+    gamma = jnp.asarray(gamma)
+    if gamma.ndim < 3:
+        from .stats import autocovariance
+
+        gamma = autocovariance(gamma, m, normalization="standard", backend=backend)
     theta, V = innovation_algorithm(gamma, m)
     d = gamma.shape[1]
     # Θ̂_{m,j} estimates Ψⱼ ; prepend Ψ₀ = I.

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..backend import BackendSpec, get_backend
+
 __all__ = [
     "BandedARModel",
     "banded_to_dense",
@@ -71,21 +73,22 @@ def dense_to_banded(A: jax.Array, b: int) -> jax.Array:
     return jnp.where(valid, A[rows, jnp.clip(cols, 0, d - 1)], 0.0)
 
 
-def banded_predict(diags: jax.Array, x: jax.Array) -> jax.Array:
+def banded_predict(
+    diags: jax.Array, x: jax.Array, backend: BackendSpec = None
+) -> jax.Array:
     """x̂ = A x from the diagonal form — O(d·(2b+1)) (paper §6.1).
+
+    Routes through the compute-backend registry's ``banded_matvec``
+    primitive (`repro.core.backend`): gather-einsum on "jnp", the row-tiled
+    VMEM kernel of `repro.kernels.banded_matvec` on "pallas".  Note the
+    Pallas kernel is forward-only (no custom VJP); differentiable paths
+    (`banded_nll`) pin the jnp backend.
 
     Args:
       diags: (d, 2b+1);  x: (..., d).
     Returns (..., d).
     """
-    d, w = diags.shape
-    b = (w - 1) // 2
-    # gather the b-halo neighbourhood of every row: (..., d, 2b+1)
-    cols = jnp.arange(d)[:, None] + jnp.arange(-b, b + 1)[None, :]
-    valid = (cols >= 0) & (cols < d)
-    xn = jnp.take(x, jnp.clip(cols, 0, d - 1), axis=-1)
-    xn = jnp.where(valid, xn, 0.0)
-    return jnp.einsum("...dw,dw->...d", xn, diags)
+    return get_backend(backend).banded_matvec(diags, x)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,7 +165,9 @@ def banded_nll(
     d = diags.shape[0]
     if part is None:
         part = SpatialPartition(d=d, num_parts=1, bandwidth=(diags.shape[1] - 1) // 2)
-    pred = banded_predict(diags, x[:-1])  # (T-1, d)
+    # jnp backend pinned: the loss is differentiated and the Pallas banded
+    # matvec has no VJP.
+    pred = banded_predict(diags, x[:-1], backend="jnp")  # (T-1, d)
     resid = x[1:] - pred
     ps = part.part_size
     r = resid.reshape(resid.shape[0], part.num_parts, ps)

@@ -8,6 +8,12 @@ a mean.  The overlapping-block container therefore serves it directly —
 
 Univariate PSDs per dimension plus optional cross-spectral density matrix
 (needed for frequency-domain Whittle likelihoods of VARMA models).
+
+The per-segment periodogram is the backend registry's
+``segment_fft_power`` primitive (`repro.core.backend`): every backend
+currently routes it through XLA's rfft (there is no Pallas FFT), but the
+``backend=`` argument keeps the spectral API uniform with the lag-domain
+estimators and ready for a future accelerator FFT.
 """
 from __future__ import annotations
 
@@ -16,6 +22,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..backend import BackendSpec, get_backend
 from ..overlap import OverlapSpec, make_overlapping_blocks
 from ..streaming import PartialState, StreamingEngine
 
@@ -65,6 +72,7 @@ def welch_psd(
     nperseg: int = 256,
     overlap: Optional[int] = None,
     fs: float = 1.0,
+    backend: BackendSpec = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Welch power spectral density per dimension.
 
@@ -77,12 +85,8 @@ def welch_psd(
     segs, n_seg = _segments(x, nperseg, overlap)
     w = hann_window(nperseg)
     scale = 1.0 / (fs * jnp.sum(w**2))
-
-    def kernel(seg):  # (nperseg, d) → (nfreq, d): the weak-memory map
-        f = jnp.fft.rfft((seg - seg.mean(axis=0)) * w[:, None], axis=0)
-        return (jnp.abs(f) ** 2) * scale
-
-    psd = jnp.mean(jax.vmap(kernel)(segs), axis=0)
+    power = get_backend(backend).segment_fft_power(segs, w)  # (S, nfreq, d)
+    psd = jnp.mean(power, axis=0) * scale
     return _one_sided(psd, nperseg, fs)
 
 
@@ -93,7 +97,8 @@ def welch_csd(
     fs: float = 1.0,
 ) -> Tuple[jax.Array, jax.Array]:
     """Cross-spectral density matrix: (nfreq, d, d) complex (two-sided scale
-    per pair, Hermitian in (i, j))."""
+    per pair, Hermitian in (i, j)).  Complex cross-products are not a
+    backend primitive (yet) — this stays on the plain jnp path."""
     if x.ndim == 1:
         x = x[:, None]
     overlap = nperseg // 2 if overlap is None else overlap
@@ -115,6 +120,7 @@ def welch_engine(
     overlap: Optional[int] = None,
     d: int = 1,
     fs: float = 1.0,
+    backend: BackendSpec = None,
 ) -> StreamingEngine:
     """Streaming engine accumulating Welch periodogram-segment partials.
 
@@ -125,7 +131,9 @@ def welch_engine(
     merges, so the streamed estimate matches :func:`welch_psd` on the
     concatenated series (segments straddling a chunk boundary are recovered
     from the carried halos).  ``state.stat`` holds the running segment-PSD
-    sum and segment count.
+    sum and segment count.  The chunk kernel runs every candidate segment
+    through the backend's ``segment_fft_power`` primitive and masks out the
+    stride-misaligned starts.
     """
     overlap = nperseg // 2 if overlap is None else overlap
     if not 0 <= overlap < nperseg:
@@ -133,13 +141,24 @@ def welch_engine(
     step = nperseg - overlap
     w = hann_window(nperseg)
     scale = 1.0 / (fs * jnp.sum(w**2))
+    be = get_backend(backend)
 
-    def kernel(seg):  # (nperseg, d) → per-segment periodogram + count
-        f = jnp.fft.rfft((seg - seg.mean(axis=0)) * w[:, None], axis=0)
-        return {"psd": (jnp.abs(f) ** 2) * scale, "n_seg": jnp.asarray(1.0)}
+    def chunk_kernel(y_padded: jax.Array, start_mask: jax.Array) -> dict:
+        L = start_mask.shape[0]
+        wins = jax.vmap(
+            lambda s: jax.lax.dynamic_slice_in_dim(y_padded, s, nperseg, axis=0)
+        )(jnp.arange(L))
+        power = be.segment_fft_power(wins, w) * scale  # (L, nfreq, d)
+        psd = jnp.sum(jnp.where(start_mask[:, None, None], power, 0.0), axis=0)
+        return {"psd": psd, "n_seg": jnp.sum(start_mask.astype(jnp.float32))}
 
     engine = StreamingEngine(
-        d=d, h_left=0, h_right=nperseg - 1, kernel=kernel, stride=step
+        d=d,
+        h_left=0,
+        h_right=nperseg - 1,
+        chunk_kernel=chunk_kernel,
+        stride=step,
+        backend=be,
     )
     engine.welch_fs = fs  # carried to streaming_welch so the frequency grid
     # and the per-segment density scale can never disagree

@@ -5,20 +5,21 @@ mapped over time, reduced with a sum.  Three equivalent execution paths are
 provided (serial oracle / overlapping blocks / sharded blocks); equality is
 property-tested.
 
-The block path does NOT vmap a per-center kernel: the lag-h cross-product
-sum over a block is the matmul ``core.T @ shifted_h`` between the block core
-and its h-shifted padded view — this is the TPU adaptation of the paper's
-per-thread GPU kernel (one MXU matmul computes every center of the block at
-once; the halo makes the shifted view local).  `repro.kernels.window_stats`
-implements the same contraction as an explicit Pallas VMEM kernel.
+Every lagged contraction routes through the compute-backend registry
+(`repro.core.backend`): the block path's per-block lag sums, the serial
+path, and the streaming ChunkKernel are all the same primitive —
+``lagged_sums`` / ``masked_lagged_sums`` — executed by whichever backend the
+caller picks (``"jnp"``, the Pallas VMEM tile kernels of
+`repro.kernels.window_stats`, or ``"auto"``).  No estimator owns a private
+matmul; changing the substrate is a ``backend=`` argument.
 
 A fourth, *streaming* path (`core.streaming`) computes the same statistic
 over data arriving in chunks of arbitrary uneven sizes:
 :func:`lag_sum_engine` builds a `StreamingEngine` whose chunk kernel is the
-same lagged matmul, and :func:`streaming_autocovariance` finalizes a
-`PartialState` into γ̂ — equal to the serial estimator within float
-round-off (the ragged end-of-series terms are recovered from the state's
-carried tail halo).
+backend's masked lagged matmul, and :func:`streaming_autocovariance`
+finalizes a `PartialState` into γ̂ — equal to the serial estimator within
+float round-off (the ragged end-of-series terms are recovered from the
+state's carried tail halo, again through the backend).
 """
 from __future__ import annotations
 
@@ -28,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..backend import BackendSpec, get_backend
 from ..overlap import OverlapSpec, make_overlapping_blocks
 from ..streaming import PartialState, StreamingEngine
 
@@ -43,6 +45,7 @@ __all__ = [
     "autocorrelation",
     "partial_autocorrelation",
     "gamma_normalizer",
+    "windowed_moments",
     "lag_sum_engine",
     "streaming_autocovariance",
     "streaming_mean",
@@ -62,69 +65,54 @@ def gamma_normalizer(n: int, max_lag: int, normalization: Normalization) -> jax.
     "paper":    1/(N-h-1)  (paper §2.1.2 — unbiased-style, not PSD-safe)
     "standard": 1/N        (biased, guarantees a PSD block-Toeplitz matrix;
                             preferred when feeding Yule-Walker solves)
+
+    The "paper" divisor is clamped to ≥ 1: when ``max_lag`` is within 1 of
+    the series length, N-h-1 reaches 0 (or below) and the paper's formula is
+    undefined — those (degenerate, one-sample) lags fall back to divisor 1
+    instead of producing ±inf.
     """
     h = jnp.arange(max_lag + 1)
     if normalization == "paper":
-        return 1.0 / (n - h - 1)
+        return 1.0 / jnp.maximum(n - h - 1, 1)
     return jnp.full((max_lag + 1,), 1.0 / n)
 
 
-def raw_lag_sums(x: jax.Array, max_lag: int) -> jax.Array:
-    """Serial oracle: S(h) = Σ_{k=0}^{N-1-h} X_k X_{k+h}^T, h = 0..max_lag.
+def raw_lag_sums(
+    x: jax.Array, max_lag: int, backend: BackendSpec = None
+) -> jax.Array:
+    """S(h) = Σ_{k=0}^{N-1-h} X_k X_{k+h}ᵀ, h = 0..max_lag: (max_lag+1, d, d).
 
-    Returns (max_lag+1, d, d).
+    Thin front-end over the backend ``lagged_sums`` primitive (the jnp
+    implementation is the serial correctness oracle).
     """
-    if x.ndim == 1:
-        x = x[:, None]
-    n = x.shape[0]
-
-    def one(h):
-        head = jax.lax.dynamic_slice_in_dim(x, 0, n - max_lag, axis=0)
-        shifted = jax.lax.dynamic_slice_in_dim(x, h, n - max_lag, axis=0)
-        # Only the common full-length prefix enters this vectorized form;
-        # the ragged tail (k in [n-max_lag, n-h)) is added below.
-        return jnp.einsum("ti,tj->ij", head, shifted)
-
-    full = jax.vmap(one)(jnp.arange(max_lag + 1))
-
-    # Ragged tail: for lag h, centers k = n-max_lag .. n-1-h.
-    def tail(h):
-        ks = jnp.arange(max_lag)  # offsets into the tail region
-        k = n - max_lag + ks
-        valid = (k + h) <= (n - 1)
-        xk = x[jnp.clip(k, 0, n - 1)]
-        xkh = x[jnp.clip(k + h, 0, n - 1)]
-        contrib = jnp.einsum("ti,tj->tij", xk, xkh)
-        return jnp.sum(jnp.where(valid[:, None, None], contrib, 0.0), axis=0)
-
-    if max_lag > 0:
-        full = full + jax.vmap(tail)(jnp.arange(max_lag + 1))
-    return full
+    return get_backend(backend).lagged_sums(x, max_lag)
 
 
-def block_lag_sums(blocks: jax.Array, spec: OverlapSpec, max_lag: int) -> jax.Array:
-    """Per-block lag sums via lagged matmuls: (P, max_lag+1, d, d).
+def block_lag_sums(
+    blocks: jax.Array,
+    spec: OverlapSpec,
+    max_lag: int,
+    backend: BackendSpec = None,
+) -> jax.Array:
+    """Per-block lag sums via the backend's masked lagged matmul:
+    (P, max_lag+1, d, d).
 
     Requires ``spec.h_left == 0`` and ``spec.h_right >= max_lag`` (causal
     forward window).  Boundary correctness is automatic: halo slots beyond
-    the global series end are zero-filled, so their products vanish — no
-    masks needed (the paper's Fig. 2 scheme).
+    the global series end are zero-filled, so their products vanish — every
+    block start stays unmasked (the paper's Fig. 2 scheme).
     """
     if spec.h_left != 0 or spec.h_right < max_lag:
         raise ValueError(
             f"autocovariance at max_lag={max_lag} needs h_left=0, "
             f"h_right>={max_lag}; got ({spec.h_left},{spec.h_right})"
         )
+    be = get_backend(backend)
     nb = spec.block_size
+    ones = jnp.ones((nb,), jnp.bool_)
 
     def per_block(block):
-        core = block[:nb]  # h_left == 0 → core leads
-
-        def one(h):
-            shifted = jax.lax.dynamic_slice_in_dim(block, h, nb, axis=0)
-            return jnp.einsum("ti,tj->ij", core, shifted)
-
-        return jax.vmap(one)(jnp.arange(max_lag + 1))
+        return be.masked_lagged_sums(block[: nb + max_lag], ones, max_lag)
 
     return jax.vmap(per_block)(blocks)
 
@@ -134,13 +122,14 @@ def autocovariance(
     max_lag: int,
     normalization: Normalization = "paper",
     center: bool = False,
+    backend: BackendSpec = None,
 ) -> jax.Array:
     """Serial γ̂(h), h = 0..max_lag: (max_lag+1, d, d).  γ̂(-h) = γ̂(h)ᵀ."""
     if x.ndim == 1:
         x = x[:, None]
     if center:
         x = x - mean(x)[None, :]
-    s = raw_lag_sums(x, max_lag)
+    s = get_backend(backend).lagged_sums(x, max_lag)
     norm = gamma_normalizer(x.shape[0], max_lag, normalization)
     return s * norm[:, None, None]
 
@@ -151,6 +140,7 @@ def autocovariance_blocked(
     block_size: int,
     normalization: Normalization = "paper",
     center: bool = False,
+    backend: BackendSpec = None,
 ) -> jax.Array:
     """Embarrassingly-parallel γ̂ over overlapping blocks (paper Fig. 2/4)."""
     if x.ndim == 1:
@@ -159,7 +149,7 @@ def autocovariance_blocked(
         x = x - mean(x)[None, :]
     spec = OverlapSpec(n=x.shape[0], block_size=block_size, h_left=0, h_right=max_lag)
     blocks, _ = make_overlapping_blocks(x, spec)
-    partial = block_lag_sums(blocks, spec, max_lag)
+    partial = block_lag_sums(blocks, spec, max_lag, backend=backend)
     s = jnp.sum(partial, axis=0)
     norm = gamma_normalizer(x.shape[0], max_lag, normalization)
     return s * norm[:, None, None]
@@ -172,17 +162,21 @@ def autocovariance_sharded(
     mesh: Mesh,
     axis: str = "data",
     normalization: Normalization = "paper",
+    backend: BackendSpec = None,
 ) -> jax.Array:
     """Cluster path: blocks pre-sharded over ``axis``; one psum of (H+1,d,d).
 
     Data never moves between devices — only the (max_lag+1)·d² sufficient
-    statistic is reduced.  This is the paper's core scaling claim.
+    statistic is reduced.  This is the paper's core scaling claim.  The
+    per-shard local contraction runs through the backend registry, so each
+    shard can hit the Pallas tile kernel while the collective stays the
+    backend-agnostic psum.
     """
 
     from ...parallel.sharding import psum_tree, shard_map_compat
 
     def local(blocks_local):
-        partial = block_lag_sums(blocks_local, spec, max_lag)
+        partial = block_lag_sums(blocks_local, spec, max_lag, backend=backend)
         return psum_tree(jnp.sum(partial, axis=0), axis)
 
     s = shard_map_compat(local, mesh=mesh, in_specs=P(axis), out_specs=P())(blocks)
@@ -190,57 +184,50 @@ def autocovariance_sharded(
     return s * norm[:, None, None]
 
 
-def _lag_sum_chunk_kernel(max_lag: int):
-    """Masked-window lag sums in the MXU matmul form (ChunkKernel contract).
+def windowed_moments(
+    x: jax.Array, window: int, backend: BackendSpec = None
+) -> dict:
+    """Rolling mean/variance over every full width-``window`` slice.
 
-    For y_padded (L + max_lag, d) and start_mask (L,):
-    S(h) = Σ_{s: mask[s]} y_s y_{s+h}ᵀ — one lagged matmul per lag, never a
-    per-center vmap (same contraction as :func:`block_lag_sums`).
+    Returns {"mean": (n_win, d), "var": (n_win, d)} (population variance),
+    computed from the backend's ``windowed_moments`` sum/sum-of-squares
+    primitive — one VPU tile pass on the Pallas backend.
+
+    The variance pass runs on the globally centered series: Var is
+    shift-invariant, and E[x²]−E[x]² in f32 cancels catastrophically for
+    high-mean series (a 1e4 offset swamps a 1e-3 signal), so the second
+    moment is taken about the global mean and clamped at 0.
     """
-
-    def ck(y_padded: jax.Array, start_mask: jax.Array) -> jax.Array:
-        L = start_mask.shape[0]
-        head = jnp.where(start_mask[:, None], y_padded[:L], 0.0)
-
-        def one(h):
-            shifted = jax.lax.dynamic_slice_in_dim(y_padded, h, L, axis=0)
-            return jnp.einsum("ti,tj->ij", head, shifted)
-
-        return jax.vmap(one)(jnp.arange(max_lag + 1))
-
-    return ck
+    if x.ndim == 1:
+        x = x[:, None]
+    be = get_backend(backend)
+    mu = mean(x)
+    s = be.windowed_moments(x - mu[None, :], window)
+    m_c = s[:, 0] / window
+    var = jnp.maximum(s[:, 1] / window - m_c * m_c, 0.0)
+    return {"mean": m_c + mu[None, :], "var": var}
 
 
-def lag_sum_engine(max_lag: int, d: int) -> StreamingEngine:
+def lag_sum_engine(
+    max_lag: int, d: int, backend: BackendSpec = None
+) -> StreamingEngine:
     """Streaming engine for the lag-sum sufficient statistic S(0..max_lag).
 
     ``state.stat`` is (max_lag+1, d, d); each chunk update carries only the
-    last ``max_lag`` samples of context.  Finalize with
+    last ``max_lag`` samples of context.  The chunk kernel is the backend's
+    ``masked_lagged_sums`` — with ``backend="pallas"`` every streaming
+    ``update``/``merge`` runs the VMEM tile kernel.  Finalize with
     :func:`streaming_autocovariance` (γ̂, feeds Yule-Walker/ARMA) or read
     the raw windowed sums directly.
     """
+    be = get_backend(backend)
+
+    def ck(y_padded: jax.Array, start_mask: jax.Array) -> jax.Array:
+        return be.masked_lagged_sums(y_padded, start_mask, max_lag)
+
     return StreamingEngine(
-        d=d, h_left=0, h_right=max_lag, chunk_kernel=_lag_sum_chunk_kernel(max_lag)
+        d=d, h_left=0, h_right=max_lag, chunk_kernel=ck, backend=be
     )
-
-
-def _ragged_tail_lag_sums(tail: jax.Array, max_lag: int) -> jax.Array:
-    """End-of-series correction: Σ_{j} t_j t_{j+h}ᵀ over the carried tail.
-
-    The windowed stream counts only starts with a *full* forward window
-    (s ≤ n-1-max_lag); the serial :func:`raw_lag_sums` is ragged — lag h
-    keeps starts up to n-1-h.  The missing pairs live entirely within the
-    last ``max_lag`` samples, i.e. in ``state.tail`` (right-aligned, zero
-    where invalid, so the masked rows vanish from the products).
-    """
-    H = max_lag
-    tpad = jnp.concatenate([tail, jnp.zeros_like(tail)])
-
-    def one(h):
-        shifted = jax.lax.dynamic_slice_in_dim(tpad, h, H, axis=0)
-        return jnp.einsum("ti,tj->ij", tail, shifted)
-
-    return jax.vmap(one)(jnp.arange(H + 1))
 
 
 def streaming_autocovariance(
@@ -252,9 +239,23 @@ def streaming_autocovariance(
 
     Equivalent to :func:`autocovariance` on the concatenated stream (the
     cross-strategy equivalence suite pins this to 1e-5).
+
+    The windowed stream counts only starts with a *full* forward window
+    (s ≤ n-1-max_lag); the serial estimator is ragged — lag h keeps starts
+    up to n-1-h.  The missing end-of-series pairs live entirely within the
+    last ``max_lag`` samples, i.e. in ``state.tail`` (right-aligned, zero
+    where invalid), and are recovered here with one more masked lagged
+    contraction through the engine's backend.
     """
     H = engine.h_right
-    s = state.stat + _ragged_tail_lag_sums(state.tail, H)
+    s = state.stat
+    if H > 0:
+        tail_sums = engine.backend.masked_lagged_sums(
+            jnp.concatenate([state.tail, jnp.zeros_like(state.tail)]),
+            jnp.ones((H,), jnp.bool_),
+            H,
+        )
+        s = s + tail_sums
     norm = gamma_normalizer(state.length, H, normalization)
     return s * norm[:, None, None]
 

@@ -53,17 +53,33 @@ def _stack_rhs(gamma: jax.Array, p: int) -> jax.Array:
     return jnp.concatenate([gamma[j] for j in range(1, p + 1)], axis=0)
 
 
-def yule_walker(gamma: jax.Array, p: int) -> Tuple[jax.Array, jax.Array]:
-    """Dense YW solve from γ̂(0..p).
+def yule_walker(
+    gamma: jax.Array,
+    p: int,
+    backend=None,
+    normalization: str = "standard",
+) -> Tuple[jax.Array, jax.Array]:
+    """Dense YW solve from γ̂(0..p) — or straight from a raw series.
 
     Args:
-      gamma: (≥p+1, d, d) stacked autocovariances, γ(h) = E[X_t X_{t+h}ᵀ].
+      gamma: (≥p+1, d, d) stacked autocovariances, γ(h) = E[X_t X_{t+h}ᵀ];
+        OR a raw series ((n,) or (n, d) — anything with ndim < 3), in which
+        case γ̂ is computed first through the compute-backend registry
+        (`repro.core.backend`) with the given ``normalization`` (PSD-safe
+        "standard" by default).
       p: AR order.
+      backend: compute-backend spec for the series → γ̂ contraction (ignored
+        when ``gamma`` is already stacked autocovariances).
 
     Returns:
       A: (p, d, d) coefficient matrices A₁..A_p.
       sigma: (d, d) innovation covariance estimate.
     """
+    gamma = jnp.asarray(gamma)
+    if gamma.ndim < 3:
+        from .stats import autocovariance
+
+        gamma = autocovariance(gamma, p, normalization=normalization, backend=backend)
     if gamma.shape[0] < p + 1:
         raise ValueError(f"need γ̂ up to lag {p}, got {gamma.shape[0] - 1}")
     d = gamma.shape[1]

@@ -19,9 +19,11 @@ result (property-tested):
     `psum` — the cluster-level instantiation.
 
 Estimators that admit a faster algebraic form (autocovariance = lagged
-matmuls feeding the MXU) bypass the per-center vmap and implement a *block
-kernel* directly; see `repro.core.estimators.stats` and
-`repro.kernels.window_stats`.
+matmuls feeding the MXU) bypass the per-center vmap by passing a
+``chunk_kernel`` (masked-window reducer) built from a `repro.core.backend`
+primitive — the same registry that picks between pure jnp and the Pallas
+VMEM tile kernels of `repro.kernels.window_stats`; see
+`repro.core.estimators.stats.block_lag_sums`.
 
 A fourth strategy lives in `repro.core.streaming`: the same ⊕ exposed as an
 explicit **PartialState monoid** (init / update(chunk) / merge / finalize)
@@ -108,10 +110,11 @@ def serial_window_map_reduce(
 
 
 def block_partials(
-    kernel: KernelFn,
+    kernel: Optional[KernelFn],
     blocks: jax.Array,
     spec: OverlapSpec,
     block_offset: jax.Array | int = 0,
+    chunk_kernel: Optional[Callable] = None,
 ) -> Any:
     """Per-block partial sums: pytree with leading axis P_local.
 
@@ -122,6 +125,13 @@ def block_partials(
     ``block_offset`` is the global id of ``blocks[0]`` — pass
     ``jax.lax.axis_index(axis) * blocks_per_device`` when calling from inside
     shard_map on a sharded block axis (it participates in tracing).
+
+    ``chunk_kernel`` (the `repro.core.streaming.ChunkKernel` contract:
+    ``(y_padded, start_mask) → pytree``) replaces the per-center vmap with a
+    fused masked-window reducer — a halo-padded block IS a valid
+    ``y_padded`` with its core starts as the mask.  Build one from a
+    `repro.core.backend` primitive (e.g. ``masked_lagged_sums``) to run the
+    block engine through the Pallas tile path; ``kernel`` may then be None.
     """
     p_local = blocks.shape[0]
     # Global index of each core center, and validity of its whole window.
@@ -131,6 +141,11 @@ def block_partials(
     # Tail padding in the last block duplicates clamped centers; mask those too.
     valid &= centers < spec.n
     valid_mask = valid
+
+    if chunk_kernel is not None:
+        return jax.vmap(chunk_kernel)(blocks, valid_mask)
+    if kernel is None:
+        raise ValueError("need a per-window kernel or a chunk_kernel")
 
     def per_block(block, mask):
         wins = _windows(block, spec.h_left, spec.h_right)  # (block_size, W, d)
@@ -142,23 +157,25 @@ def block_partials(
 
 
 def block_window_map_reduce(
-    kernel: KernelFn,
+    kernel: Optional[KernelFn],
     x: jax.Array,
     spec: OverlapSpec,
+    chunk_kernel: Optional[Callable] = None,
 ) -> Any:
     """Embarrassingly-parallel path on one host: build overlapping blocks,
     reduce each independently, sum the P partials."""
     blocks, _ = make_overlapping_blocks(x, spec)
-    partials = block_partials(kernel, blocks, spec)
+    partials = block_partials(kernel, blocks, spec, chunk_kernel=chunk_kernel)
     return jax.tree.map(lambda l: jnp.sum(l, axis=0), partials)
 
 
 def sharded_window_map_reduce(
-    kernel: KernelFn,
+    kernel: Optional[KernelFn],
     blocks: jax.Array,
     spec: OverlapSpec,
     mesh: Mesh,
     axis: str = "data",
+    chunk_kernel: Optional[Callable] = None,
 ) -> Any:
     """Cluster path: block axis sharded over ``axis``; one psum at the end.
 
@@ -179,7 +196,9 @@ def sharded_window_map_reduce(
         from ..parallel.sharding import psum_tree
 
         offset = jax.lax.axis_index(axis) * blocks_per_device
-        partials = block_partials(kernel, blocks_local, spec, block_offset=offset)
+        partials = block_partials(
+            kernel, blocks_local, spec, block_offset=offset, chunk_kernel=chunk_kernel
+        )
         local_sum = jax.tree.map(lambda l: jnp.sum(l, axis=0), partials)
         return psum_tree(local_sum, axis)
 

@@ -45,7 +45,10 @@ forget*, re-derived from first principles for halo-free ingestion.
 
 Estimator front-ends live next to their batch counterparts:
 `estimators.stats.lag_sum_engine` (autocovariance → Yule-Walker → ARMA) and
-`estimators.spectral.welch_engine`.
+`estimators.spectral.welch_engine`.  Their ChunkKernels are built from
+`repro.core.backend` primitives, so the same engine streams through pure
+jnp or the Pallas VMEM tile kernels by passing ``backend=`` — the execution
+substrate is a deployment knob, not a property of the estimator.
 """
 from __future__ import annotations
 
@@ -56,6 +59,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from .backend import BackendSpec, get_backend
 from .mapreduce import tree_sum
 
 __all__ = ["PartialState", "StreamingEngine"]
@@ -112,7 +116,15 @@ class StreamingEngine:
         ``chunk_kernel`` is given.
       chunk_kernel: fused masked-window reducer (e.g. the lagged-matmul MXU
         form for autocovariance) honouring the :data:`ChunkKernel` contract.
+        Estimator front-ends build these from `repro.core.backend`
+        primitives (``masked_lagged_sums`` / ``segment_fft_power``), so a
+        streaming ``update`` hits the same jnp-or-Pallas tile path as the
+        batch estimators.
       stride: windows start only at global indices ≡ 0 (mod stride).
+      backend: compute-backend spec (name, Backend instance, or None for the
+        registry default).  Recorded on the engine so finalizers
+        (``streaming_autocovariance``'s ragged-tail correction) run their own
+        contractions through the same substrate the updates used.
     """
 
     def __init__(
@@ -123,6 +135,7 @@ class StreamingEngine:
         kernel: Optional[WindowKernel] = None,
         chunk_kernel: Optional[ChunkKernel] = None,
         stride: int = 1,
+        backend: BackendSpec = None,
     ):
         if kernel is None and chunk_kernel is None:
             raise ValueError("need a per-window kernel or a chunk_kernel")
@@ -134,6 +147,7 @@ class StreamingEngine:
         self.h_left = h_left
         self.h_right = h_right
         self.stride = stride
+        self.backend = get_backend(backend)
         self.window = h_left + 1 + h_right
         self.carry = self.window - 1  # samples of context an update keeps
 

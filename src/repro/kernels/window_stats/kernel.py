@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: lagged cross-product sums over overlapping VMEM tiles.
+"""Pallas TPU kernels: windowed contractions over overlapping VMEM tiles.
 
 Paper §12.2 (Fig. 9) stages blocks of size N_B + 2H into GPU shared memory so
 every thread's window is local.  The TPU adaptation (DESIGN.md §2):
@@ -13,6 +13,15 @@ every thread's window is local.  The TPU adaptation (DESIGN.md §2):
   * the output block (H+1, d, d) is revisited by every grid step
     (accumulation over the sequential TPU grid), initialized at step 0.
 
+Two kernels share the tiling scheme:
+
+  :func:`cross_window_stats_pallas` — cross-lagged sums Σ_k a_k b_{k+h}ᵀ.
+    With a = b this is the plain lagged-sum statistic; with a = mask·b it is
+    the *masked* form the streaming engine's ChunkKernel contract needs
+    (`repro.core.backend.PallasBackend.masked_lagged_sums`).
+  :func:`window_moments_pallas` — per-window first/second moment sums
+    (rolling mean/variance), one VPU accumulation pass per tile.
+
 Zero-fill boundary handling: ops.py pads the series with one extra zero tile
 so the last core tile's "next" view is all zeros — out-of-range products
 vanish without any masking (the same trick the overlap data structure uses).
@@ -26,12 +35,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_core_ref, x_next_ref, out_ref, *, max_lag: int, block_t: int):
+def _lag_kernel(a_core_ref, b_core_ref, b_next_ref, out_ref, *, max_lag: int, block_t: int):
     i = pl.program_id(0)
 
-    core = x_core_ref[...]  # (block_t, d)
-    nxt = x_next_ref[...]  # (block_t, d)
-    both = jnp.concatenate([core, nxt], axis=0)  # (2·block_t, d)
+    core = a_core_ref[...]  # (block_t, d) — the (possibly masked) left factor
+    both = jnp.concatenate([b_core_ref[...], b_next_ref[...]], axis=0)  # (2·block_t, d)
 
     @pl.when(i == 0)
     def _init():
@@ -49,24 +57,28 @@ def _kernel(x_core_ref, x_next_ref, out_ref, *, max_lag: int, block_t: int):
         out_ref[h, :, :] += contrib
 
 
-def window_stats_pallas(
-    x: jax.Array,
+def cross_window_stats_pallas(
+    a: jax.Array,
+    b: jax.Array,
     max_lag: int,
     *,
     block_t: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """Raw lagged sums S(0..max_lag) of a zero-padded series.
+    """Cross-lagged sums S(h) = Σ_k a_k b_{k+h}ᵀ of two zero-padded series.
 
     Args:
-      x: (n_padded, d) with n_padded % block_t == 0, REQUIRED to end with at
-        least one all-zero tile (ops.py guarantees this) and max_lag ≤ block_t.
+      a, b: (n_padded, d) with n_padded % block_t == 0, REQUIRED to end with
+        at least one all-zero tile (ops.py guarantees this) and
+        max_lag ≤ block_t.  Pass a is b for the plain lagged sums.
       max_lag: H.
       block_t: core tile length N_B (the VMEM block).
 
     Returns (max_lag+1, d, d) float32.
     """
-    n, d = x.shape
+    n, d = b.shape
+    if a.shape != b.shape:
+        raise ValueError(f"a/b shapes must match, got {a.shape} vs {b.shape}")
     if n % block_t != 0:
         raise ValueError(f"padded length {n} must be a multiple of block_t={block_t}")
     if max_lag > block_t:
@@ -75,15 +87,89 @@ def window_stats_pallas(
     num_tiles = grid[0]
 
     return pl.pallas_call(
-        functools.partial(_kernel, max_lag=max_lag, block_t=block_t),
+        functools.partial(_lag_kernel, max_lag=max_lag, block_t=block_t),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_t, d), lambda i: (i, 0)),  # core tile
-            pl.BlockSpec(  # halo: the next tile (clamped; last tile is zeros)
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),  # a core tile
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),  # b core tile
+            pl.BlockSpec(  # halo: the next b tile (clamped; last tile is zeros)
                 (block_t, d), lambda i: (jnp.minimum(i + 1, num_tiles - 1), 0)
             ),
         ],
         out_specs=pl.BlockSpec((max_lag + 1, d, d), lambda i: (0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((max_lag + 1, d, d), jnp.float32),
+        interpret=interpret,
+    )(a, b, b)
+
+
+def window_stats_pallas(
+    x: jax.Array,
+    max_lag: int,
+    *,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw lagged sums S(0..max_lag) of a zero-padded series (a = b case)."""
+    return cross_window_stats_pallas(
+        x, x, max_lag, block_t=block_t, interpret=interpret
+    )
+
+
+def _moments_kernel(x_core_ref, x_next_ref, out_ref, *, window: int, block_t: int):
+    core = x_core_ref[...]  # (block_t, d)
+    both = jnp.concatenate([core, x_next_ref[...]], axis=0)  # (2·block_t, d)
+
+    # VPU accumulation: window starts s = tile offset + [0, block_t); sample
+    # s + j lives at local row s + j of `both` (j ≤ window-1 ≤ block_t).
+    # fori_loop keeps the traced kernel body O(1) in window — a Python loop
+    # would unroll `window` slice+add pairs into the lowered program.
+    def body(j, carry):
+        acc, acc2 = carry
+        seg = jax.lax.dynamic_slice_in_dim(both, j, block_t, axis=0)
+        seg = seg.astype(jnp.float32)
+        return acc + seg, acc2 + seg * seg
+
+    zeros = jnp.zeros(core.shape, jnp.float32)
+    acc, acc2 = jax.lax.fori_loop(0, window, body, (zeros, zeros))
+    out_ref[0, :, :] = acc
+    out_ref[1, :, :] = acc2
+
+
+def window_moments_pallas(
+    x: jax.Array,
+    window: int,
+    *,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-window moment sums of a zero-padded series.
+
+    Args:
+      x: (n_padded, d), n_padded % block_t == 0, ending with one all-zero
+        tile; window ≤ block_t + 1.
+
+    Returns (2, n_padded, d) float32: out[0, s] = Σ_{j<window} x_{s+j},
+    out[1, s] = Σ_{j<window} x²_{s+j}.  Starts whose window runs into the
+    padding are sliced off by ops.py.
+    """
+    n, d = x.shape
+    if n % block_t != 0:
+        raise ValueError(f"padded length {n} must be a multiple of block_t={block_t}")
+    if window > block_t + 1:
+        raise ValueError(f"window={window} must be ≤ block_t+1={block_t + 1}")
+    grid = (n // block_t,)
+    num_tiles = grid[0]
+
+    return pl.pallas_call(
+        functools.partial(_moments_kernel, window=window, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec(
+                (block_t, d), lambda i: (jnp.minimum(i + 1, num_tiles - 1), 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((2, block_t, d), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, n, d), jnp.float32),
         interpret=interpret,
     )(x, x)

@@ -1,8 +1,11 @@
-"""Public jit'd wrapper for the window_stats kernel.
+"""Public jit'd wrappers for the window_stats kernels.
 
 Handles: zero-padding to a tile multiple PLUS one guaranteed all-zero halo
-tile (the kernel's boundary contract), dtype promotion, normalization into
-autocovariances, and the interpret switch for CPU validation.
+tile (the kernels' boundary contract), dtype promotion (f32 accumulation),
+normalization into autocovariances, and the interpret switch for CPU
+validation.  These wrappers are the Pallas half of the compute-backend
+registry (`repro.core.backend.PallasBackend`); prefer routing through the
+registry unless you need the raw kernels.
 """
 from __future__ import annotations
 
@@ -11,8 +14,58 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import window_stats_pallas
+from .kernel import cross_window_stats_pallas, window_moments_pallas
 from .ref import window_stats_ref
+
+
+def _clamp_block_t(block_t: int, n: int, min_tile: int) -> int:
+    """Positive, contract-satisfying tile size for ANY series length.
+
+    The tile never exceeds the (rounded-up) series length, never drops below
+    the kernel's per-tile window requirement (``min_tile``: max_lag for the
+    lag kernel, window for the moments kernel), and is at least 1 — so the
+    grid ``n_pad // block_t`` is always ≥ 1, including tiny series with
+    n < max_lag and the degenerate n == 0.
+    """
+    return max(min(block_t, max(n, 1)), min_tile, 1)
+
+
+def _pad_tiles(x: jax.Array, block_t: int) -> jax.Array:
+    """Zero-pad (n, d) to a multiple of block_t plus one all-zero halo tile."""
+    n = x.shape[0]
+    n_pad = -(-max(n, 1) // block_t) * block_t + block_t
+    return jnp.pad(x.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("max_lag", "block_t", "interpret"))
+def cross_lagged_sums(
+    a: jax.Array,
+    b: jax.Array,
+    max_lag: int,
+    *,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """S(h) = Σ_k a_k b_{k+h}ᵀ for h = 0..max_lag, via the Pallas kernel.
+
+    ``a`` may be shorter than ``b`` (it is zero-extended on the right); both
+    are computed in f32 accumulation whatever the input dtype.
+    """
+    if a.ndim == 1:
+        a = a[:, None]
+    if b.ndim == 1:
+        b = b[:, None]
+    if a.shape[0] < b.shape[0]:
+        a = jnp.pad(a, ((0, b.shape[0] - a.shape[0]), (0, 0)))
+    n = b.shape[0]
+    block_t = _clamp_block_t(block_t, n, max_lag)
+    return cross_window_stats_pallas(
+        _pad_tiles(a, block_t),
+        _pad_tiles(b, block_t),
+        max_lag,
+        block_t=block_t,
+        interpret=interpret,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("max_lag", "block_t", "interpret"))
@@ -28,16 +81,64 @@ def lagged_sums(
     Args:
       x: (n, d) series, any float dtype (computed in f32 accumulation).
     """
+    return cross_lagged_sums(x, x, max_lag, block_t=block_t, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("max_lag", "block_t", "interpret"))
+def masked_lagged_sums(
+    y_padded: jax.Array,
+    start_mask: jax.Array,
+    max_lag: int,
+    *,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """S(h) = Σ_{s: start_mask[s]} y_s y_{s+h}ᵀ — the ChunkKernel contract.
+
+    The masked form reduces to a *cross*-lagged sum between the mask-zeroed
+    head rows and the raw padded series, so the streaming engine's update and
+    merge both hit the same MXU tile kernel as the batch path.
+
+    Args:
+      y_padded: (≥ L, d) — rows [s, s+max_lag] are read for every unmasked
+        start (zero-extended if shorter than L + max_lag).
+      start_mask: (L,) bool.
+    """
+    if y_padded.ndim == 1:
+        y_padded = y_padded[:, None]
+    L = start_mask.shape[0]
+    need = L + max_lag
+    if y_padded.shape[0] < need:
+        y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
+    head = jnp.where(start_mask[:, None], y_padded[:L].astype(jnp.float32), 0.0)
+    return cross_lagged_sums(
+        head, y_padded, max_lag, block_t=block_t, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_t", "interpret"))
+def windowed_moments(
+    x: jax.Array,
+    window: int,
+    *,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Sliding-window moment sums: (n_win, 2, d) of [Σ x, Σ x²] per window.
+
+    Windows are the n - window + 1 full width-``window`` slices of x.
+    """
     if x.ndim == 1:
         x = x[:, None]
-    n, d = x.shape
-    block_t = min(block_t, max(max_lag, 1) if n < block_t else block_t)
-    block_t = max(block_t, max_lag)
-    # pad to a multiple of block_t, then one extra zero tile as the halo of
-    # the final core tile.
-    n_pad = -(-n // block_t) * block_t + block_t
-    xp = jnp.pad(x.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
-    return window_stats_pallas(xp, max_lag, block_t=block_t, interpret=interpret)
+    n = x.shape[0]
+    n_win = n - window + 1
+    if n_win < 1:
+        raise ValueError(f"series of length {n} has no full window of width {window}")
+    block_t = _clamp_block_t(block_t, n, window)
+    out = window_moments_pallas(
+        _pad_tiles(x, block_t), window, block_t=block_t, interpret=interpret
+    )
+    return jnp.moveaxis(out[:, :n_win], 0, 1)
 
 
 @functools.partial(
@@ -52,15 +153,14 @@ def autocovariance(
     normalization: str = "paper",
 ) -> jax.Array:
     """γ̂(0..max_lag) through the kernel (drop-in for stats.autocovariance)."""
+    # function-level import: stats pulls in core.backend, which only reaches
+    # back into kernels lazily inside backend methods — no module cycle.
+    from ...core.estimators.stats import gamma_normalizer
+
     if x.ndim == 1:
         x = x[:, None]
     s = lagged_sums(x, max_lag, block_t=block_t, interpret=interpret)
-    n = x.shape[0]
-    h = jnp.arange(max_lag + 1)
-    if normalization == "paper":
-        norm = 1.0 / (n - h - 1)
-    else:
-        norm = jnp.full((max_lag + 1,), 1.0 / n)
+    norm = gamma_normalizer(x.shape[0], max_lag, normalization)
     return s * norm[:, None, None]
 
 

@@ -22,3 +22,14 @@ def window_stats_ref(x: jax.Array, max_lag: int) -> jax.Array:
         return jnp.einsum("ti,tj->ij", x, shifted)
 
     return jax.vmap(one)(jnp.arange(max_lag + 1)).astype(jnp.float32)
+
+
+def window_moments_ref(x: jax.Array, window: int) -> jax.Array:
+    """(n_win, 2, d) of [Σ x, Σ x²] over every full width-``window`` slice."""
+    n = x.shape[0]
+    n_win = n - window + 1
+    starts = jnp.arange(n_win)
+    wins = jax.vmap(lambda s: jax.lax.dynamic_slice_in_dim(x, s, window, axis=0))(
+        starts
+    ).astype(jnp.float32)
+    return jnp.stack([jnp.sum(wins, axis=1), jnp.sum(wins**2, axis=1)], axis=1)

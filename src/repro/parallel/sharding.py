@@ -148,7 +148,11 @@ def psum_tree(tree: Any, axis: str) -> Any:
     never the data.  Used by every sharded estimator path
     (`core.mapreduce.sharded_window_map_reduce`,
     `core.estimators.stats.autocovariance_sharded`,
-    `timeseries.TimeSeriesStore.map_reduce`).
+    `timeseries.TimeSeriesStore.map_reduce`).  The per-shard local
+    contraction feeding this collective routes through the compute-backend
+    registry (`repro.core.backend`) — shards hit the Pallas tile kernels or
+    pure jnp per the caller's ``backend=``, while the collective itself is
+    backend-agnostic.
     """
     return jax.tree.map(lambda l: jax.lax.psum(l, axis), tree)
 

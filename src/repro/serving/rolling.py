@@ -14,6 +14,12 @@ service never stores raw series — only per-user `PartialState`s, which are
     and finalizes.  On a mesh, lane partials built from halo-complete
     blocks reduce with the single ``psum`` of
     `repro.parallel.sharding.psum_tree` — the read path's only collective.
+
+The compute substrate of the ingest hot loop is the engine's backend
+(`repro.core.backend`): build the engine with
+``lag_sum_engine(..., backend="pallas")`` and every batched ``ingest``
+update — and the ragged-tail correction at query finalize — runs the VMEM
+tile kernels; with ``"auto"`` the registry picks by platform and size.
 """
 from __future__ import annotations
 
@@ -54,6 +60,11 @@ class RollingStatsService:
 
         # jit caches one program per (arrival batch, chunk length) shape.
         self._scatter_update = jax.jit(scatter_update)
+
+    @property
+    def backend(self):
+        """The compute backend every ingest lane's updates run through."""
+        return self.engine.backend
 
     # -- write path --------------------------------------------------------
     def ingest(

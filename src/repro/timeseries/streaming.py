@@ -98,3 +98,9 @@ class StreamingEstimator:
     def length(self) -> jax.Array:
         """Samples absorbed so far (per series when batched)."""
         return self.state.length
+
+    @property
+    def backend(self):
+        """The compute backend (`repro.core.backend`) ingestion runs through
+        — fixed at engine construction (e.g. ``lag_sum_engine(backend=…)``)."""
+        return self.engine.backend

@@ -27,6 +27,12 @@ def pytest_configure(config):
         "slow: jit-heavy model/system test, deselected by default; "
         "include with --runslow (or select directly with -m slow)",
     )
+    config.addinivalue_line(
+        "markers",
+        "backend: compute-backend registry parity test (jnp vs "
+        "pallas-interpret); always part of the fast default tier — "
+        "select alone with -m backend",
+    )
 
 
 def pytest_collection_modifyitems(config, items):
@@ -40,8 +46,11 @@ def pytest_collection_modifyitems(config, items):
     )
     if config.getoption("--runslow") or config.getoption("-m") or explicit:
         return
-    selected = [i for i in items if "slow" not in i.keywords]
-    deselected = [i for i in items if "slow" in i.keywords]
+    # backend-parity tests are pinned into the fast tier even if a future
+    # module marks them slow: cross-backend equivalence is tier-1.
+    keep = lambda i: "slow" not in i.keywords or "backend" in i.keywords
+    selected = [i for i in items if keep(i)]
+    deselected = [i for i in items if not keep(i)]
     if deselected:
         config.hook.pytest_deselected(items=deselected)
         items[:] = selected
