@@ -8,24 +8,19 @@ the backend dispatch starts populating per commit.
 """
 from __future__ import annotations
 
-import json
-import os
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.backend import get_backend
 from repro.core.estimators.stats import lag_sum_engine, streaming_autocovariance
 
-from .common import row, time_call
+from .common import row, time_call, write_bench_json
 
 # Interpret-mode Pallas is python-slow; shapes are sized so the full suite
 # stays in seconds while the grid still covers many tiles.
 N, D, H = 65_536, 8, 8
 BANDED_D, BANDED_B, BANDED_RHS = 16_384, 8, 4
 CHUNK = 8_192
-
-_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_backends.json")
 
 
 def run() -> None:
@@ -73,20 +68,21 @@ def run() -> None:
     err = float(jnp.max(jnp.abs(g_j - g_p)))
     row("backends_parity_check", 0.0, f"err={err:.1e};interpret={jax.default_backend() != 'tpu'}")
 
-    payload = {
-        "platform": jax.default_backend(),
-        "pallas_interpret": jax.default_backend() != "tpu",
-        "shapes": {
-            "lag_sums": {"n": N, "d": D, "max_lag": H},
-            "banded_matvec": {"d": BANDED_D, "bandwidth": BANDED_B, "nrhs": BANDED_RHS},
-            "streaming_update": {"chunk": CHUNK, "max_lag": H, "d": D},
+    write_bench_json(
+        "BENCH_backends.json",
+        {
+            "pallas_interpret": jax.default_backend() != "tpu",
+            "shapes": {
+                "lag_sums": {"n": N, "d": D, "max_lag": H},
+                "banded_matvec": {
+                    "d": BANDED_D, "bandwidth": BANDED_B, "nrhs": BANDED_RHS
+                },
+                "streaming_update": {"chunk": CHUNK, "max_lag": H, "d": D},
+            },
+            "parity_max_abs_err": err,
+            "results": results,
         },
-        "parity_max_abs_err": err,
-        "results": results,
-    }
-    with open(_OUT, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
+    )
 
 
 if __name__ == "__main__":

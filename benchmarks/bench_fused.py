@@ -1,0 +1,178 @@
+"""Fused statistics plans — one traversal for N estimators (tentpole table).
+
+Three questions, answered on the jnp backend (CPU numbers; the Pallas tile
+fusion pays off again on TPU where the saved traversals are HBM reads):
+
+  * how much does serving FOUR statistics from ONE fused traversal save
+    over four sequential single-statistic passes (the acceptance target is
+    ≥2× — the lag-family members share one contraction, the moments ride
+    the same fused primitive);
+  * how does the fused plan's per-chunk ingest cost grow from 1 tracked
+    statistic to 4 (the marginal statistic should be nearly free);
+  * what does scan-driven ingest (one lax.scan program) save over the
+    per-chunk Python dispatch loop on a ≥64-chunk stream.
+
+Emits ``BENCH_fused.json`` at the repo root (via `benchmarks.run`) so the
+fused-plan perf trajectory populates per commit —
+`benchmarks.check_regression` diffs it against the committed baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import get_backend
+from repro.core.estimators.arma import fit_arma
+from repro.core.estimators.stats import (
+    autocovariance,
+    lag_sum_engine,
+    moment_engine,
+    streaming_window_moments,
+)
+from repro.core.estimators.yule_walker import yule_walker
+from repro.core.plan import (
+    arma_request,
+    autocovariance_request,
+    fused_engine,
+    moments_request,
+    yule_walker_request,
+)
+
+from .common import row, time_call, write_bench_json
+
+N, D, H, MOM_W = 400_000, 8, 16, 64
+CHUNK, N_CHUNKS = 2_048, 128  # scan-vs-loop stream shape
+
+FOUR_REQUESTS = [
+    autocovariance_request(H),
+    yule_walker_request(H),
+    arma_request(2, 2, m=H),
+    moments_request(MOM_W),
+]
+
+
+class _CountingBackend:
+    """Counts series-sized traversals so passes-over-data is measured, not
+    asserted (mirrors tests/test_plan.py)."""
+
+    name = "counting"
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.walks = 0
+
+    def __getattr__(self, prim):
+        fn = getattr(self._inner, prim)
+        masked = prim in ("masked_lagged_sums", "fused_lagged_moments")
+
+        def wrapped(*args, **kwargs):
+            lead = args[1].shape[0] if masked else args[0].shape[0]
+            if prim != "segment_fft_power" and lead >= N:
+                self.walks += 1
+            return fn(*args, **kwargs)
+
+        return wrapped
+
+
+def _count_passes(fn):
+    counting = _CountingBackend(get_backend("jnp"))
+    fn(counting)
+    return counting.walks
+
+
+def run() -> None:
+    x = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+    results = []
+
+    def bench(name, fn, *args, derived=""):
+        us = time_call(fn, *args)
+        results.append({"name": name, "us_per_call": us, "derived": derived})
+        row(f"fused_{name}", us, derived)
+        return us
+
+    # -- fused plan vs sequential single-statistic passes -------------------
+    plan4 = fused_engine(FOUR_REQUESTS, d=D, backend="jnp")
+    fused_fn = jax.jit(lambda xx: plan4.finalize(plan4.from_chunk(xx)))
+    us_fused = bench("plan_4stats", fused_fn, x, derived=f"N={N};d={D};H={H}")
+
+    seq_fns = [
+        jax.jit(lambda xx: autocovariance(xx, H, backend="jnp")),
+        jax.jit(lambda xx: yule_walker(xx, H, backend="jnp")),
+        jax.jit(lambda xx: fit_arma(xx, 2, 2, m=H, backend="jnp")),
+    ]
+    me = moment_engine(MOM_W, D, backend="jnp")
+    seq_fns.append(jax.jit(lambda xx: streaming_window_moments(me, me.from_chunk(xx))))
+    us_seq = sum(
+        bench(f"sequential_{nm}", fn, x)
+        for nm, fn in zip(["autocov", "yule_walker", "arma", "moments"], seq_fns)
+    )
+    speedup = us_seq / us_fused
+    passes_fused = _count_passes(
+        lambda be: (lambda p: p.finalize(p.from_chunk(x)))(
+            fused_engine(FOUR_REQUESTS, d=D, backend=be)
+        )
+    )
+    passes_seq = _count_passes(
+        lambda be: (
+            autocovariance(x, H, backend=be),
+            yule_walker(x, H, backend=be),
+            fit_arma(x, 2, 2, m=H, backend=be),
+            (lambda m: streaming_window_moments(m, m.from_chunk(x)))(
+                moment_engine(MOM_W, D, backend=be)
+            ),
+        )
+    )
+    row(
+        "fused_speedup_4stats",
+        0.0,
+        f"sequential/fused={speedup:.2f}x;passes_fused={passes_fused};"
+        f"passes_sequential={passes_seq}",
+    )
+
+    # -- marginal statistic cost: 1 vs 4 members per ingested chunk ---------
+    stack = x[: CHUNK * N_CHUNKS].reshape(N_CHUNKS, CHUNK, D)
+    plan1 = fused_engine([autocovariance_request(H)], d=D, backend="jnp")
+
+    def bench_ingest(name, fn):
+        us = time_call(fn)
+        derived = f"chunks={N_CHUNKS};chunk={CHUNK};us_per_chunk={us / N_CHUNKS:.1f}"
+        results.append({"name": name, "us_per_call": us, "derived": derived})
+        row(f"fused_{name}", us, derived)
+        return us
+
+    bench_ingest("ingest_plan_1stat", lambda: plan1.consume(plan1.init(), stack))
+    bench_ingest("ingest_plan_4stats", lambda: plan4.consume(plan4.init(), stack))
+
+    # -- scan-driven ingest vs per-chunk Python dispatch --------------------
+    engine = lag_sum_engine(H, D, backend="jnp")
+
+    def loop_ingest():
+        st = engine.init()
+        for i in range(N_CHUNKS):
+            st = engine.update_jit(st, stack[i])
+        return st.stat
+
+    def scan_ingest():
+        return engine.consume(engine.init(), stack).stat
+
+    us_loop = bench_ingest("ingest_python_loop", loop_ingest)
+    us_scan = bench_ingest("ingest_scan", scan_ingest)
+    row("fused_scan_vs_loop", 0.0, f"loop/scan={us_loop / us_scan:.2f}x")
+
+    write_bench_json(
+        "BENCH_fused.json",
+        {
+            "shapes": {
+                "plan": {"n": N, "d": D, "max_lag": H, "moments_window": MOM_W},
+                "ingest": {"chunks": N_CHUNKS, "chunk": CHUNK},
+            },
+            "speedup_fused_vs_sequential": speedup,
+            "passes_over_data": {"fused": passes_fused, "sequential": passes_seq},
+            "speedup_scan_vs_loop": us_loop / us_scan,
+            "results": results,
+        },
+    )
+
+
+if __name__ == "__main__":
+    run()

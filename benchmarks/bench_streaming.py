@@ -8,6 +8,10 @@ Three questions:
     is only ``max_lag`` samples, so cost should be ~linear in the chunk);
   * how does the vmapped multi-series batch axis scale (time per series
     should *fall* as the batch fills the device).
+
+Emits ``BENCH_streaming.json`` at the repo root (via `benchmarks.run`) so
+the streaming ingest cost enters the tracked perf trajectory —
+`benchmarks.check_regression` diffs it against the committed baseline.
 """
 from __future__ import annotations
 
@@ -21,7 +25,7 @@ from repro.core.estimators.stats import (
     streaming_autocovariance,
 )
 
-from .common import row, time_call
+from .common import row, time_call, write_bench_json
 
 N, D, H, BS = 400_000, 8, 8, 8192
 
@@ -36,16 +40,21 @@ def _stream_all(engine, update, x, chunk: int):
 
 def run():
     x = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+    results = []
+
+    def record(name, us, derived):
+        results.append({"name": name, "us_per_call": us, "derived": derived})
+        row(name, us, derived)
 
     serial = jax.jit(lambda x: autocovariance(x, H))
     blocked = jax.jit(lambda x: autocovariance_blocked(x, H, BS))
     us_serial = time_call(serial, x)
     us_blocked = time_call(blocked, x)
-    row("stream_baseline_serial", us_serial, f"N={N};d={D};H={H}")
-    row("stream_baseline_blocked", us_blocked, f"block_size={BS}")
+    record("stream_baseline_serial", us_serial, f"N={N};d={D};H={H}")
+    record("stream_baseline_blocked", us_blocked, f"block_size={BS}")
 
     engine = lag_sum_engine(H, D)
-    update = jax.jit(engine.update)
+    update = engine.update_jit  # cached program — no per-call retrace
     for chunk in (1024, 8192, 65536):
         us = time_call(lambda: _stream_all(engine, update, x, chunk))
         n_eff = N - N % chunk
@@ -57,18 +66,33 @@ def run():
                 )
             )
         )
-        row(
-            "stream_chunked",
+        record(
+            f"stream_chunked_{chunk}",
             us,
             f"chunk={chunk};samples_per_s={n_eff / (us * 1e-6):.3e};err={err:.1e}",
         )
+
+    # Scan-driven ingest of the same stream: one lax.scan device program.
+    chunk = 8192
+    stack = x[: N - N % chunk].reshape(-1, chunk, D)
+
+    def scan_ingest():
+        return engine.consume(engine.init(), stack).stat
+
+    us_scan = time_call(scan_ingest)
+    record(
+        "stream_scan_ingest",
+        us_scan,
+        f"chunk={chunk};chunks={stack.shape[0]};"
+        f"samples_per_s={(N - N % chunk) / (us_scan * 1e-6):.3e}",
+    )
 
     # Multi-series batch axis: B independent series, one vmapped update pass
     # per chunk.  Throughput is reported per series.
     n_b, chunk_b = 16_384, 2048
     for b in (1, 64, 512):
         xb = jax.random.normal(jax.random.PRNGKey(1), (b, n_b, D))
-        upd_b = jax.jit(engine.update_batch)
+        upd_b = engine.update_batch
 
         def stream_batch():
             st = engine.init_batch(b)
@@ -77,11 +101,16 @@ def run():
             return st
 
         us = time_call(stream_batch)
-        row(
-            "stream_multi_series",
+        record(
+            f"stream_multi_series_{b}",
             us,
             f"batch={b};n={n_b};us_per_series={us / b:.1f}",
         )
+
+    write_bench_json(
+        "BENCH_streaming.json",
+        {"shapes": {"n": N, "d": D, "max_lag": H, "block_size": BS}, "results": results},
+    )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,131 @@
+"""Perf-regression gate over the committed BENCH_*.json trajectories.
+
+Diffs the working-tree benchmark JSONs (the ones `benchmarks.run` just
+wrote) against the versions committed at HEAD (``git show HEAD:<file>``)
+and FAILS — nonzero exit — when any named entry slowed down by more than
+``THRESHOLD`` (1.5×).  Speedups and new entries pass; an entry present at
+HEAD but missing from the fresh run fails (a silently dropped benchmark is
+how perf coverage rots).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.check_regression [--threshold 1.5]
+
+Meant to run right after ``python -m benchmarks.run`` in CI: the committed
+JSONs are the trajectory, the fresh ones are the candidate, and the gate
+keeps a PR from landing a >1.5× slowdown on any tracked hot path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+THRESHOLD = 1.5
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Every tracked trajectory file; entries are matched by (name, backend).
+BENCH_FILES = [
+    "BENCH_backends.json",
+    "BENCH_fused.json",
+    "BENCH_streaming.json",
+]
+# Timing rows with us_per_call below this are jitter, not signal — a 1.5×
+# blowup of a 50µs dispatch round-trip is noise on shared CI hardware.
+MIN_US = 1_000.0
+
+
+def _entry_key(entry: dict) -> tuple:
+    return (entry["name"], entry.get("backend", ""))
+
+
+def _load_entries(payload: dict) -> dict:
+    return {
+        _entry_key(e): float(e["us_per_call"])
+        for e in payload.get("results", [])
+        if float(e.get("us_per_call", 0.0)) > 0.0
+    }
+
+
+def _committed(fname: str):
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{fname}"],
+            cwd=REPO_ROOT,
+            capture_output=True,
+            check=True,
+        ).stdout
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None  # not committed yet — nothing to regress against
+    return json.loads(blob)
+
+
+def check_file(fname: str, threshold: float) -> list:
+    """Returns a list of human-readable failure strings for one file."""
+    path = os.path.join(REPO_ROOT, fname)
+    if not os.path.exists(path):
+        return [f"{fname}: missing from working tree (benchmarks not run?)"]
+    base_payload = _committed(fname)
+    if base_payload is None:
+        print(f"{fname}: no committed baseline at HEAD — skipping")
+        return []
+    with open(path) as f:
+        fresh_payload = json.load(f)
+    if fresh_payload.get("platform") != base_payload.get("platform"):
+        # A TPU run vs a committed CPU baseline (or vice versa) is a
+        # platform change, not a regression — only like-for-like gates.
+        print(
+            f"{fname}: platform changed "
+            f"({base_payload.get('platform')} -> {fresh_payload.get('platform')})"
+            " — skipping"
+        )
+        return []
+    fresh = _load_entries(fresh_payload)
+    base = _load_entries(base_payload)
+
+    failures = []
+    for key, base_us in sorted(base.items()):
+        name = ":".join(k for k in key if k)
+        if key not in fresh:
+            failures.append(f"{fname}: entry {name!r} disappeared from the run")
+            continue
+        if base_us < MIN_US:
+            continue
+        ratio = fresh[key] / base_us
+        status = "OK" if ratio <= threshold else "REGRESSION"
+        print(
+            f"{fname}: {name:<40s} {base_us:>12.1f}us -> {fresh[key]:>12.1f}us "
+            f"({ratio:.2f}x) {status}"
+        )
+        if ratio > threshold:
+            failures.append(
+                f"{fname}: {name!r} slowed {ratio:.2f}x "
+                f"({base_us:.0f}us -> {fresh[key]:.0f}us, limit {threshold}x)"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--threshold", type=float, default=THRESHOLD)
+    parser.add_argument(
+        "--files", nargs="*", default=BENCH_FILES,
+        help="BENCH json filenames (repo-root relative) to check",
+    )
+    args = parser.parse_args(argv)
+
+    failures = []
+    for fname in args.files:
+        failures.extend(check_file(fname, args.threshold))
+    if failures:
+        print("\nPERF REGRESSIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nno perf regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,14 @@
-"""Benchmark helpers: timing + CSV row emission."""
+"""Benchmark helpers: timing, CSV row emission, BENCH json trajectories."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
 import jax
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -26,3 +30,16 @@ def row(name: str, us: float, derived: str) -> str:
     line = f"{name},{us:.1f},{derived}"
     print(line, flush=True)
     return line
+
+
+def write_bench_json(filename: str, payload: dict) -> None:
+    """Write a BENCH_*.json perf-trajectory file at the repo root.
+
+    Every payload gets the ``platform`` stamp `benchmarks.check_regression`
+    keys on; entries in ``payload["results"]`` are expected as
+    ``{"name", "us_per_call", "derived", [optional "backend"]}`` dicts.
+    """
+    payload.setdefault("platform", jax.default_backend())
+    with open(os.path.join(_REPO_ROOT, filename), "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")

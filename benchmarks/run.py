@@ -1,9 +1,12 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmark contract).
-``bench_backends`` additionally emits ``BENCH_backends.json`` at the repo
-root (jnp vs pallas-interpret timings on fixed shapes) so the
-kernel-backend perf trajectory populates per commit.
+``bench_backends`` / ``bench_fused`` / ``bench_streaming`` additionally
+emit ``BENCH_backends.json`` / ``BENCH_fused.json`` /
+``BENCH_streaming.json`` at the repo root so the kernel-backend,
+fused-plan, and streaming-ingest perf trajectories populate per commit;
+``python -m benchmarks.check_regression`` diffs them against the committed
+baselines and fails on >1.5× slowdowns.
 """
 from __future__ import annotations
 
@@ -13,7 +16,8 @@ import traceback
 MODULES = [
     "bench_autocov",        # paper Fig. 2 (+ Fig. 9 kernel check)
     "bench_backends",       # compute-registry shootout → BENCH_backends.json
-    "bench_streaming",      # streaming monoid: chunked + multi-series paths
+    "bench_fused",          # fused N-statistic plans → BENCH_fused.json
+    "bench_streaming",      # streaming monoid → BENCH_streaming.json
     "bench_overlap_scaling",  # paper Fig. 4
     "bench_mle",            # paper §5 / §7.2 Z-estimators
     "bench_spatial",        # paper §6 banded high-d

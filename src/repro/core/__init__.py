@@ -6,6 +6,8 @@ Layering:
   overlap.py      — the data structure (OverlapSpec, block build/reconstruct)
   backend.py      — the compute registry (jnp / Pallas / auto substrates)
   mapreduce.py    — the execution engine (serial / blocked / shard_map paths)
+  streaming.py    — the mergeable PartialState monoid + scan-driven ingest
+  plan.py         — fused statistics plans (N estimators, one traversal)
   halo.py         — replication vs collective-permute halo materialization
   estimators/     — M- and Z-estimators of the paper (§2–§6)
   graphs.py       — order-(H,K) graph generalization + traffic DBN (§9, §11)
@@ -31,9 +33,21 @@ from .overlap import (
 from .mapreduce import (
     serial_window_map_reduce,
     block_window_map_reduce,
+    scan_window_map_reduce,
     sharded_window_map_reduce,
     block_partials,
     tree_sum,
+)
+from .plan import (
+    StatPlan,
+    fused_engine,
+    analyze,
+    autocovariance_request,
+    yule_walker_request,
+    arma_request,
+    moments_request,
+    welch_request,
+    kernel_request,
 )
 from .halo import halo_exchange, halo_exchange_grouped
 from . import estimators

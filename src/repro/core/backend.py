@@ -15,6 +15,14 @@ estimator in the repo reduces to a handful of primitive contractions, and a
                                          mean/variance)
   ``segment_fft_power(segs, taper)``     per-segment |rfft|² (Welch / Whittle)
   ``banded_matvec(diags, x)``            x̂ = A x for b-banded A (§6.1)
+  ``fused_lagged_moments(y, mask, H, w)``  masked lagged sums AND masked
+                                         windowed-moment sums from ONE
+                                         traversal — the fused-plan
+                                         primitive (`repro.core.plan`): on
+                                         the Pallas backend both statistics
+                                         are emitted from a single VMEM
+                                         staging of each tile (one HBM read
+                                         instead of two)
 
 Backends in the registry:
 
@@ -105,6 +113,17 @@ class Backend(Protocol):
 
     def banded_matvec(self, diags: jax.Array, x: jax.Array) -> jax.Array:
         """(d, 2b+1) stacked diagonals, x (..., d) → A x (..., d)."""
+        ...
+
+    def fused_lagged_moments(
+        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int, window: int
+    ) -> tuple:
+        """One traversal → (lag (max_lag+1, d, d), mom (2, d)).
+
+        ``lag`` is exactly ``masked_lagged_sums(y_padded, start_mask,
+        max_lag)``; ``mom`` is Σ_{s: mask} Σ_{j<window} [y_{s+j}, y²_{s+j}]
+        — the product-monoid stat a fused statistics plan carries.
+        """
         ...
 
 
@@ -211,6 +230,27 @@ class JnpBackend:
         xn = jnp.where(valid, xn, 0.0)
         return jnp.einsum("...dw,dw->...d", xn, diags.astype(jnp.float32))
 
+    def fused_lagged_moments(
+        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int, window: int
+    ) -> tuple:
+        y_padded = _as_2d(y_padded).astype(jnp.float32)
+        L = start_mask.shape[0]
+        need = L + max(max_lag, window - 1)
+        if y_padded.shape[0] < need:
+            y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
+        lag = self.masked_lagged_sums(y_padded, start_mask, max_lag)
+
+        # windowed sums per start via one cumsum pass, then a masked reduce —
+        # no second traversal of the series.
+        zero = jnp.zeros((1, y_padded.shape[1]), jnp.float32)
+        y = y_padded[: L + window - 1]
+        cs = jnp.concatenate([zero, jnp.cumsum(y, axis=0)])
+        cs2 = jnp.concatenate([zero, jnp.cumsum(y * y, axis=0)])
+        s1 = cs[window : L + window] - cs[:L]
+        s2 = cs2[window : L + window] - cs2[:L]
+        m = start_mask.astype(jnp.float32)[:, None]
+        return lag, jnp.stack([jnp.sum(m * s1, axis=0), jnp.sum(m * s2, axis=0)])
+
 
 class PallasBackend:
     """Explicit VMEM tile kernels (the paper's §12 scheme on TPU).
@@ -283,6 +323,20 @@ class PallasBackend:
         )
         return y.T.reshape(*lead, d) if lead else y
 
+    def fused_lagged_moments(
+        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int, window: int
+    ) -> tuple:
+        from ..kernels.window_stats import ops as ws
+
+        return ws.fused_lagged_moments(
+            y_padded,
+            start_mask,
+            max_lag,
+            window,
+            block_t=self.block_t,
+            interpret=self._interp(),
+        )
+
 
 class AutoBackend:
     """Per-call dispatch by platform and problem size.
@@ -331,6 +385,13 @@ class AutoBackend:
 
     def banded_matvec(self, diags: jax.Array, x: jax.Array) -> jax.Array:
         return self._pick(diags.shape[0]).banded_matvec(diags, x)
+
+    def fused_lagged_moments(
+        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int, window: int
+    ) -> tuple:
+        return self._pick(start_mask.shape[0]).fused_lagged_moments(
+            y_padded, start_mask, max_lag, window
+        )
 
 
 _REGISTRY: Dict[str, Backend] = {

@@ -13,7 +13,9 @@ from .stats import (
     partial_autocorrelation,
     windowed_moments,
     lag_sum_engine,
+    moment_engine,
     streaming_autocovariance,
+    streaming_window_moments,
     streaming_mean,
 )
 from .yule_walker import yule_walker, levinson_durbin, block_levinson, streaming_yule_walker
@@ -33,7 +35,14 @@ from .spatial import (
     SpatialPartition,
 )
 from .prediction import ar_one_step, ar_forecast, arma_innovations_filter, arma_forecast
-from .spectral import welch_psd, welch_csd, hann_window, welch_engine, streaming_welch
+from .spectral import (
+    welch_psd,
+    welch_csd,
+    hann_window,
+    welch_chunk_kernel,
+    welch_engine,
+    streaming_welch,
+)
 
 __all__ = [
     "mean",
@@ -44,7 +53,9 @@ __all__ = [
     "partial_autocorrelation",
     "windowed_moments",
     "lag_sum_engine",
+    "moment_engine",
     "streaming_autocovariance",
+    "streaming_window_moments",
     "streaming_mean",
     "yule_walker",
     "levinson_durbin",
@@ -55,6 +66,7 @@ __all__ = [
     "fit_arma",
     "arma_psi_weights",
     "fit_arma_streaming",
+    "welch_chunk_kernel",
     "welch_engine",
     "streaming_welch",
     "ar_conditional_nll",

@@ -31,6 +31,7 @@ __all__ = [
     "welch_psd",
     "welch_csd",
     "ar1_theoretical_psd",
+    "welch_chunk_kernel",
     "welch_engine",
     "streaming_welch",
 ]
@@ -115,6 +116,37 @@ def welch_csd(
     return freqs, csd
 
 
+def welch_chunk_kernel(nperseg: int, step: int, scale: float, be) -> callable:
+    """Offset-aware ChunkKernel accumulating Welch segment-PSD partials.
+
+    Because the kernel receives z0 (the global index of its first row), it
+    gathers ONLY the stride-aligned candidate starts — ⌈L/step⌉+1 windows
+    instead of L — so the FFT cost of a streamed (or fused-plan) Welch
+    matches the batch :func:`welch_psd`, not the dense all-starts walk.
+    Shared by :func:`welch_engine` and the fused plan layer
+    (`repro.core.plan`), so the two can never disagree on segment math.
+    """
+    w = hann_window(nperseg)
+
+    def chunk_kernel(
+        y_padded: jax.Array, start_mask: jax.Array, z0: jax.Array
+    ) -> dict:
+        L = start_mask.shape[0]
+        K = L // step + 1  # static bound on aligned starts in [z0, z0+L)
+        base = (-z0) % step  # first local start at a global stride multiple
+        cand = base + jnp.arange(K) * step
+        in_range = cand < L
+        valid = in_range & start_mask[jnp.clip(cand, 0, L - 1)]
+        wins = jax.vmap(
+            lambda s: jax.lax.dynamic_slice_in_dim(y_padded, s, nperseg, axis=0)
+        )(jnp.clip(cand, 0, L - 1))
+        power = be.segment_fft_power(wins, w) * scale  # (K, nfreq, d)
+        psd = jnp.sum(jnp.where(valid[:, None, None], power, 0.0), axis=0)
+        return {"psd": psd, "n_seg": jnp.sum(valid.astype(jnp.float32))}
+
+    return chunk_kernel
+
+
 def welch_engine(
     nperseg: int = 256,
     overlap: Optional[int] = None,
@@ -142,15 +174,7 @@ def welch_engine(
     w = hann_window(nperseg)
     scale = 1.0 / (fs * jnp.sum(w**2))
     be = get_backend(backend)
-
-    def chunk_kernel(y_padded: jax.Array, start_mask: jax.Array) -> dict:
-        L = start_mask.shape[0]
-        wins = jax.vmap(
-            lambda s: jax.lax.dynamic_slice_in_dim(y_padded, s, nperseg, axis=0)
-        )(jnp.arange(L))
-        power = be.segment_fft_power(wins, w) * scale  # (L, nfreq, d)
-        psd = jnp.sum(jnp.where(start_mask[:, None, None], power, 0.0), axis=0)
-        return {"psd": psd, "n_seg": jnp.sum(start_mask.astype(jnp.float32))}
+    chunk_kernel = welch_chunk_kernel(nperseg, step, scale, be)
 
     engine = StreamingEngine(
         d=d,
@@ -159,6 +183,7 @@ def welch_engine(
         chunk_kernel=chunk_kernel,
         stride=step,
         backend=be,
+        kernel_takes_offset=True,
     )
     engine.welch_fs = fs  # carried to streaming_welch so the frequency grid
     # and the per-segment density scale can never disagree

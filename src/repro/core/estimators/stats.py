@@ -47,7 +47,9 @@ __all__ = [
     "gamma_normalizer",
     "windowed_moments",
     "lag_sum_engine",
+    "moment_engine",
     "streaming_autocovariance",
+    "streaming_window_moments",
     "streaming_mean",
 ]
 
@@ -228,6 +230,52 @@ def lag_sum_engine(
     return StreamingEngine(
         d=d, h_left=0, h_right=max_lag, chunk_kernel=ck, backend=be
     )
+
+
+def moment_engine(
+    window: int, d: int, backend: BackendSpec = None
+) -> StreamingEngine:
+    """Streaming engine for aggregate windowed moments (paper §2.1.1's
+    order-0/1 statistics lifted to the window walk).
+
+    ``state.stat`` is {"sums": (2, d) of Σ_s [Σ_j x_{s+j}, Σ_j x²_{s+j}],
+    "count": ()} over every full width-``window`` start s — a fixed-size
+    mergeable reduction of the rolling-moment kernel (unlike
+    :func:`windowed_moments`, which materializes every window's value and
+    therefore cannot stream).  The chunk kernel is the backend's fused
+    primitive at ``max_lag=0``, so a standalone moment stream and a fused
+    plan member run the identical contraction.  Finalize with
+    :func:`streaming_window_moments`.
+    """
+    be = get_backend(backend)
+
+    def ck(y_padded: jax.Array, start_mask: jax.Array) -> dict:
+        _, mom = be.fused_lagged_moments(y_padded, start_mask, 0, window)
+        return {"sums": mom, "count": jnp.sum(start_mask.astype(jnp.float32))}
+
+    return StreamingEngine(
+        d=d, h_left=0, h_right=window - 1, chunk_kernel=ck, backend=be
+    )
+
+
+def streaming_window_moments(engine: StreamingEngine, state: PartialState) -> dict:
+    """Finalize a moment-engine PartialState into aggregate rolling moments.
+
+    Returns {"mean": (d,), "var": (d,), "count": ()} where mean/var are the
+    population moments over all samples of all full windows (overlapping
+    windows weight interior samples up, exactly as the windowed walk
+    defines).  ``count`` is the number of windows; with count == 0 the
+    moments are NaN — check before trusting early-stream queries.
+    """
+    w = engine.window
+    total = state.stat["count"] * w
+    m1 = state.stat["sums"][0] / total
+    m2 = state.stat["sums"][1] / total
+    return {
+        "mean": m1,
+        "var": jnp.maximum(m2 - m1 * m1, 0.0),
+        "count": state.stat["count"],
+    }
 
 
 def streaming_autocovariance(

@@ -53,6 +53,7 @@ __all__ = [
     "tree_zeros_like",
     "serial_window_map_reduce",
     "block_window_map_reduce",
+    "scan_window_map_reduce",
     "sharded_window_map_reduce",
     "block_partials",
 ]
@@ -134,16 +135,27 @@ def block_partials(
     block engine through the Pallas tile path; ``kernel`` may then be None.
     """
     p_local = blocks.shape[0]
-    # Global index of each core center, and validity of its whole window.
+    per_block = _block_reducer(kernel, chunk_kernel, spec)
     block_ids = jnp.asarray(block_offset) + jnp.arange(p_local)
-    centers = block_ids[:, None] * spec.block_size + jnp.arange(spec.block_size)[None, :]
+    return jax.vmap(per_block)(blocks, _core_valid_mask(block_ids, spec))
+
+
+def _core_valid_mask(block_ids: jax.Array, spec: OverlapSpec) -> jax.Array:
+    """Validity of each block-core center's full window against the GLOBAL
+    series boundary (matching the serial estimator's center range)."""
+    centers = block_ids[..., None] * spec.block_size + jnp.arange(spec.block_size)
     valid = (centers - spec.h_left >= 0) & (centers + spec.h_right <= spec.n - 1)
     # Tail padding in the last block duplicates clamped centers; mask those too.
-    valid &= centers < spec.n
-    valid_mask = valid
+    return valid & (centers < spec.n)
 
+
+def _block_reducer(
+    kernel: Optional[KernelFn], chunk_kernel: Optional[Callable], spec: OverlapSpec
+) -> Callable:
+    """(block, valid_mask) → pytree partial — shared by the vmapped
+    (`block_partials`) and scan-folded (`scan_window_map_reduce`) paths."""
     if chunk_kernel is not None:
-        return jax.vmap(chunk_kernel)(blocks, valid_mask)
+        return chunk_kernel
     if kernel is None:
         raise ValueError("need a per-window kernel or a chunk_kernel")
 
@@ -153,7 +165,7 @@ def block_partials(
         contribs = _mask_tree(contribs, mask)
         return jax.tree.map(lambda l: jnp.sum(l, axis=0), contribs)
 
-    return jax.vmap(per_block)(blocks, valid_mask)
+    return per_block
 
 
 def block_window_map_reduce(
@@ -167,6 +179,37 @@ def block_window_map_reduce(
     blocks, _ = make_overlapping_blocks(x, spec)
     partials = block_partials(kernel, blocks, spec, chunk_kernel=chunk_kernel)
     return jax.tree.map(lambda l: jnp.sum(l, axis=0), partials)
+
+
+def scan_window_map_reduce(
+    kernel: Optional[KernelFn],
+    x: jax.Array,
+    spec: OverlapSpec,
+    chunk_kernel: Optional[Callable] = None,
+) -> Any:
+    """`block_window_map_reduce` with ``lax.scan`` accumulation: identical
+    result, but the running ⊕-carry replaces the materialized (P, …)
+    partial stack — O(1) memory in the block count and ONE device program
+    for the whole sweep (no per-block Python dispatch).
+
+    This is the single-host analogue of the streaming engine's
+    ``consume`` path: use it when P is large enough that a stacked
+    partial pytree (or the XLA fusion over it) stops fitting, or when the
+    sweep runs inside a jit where sequential accumulation pipelines better
+    than a P-way vmap.
+    """
+    blocks, _ = make_overlapping_blocks(x, spec)
+    per_block = _block_reducer(kernel, chunk_kernel, spec)
+    masks = _core_valid_mask(jnp.arange(blocks.shape[0]), spec)
+    init = jax.eval_shape(per_block, blocks[0], masks[0])
+    init = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), init)
+
+    def step(acc, inputs):
+        block, mask = inputs
+        return tree_sum(acc, per_block(block, mask)), None
+
+    acc, _ = jax.lax.scan(step, init, (blocks, masks))
+    return acc
 
 
 def sharded_window_map_reduce(

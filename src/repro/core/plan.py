@@ -1,0 +1,548 @@
+"""Fused statistics plans: one data traversal for N weak-memory estimators.
+
+The paper's algebra (§7–§10) says every second-order weak-memory statistic
+is the same computation — map a short-window kernel over overlapping
+chunks, reduce with ⊕.  This module exploits the corollary: a query for
+autocovariance AND Yule-Walker AND rolling moments AND a Welch periodogram
+should cost **one** pass over the data, not four.  A :class:`StatPlan`
+compiles a set of estimator requests into a single fused
+`repro.core.streaming.StreamingEngine` whose chunk kernel evaluates every
+member against the same resident chunk, and whose carried
+:class:`~repro.core.streaming.PartialState` is the **product monoid** of
+the members' partial states.
+
+The product-monoid construction
+-------------------------------
+If (S₁, ⊕₁), …, (S_N, ⊕_N) are the member monoids, their product
+(S₁ × … × S_N, component-wise ⊕) is again a monoid — so one PartialState
+whose ``stat`` is a pytree of member stats streams, merges, and shards
+exactly like any single-estimator state.  The shared halo buffers are
+sized to the *widest* member: ``W_fused = max_m(h_left_m + 1 + h_right_m)``
+(here ``max(h_left)``/``max(h_right)`` collapse to one width because every
+member's window is start-aligned), so the carried ``head``/``tail`` context
+of any narrower member is a prefix/suffix view of the fused halo.  The
+traversal invariant is: after any sequence of updates and merges, every
+member's stat holds the ⊕-sum over window starts ``s ∈ [t0, t0+length −
+W_fused]`` — the starts whose *fused* window is complete.  A narrower
+member (window w < W_fused) is missing exactly the starts
+``s ∈ (t0+length−W_fused, t0+length−w]``, all of which live inside the
+carried ``tail`` halo — its per-member finalizer recovers them with one
+contraction over at most ``W_fused − 1`` samples.  Fusion therefore costs
+nothing in accuracy: member results are bit-comparable (≤ float round-off)
+to independent estimator calls.
+
+Shared components: every lag-family member (autocovariance, Yule-Walker,
+ARMA) reads slices of ONE ``(H_max+1, d, d)`` lagged-sum entry, so adding
+a Yule-Walker fit to a plan that already tracks autocovariance is free.
+Lagged sums and windowed moments are emitted together by the backend's
+``fused_lagged_moments`` primitive — on the Pallas backend one VMEM
+staging of each tile feeds both the MXU lag contractions and the VPU
+moment accumulation (one HBM read instead of two).
+
+When is fusion legal?
+---------------------
+Members sharing the start-aligned window grid of one chunk walk share a
+traversal — which covers every built-in request, *including mixed strides*:
+the fused chunk kernel receives the global index of its first row
+(``kernel_takes_offset``), so a strided member (Welch segments every
+``nperseg − overlap`` samples) applies its own alignment inside the shared
+pass.  A generic :func:`kernel_request` whose kernel is NOT offset-aware
+cannot re-derive alignment from the shared grid; such members with
+``stride > 1`` fall back to **grouped sub-plans** — one extra traversal per
+distinct leftover stride, still fused within each group.  ``analyze``
+reports one state per group; built-in requests always compile to a single
+group (one traversal).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .backend import BackendSpec, get_backend
+from .mapreduce import tree_sum
+from .streaming import PartialState, StreamingEngine
+
+__all__ = [
+    "StatPlan",
+    "fused_engine",
+    "analyze",
+    "autocovariance_request",
+    "yule_walker_request",
+    "arma_request",
+    "moments_request",
+    "welch_request",
+    "kernel_request",
+]
+
+
+# ---------------------------------------------------------------- requests
+@dataclasses.dataclass(frozen=True)
+class StatRequest:
+    """One estimator request inside a plan (see the factory functions)."""
+
+    kind: str
+    name: Optional[str] = None
+    params: Tuple = ()
+
+    def default_name(self) -> str:
+        return self.kind
+
+
+def autocovariance_request(
+    max_lag: int, normalization: str = "paper", name: Optional[str] = None
+) -> StatRequest:
+    """γ̂(0..max_lag) — shares the plan's lagged-sum entry."""
+    return StatRequest("autocovariance", name, (max_lag, normalization))
+
+
+def yule_walker_request(
+    p: int, normalization: str = "standard", name: Optional[str] = None
+) -> StatRequest:
+    """Order-p AR fit (A, Σ) — shares the plan's lagged-sum entry."""
+    return StatRequest("yule_walker", name, (p, normalization))
+
+
+def arma_request(
+    p: int, q: int, m: Optional[int] = None, name: Optional[str] = None
+) -> StatRequest:
+    """ARMA(p, q) fit (A, B, Σ) — shares the plan's lagged-sum entry
+    (lags up to ``m = max(m or p+q, p+q)``)."""
+    return StatRequest("arma", name, (p, q, m))
+
+
+def moments_request(window: int, name: Optional[str] = None) -> StatRequest:
+    """Aggregate windowed moments ({"mean", "var", "count"}) — emitted by the
+    same ``fused_lagged_moments`` traversal as the lag family."""
+    return StatRequest("moments", name, (window,))
+
+
+def welch_request(
+    nperseg: int = 256,
+    overlap: Optional[int] = None,
+    fs: float = 1.0,
+    name: Optional[str] = None,
+) -> StatRequest:
+    """Welch PSD (freqs, psd) — strided segments gathered inside the shared
+    traversal via the offset-aware chunk kernel."""
+    return StatRequest("welch", name, (nperseg, overlap, fs))
+
+
+def kernel_request(
+    name: str,
+    chunk_kernel: Callable,
+    h_right: int,
+    h_left: int = 0,
+    stride: int = 1,
+    takes_offset: bool = False,
+    finalizer: Optional[Callable] = None,
+) -> StatRequest:
+    """Generic member: any `repro.core.streaming.ChunkKernel`.
+
+    ``finalizer(member, state, raw_stat)`` (member exposes ``.window`` /
+    ``.stride``; ``state`` is the group PartialState) may correct for the
+    fused halo from ``state.tail``; default returns the raw stat.  A
+    non-offset-aware kernel with ``stride > 1`` forces a grouped sub-plan
+    (its own traversal) — see the module docstring.
+    """
+    return StatRequest(
+        "kernel", name, (chunk_kernel, h_right, h_left, stride, takes_offset, finalizer)
+    )
+
+
+# ---------------------------------------------------------------- members
+@dataclasses.dataclass
+class _Member:
+    """A compiled plan member: how it contributes to the fused traversal
+    (``traverse``) and how its result is read out (``finalize``)."""
+
+    name: str
+    window: int
+    stride: int
+    # (y_padded, start_mask, z0) -> stat pytree for this member's key(s);
+    # None for members served by the shared fused_lagged_moments call.
+    traverse: Optional[Callable]
+    # (plan_group, state) -> user-facing result
+    finalize: Callable
+
+
+def _tail_ones(carry: int) -> jax.Array:
+    return jnp.ones((carry,), jnp.bool_)
+
+
+class _PlanGroup:
+    """One fused traversal: members compiled onto a shared StreamingEngine.
+
+    ``stride`` is the engine-level stride of the group (1 for the main
+    group; non-offset-aware generic kernels grouped by their stride rely on
+    the engine's alignment mask instead of in-kernel offsets)."""
+
+    def __init__(
+        self, requests: Sequence[StatRequest], names, d: int, backend, stride: int = 1
+    ):
+        self.backend = backend
+        self.d = d
+        self.stride = stride
+        self.members: list[_Member] = []
+
+        lag_specs = []      # (name, request) needing the shared lagged entry
+        moment_windows = {}  # window -> key
+        traverse_extra = []  # offset-aware per-member traversal callables
+
+        max_lag = 0
+        windows = [1]
+        for req, name in zip(requests, names):
+            if req.kind == "autocovariance":
+                H, normalization = req.params
+                max_lag = max(max_lag, H)
+                windows.append(H + 1)
+                self.members.append(
+                    _Member(name, H + 1, 1, None, self._autocov_finalizer(H, normalization))
+                )
+            elif req.kind == "yule_walker":
+                p, normalization = req.params
+                max_lag = max(max_lag, p)
+                windows.append(p + 1)
+                self.members.append(
+                    _Member(name, p + 1, 1, None, self._yw_finalizer(p, normalization))
+                )
+            elif req.kind == "arma":
+                p, q, m = req.params
+                m = max(m if m is not None else p + q, p + q)
+                max_lag = max(max_lag, m)
+                windows.append(m + 1)
+                self.members.append(
+                    _Member(name, m + 1, 1, None, self._arma_finalizer(p, q, m))
+                )
+            elif req.kind == "moments":
+                (w,) = req.params
+                moment_windows.setdefault(w, f"w{w}")
+                windows.append(w)
+                self.members.append(
+                    _Member(name, w, 1, None, self._moments_finalizer(w))
+                )
+            elif req.kind == "welch":
+                nperseg, overlap, fs = req.params
+                overlap = nperseg // 2 if overlap is None else overlap
+                if not 0 <= overlap < nperseg:
+                    raise ValueError(
+                        f"need 0 <= overlap < nperseg, got {overlap}/{nperseg}"
+                    )
+                step = nperseg - overlap
+                windows.append(nperseg)
+                member = self._compile_welch(name, nperseg, step, fs)
+                traverse_extra.append(member)
+                self.members.append(member)
+            elif req.kind == "kernel":
+                ck, h_right, h_left, stride, takes_offset, finalizer = req.params
+                w = h_left + 1 + h_right
+                windows.append(w)
+                member = self._compile_kernel(
+                    name, ck, w, stride, takes_offset, finalizer
+                )
+                traverse_extra.append(member)
+                self.members.append(member)
+            else:  # pragma: no cover - guarded by _group_requests
+                raise ValueError(f"unknown request kind {req.kind!r}")
+
+        self.window = max(windows)
+        self.max_lag = max_lag
+        self.has_lagged = any(
+            r.kind in ("autocovariance", "yule_walker", "arma") for r in requests
+        )
+        self.moment_windows = dict(sorted(moment_windows.items()))
+        self._traverse_extra = traverse_extra
+
+        self.engine = StreamingEngine(
+            d=d,
+            h_left=0,
+            h_right=self.window - 1,
+            chunk_kernel=self._fused_chunk_kernel,
+            stride=stride,
+            backend=backend,
+            kernel_takes_offset=True,
+        )
+
+    # -- the one traversal -------------------------------------------------
+    def _fused_chunk_kernel(self, y: jax.Array, mask: jax.Array, z0: jax.Array):
+        be = self.backend
+        out = {}
+        if self.moment_windows:
+            # one fused call serves the shared lagged entry AND the first
+            # moment window; extra windows cost one cheap extra call each.
+            first_w = next(iter(self.moment_windows))
+            lag, mom = be.fused_lagged_moments(y, mask, self.max_lag, first_w)
+            count = jnp.sum(mask.astype(jnp.float32))
+            if self.has_lagged:
+                out["lagged"] = lag
+            moments = {self.moment_windows[first_w]: {"sums": mom, "count": count}}
+            for w, key in self.moment_windows.items():
+                if w == first_w:
+                    continue
+                _, mom_w = be.fused_lagged_moments(y, mask, 0, w)
+                moments[key] = {"sums": mom_w, "count": count}
+            out["moments"] = moments
+        elif self.has_lagged:
+            # lag-only plan: no moment member to fuse with — skip the fused
+            # primitive's window accumulation entirely.
+            out["lagged"] = be.masked_lagged_sums(y, mask, self.max_lag)
+        for member in self._traverse_extra:
+            out[member.name] = member.traverse(y, mask, z0)
+        return out
+
+    # -- shared tail recovery ----------------------------------------------
+    def _corrected_gamma_sums(self, state: PartialState, H: int) -> jax.Array:
+        """Serial lag sums S(0..H) from the fused state: the plan's shared
+        ``lagged`` entry covers starts with a full fused window; every
+        missing serial pair (k, k+h) starts inside the carried tail, and the
+        tail's right-aligned zero-fill kills k+h past the series end — one
+        masked contraction recovers them exactly (the streaming engine's
+        ragged-tail trick, widened to the fused halo)."""
+        s = state.stat["lagged"][: H + 1]
+        carry = self.engine.carry
+        if carry > 0:
+            s = s + self.backend.masked_lagged_sums(
+                state.tail, _tail_ones(carry), H
+            )
+        return s
+
+    def _autocov_finalizer(self, H: int, normalization: str):
+        from .estimators.stats import gamma_normalizer
+
+        def fin(state: PartialState):
+            s = self._corrected_gamma_sums(state, H)
+            norm = gamma_normalizer(state.length, H, normalization)
+            return s * norm[:, None, None]
+
+        return fin
+
+    def _yw_finalizer(self, p: int, normalization: str):
+        from .estimators.stats import gamma_normalizer
+        from .estimators.yule_walker import yule_walker
+
+        def fin(state: PartialState):
+            s = self._corrected_gamma_sums(state, p)
+            norm = gamma_normalizer(state.length, p, normalization)
+            return yule_walker(s * norm[:, None, None], p)
+
+        return fin
+
+    def _arma_finalizer(self, p: int, q: int, m: int):
+        from .estimators.arma import fit_arma
+        from .estimators.stats import gamma_normalizer
+
+        def fin(state: PartialState):
+            s = self._corrected_gamma_sums(state, m)
+            norm = gamma_normalizer(state.length, m, "standard")
+            return fit_arma(s * norm[:, None, None], p, q, m)
+
+        return fin
+
+    def _moments_finalizer(self, w: int):
+        key = f"w{w}"
+
+        def fin(state: PartialState):
+            entry = state.stat["moments"][key]
+            sums, count = entry["sums"], entry["count"]
+            carry = self.engine.carry
+            if carry >= w:
+                # starts missing from the fused traversal: the last
+                # W_fused − w full member windows, all inside the tail.
+                rows = jnp.arange(carry)
+                mask = (rows >= carry - state.length) & (rows <= carry - w)
+                _, mom = self.backend.fused_lagged_moments(state.tail, mask, 0, w)
+                sums = sums + mom
+                count = count + jnp.sum(mask.astype(jnp.float32))
+            total = count * w
+            m1 = sums[0] / total
+            m2 = sums[1] / total
+            return {
+                "mean": m1,
+                "var": jnp.maximum(m2 - m1 * m1, 0.0),
+                "count": count,
+            }
+
+        return fin
+
+    def _compile_welch(self, name: str, nperseg: int, step: int, fs: float):
+        from .estimators.spectral import _one_sided, hann_window, welch_chunk_kernel
+
+        w = hann_window(nperseg)
+        scale = 1.0 / (fs * jnp.sum(w**2))
+        ck = welch_chunk_kernel(nperseg, step, scale, self.backend)
+
+        def fin(state: PartialState):
+            entry = state.stat[name]
+            carry = self.engine.carry
+            if carry >= nperseg:
+                rows = jnp.arange(carry)
+                mask = (rows >= carry - state.length) & (rows <= carry - nperseg)
+                z0 = state.t0 + state.length - carry
+                entry = tree_sum(entry, ck(state.tail, mask, z0))
+            psd = entry["psd"] / entry["n_seg"]
+            return _one_sided(psd, nperseg, fs)
+
+        return _Member(name, nperseg, step, ck, fin)
+
+    def _compile_kernel(self, name, ck, w, stride, takes_offset, finalizer):
+        if takes_offset:
+            traverse = ck
+        else:
+            traverse = lambda y, mask, z0: ck(y, mask)
+
+        member = _Member(name, w, stride, traverse, None)
+
+        def fin(state: PartialState):
+            raw = state.stat[name]
+            if finalizer is None:
+                return raw
+            return finalizer(member, state, raw)
+
+        member.finalize = fin
+        return member
+
+    # -- readout -----------------------------------------------------------
+    def finalize(self, state: PartialState) -> dict:
+        return {m.name: m.finalize(state) for m in self.members}
+
+
+def _group_requests(requests: Sequence[StatRequest]):
+    """Group-0 holds everything fusable into one traversal; non-offset-aware
+    generic kernels with stride > 1 get one sub-plan per distinct stride
+    (the engine-level stride mask supplies their alignment)."""
+    named = []
+    seen = {}
+    for req in requests:
+        if not isinstance(req, StatRequest):
+            raise TypeError(
+                f"requests must be StatRequest (see the *_request factories), "
+                f"got {type(req).__name__}"
+            )
+        base = req.name or req.default_name()
+        seen[base] = seen.get(base, 0) + 1
+        named.append((req, base if seen[base] == 1 else f"{base}_{seen[base]}"))
+
+    groups: dict[int, list] = {}
+    for req, name in named:
+        stride = 1
+        if req.kind == "kernel":
+            _, _, _, k_stride, takes_offset, _ = req.params
+            if not takes_offset:
+                stride = k_stride
+        groups.setdefault(stride, []).append((req, name))
+    return [(k, groups[k]) for k in sorted(groups)]
+
+
+class StatPlan:
+    """N estimator requests compiled into (almost always) one traversal.
+
+    The monoid quartet mirrors `StreamingEngine` but carries a *tuple* of
+    group states (one PartialState per fused traversal group; built-in
+    requests always compile to a single group):
+
+      ``init() / from_chunk / update / merge / consume / finalize``
+
+    ``finalize`` returns ``{request_name: result}`` with results matching
+    the independent estimator calls to float round-off.
+    """
+
+    def __init__(self, requests: Sequence[StatRequest], d: int, backend: BackendSpec = None):
+        if not requests:
+            raise ValueError("a plan needs at least one request")
+        self.backend = get_backend(backend)
+        self.d = d
+        self.groups = [
+            _PlanGroup(
+                [r for r, _ in grp], [n for _, n in grp], d, self.backend, stride
+            )
+            for stride, grp in _group_requests(requests)
+        ]
+
+    @property
+    def engine(self) -> StreamingEngine:
+        """The fused engine (single-group plans — every built-in request)."""
+        if len(self.groups) != 1:
+            raise ValueError(
+                f"plan has {len(self.groups)} traversal groups; use the "
+                f"group-tuple API (init/update/merge) instead of .engine"
+            )
+        return self.groups[0].engine
+
+    @property
+    def num_traversals(self) -> int:
+        """Data passes one full evaluation costs (== number of groups)."""
+        return len(self.groups)
+
+    # -- monoid over the tuple of group states -----------------------------
+    def init(self, t0: int | jax.Array = 0):
+        return tuple(g.engine.init(t0) for g in self.groups)
+
+    def from_chunk(self, chunk: jax.Array, t0: int | jax.Array = 0):
+        return tuple(g.engine.from_chunk(chunk, t0) for g in self.groups)
+
+    def update(self, states, chunk: jax.Array):
+        return tuple(
+            g.engine.update(s, chunk) for g, s in zip(self.groups, states)
+        )
+
+    def merge(self, a, b):
+        return tuple(g.engine.merge(x, y) for g, x, y in zip(self.groups, a, b))
+
+    def consume(self, states, chunks: jax.Array):
+        """Scan-driven ingest of a (k, c, d) equal-length chunk stack —
+        one ``lax.scan`` program per group, carried states donated."""
+        return tuple(
+            g.engine.consume(s, chunks) for g, s in zip(self.groups, states)
+        )
+
+    def finalize(self, states) -> dict:
+        out = {}
+        for g, s in zip(self.groups, states):
+            out.update(g.finalize(s))
+        return out
+
+
+def fused_engine(
+    requests: Sequence[StatRequest], d: int, backend: BackendSpec = None
+) -> StatPlan:
+    """Compile estimator requests into a fused :class:`StatPlan` (the
+    product-monoid engine behind :func:`analyze`)."""
+    return StatPlan(requests, d, backend)
+
+
+def analyze(
+    series: jax.Array,
+    requests: Sequence[StatRequest],
+    backend: BackendSpec = None,
+    chunk_size: Optional[int] = None,
+) -> dict:
+    """Serve N estimator requests from one read of ``series``.
+
+    Args:
+      series: (n,) or (n, d).
+      requests: built with the ``*_request`` factories, e.g.
+        ``analyze(x, [autocovariance_request(8), yule_walker_request(4),
+        moments_request(64), welch_request(256)])``.
+      backend: compute-backend spec for every member contraction.
+      chunk_size: when given, ingest scan-driven over equal chunks of this
+        length (plus one ragged remainder update) instead of a monolithic
+        chunk — the serving-shaped path; results are identical.
+
+    Returns: {request_name: result} matching independent estimator calls.
+    """
+    x = series[:, None] if series.ndim == 1 else series
+    plan = StatPlan(requests, d=x.shape[1], backend=backend)
+    if chunk_size is None:
+        states = plan.from_chunk(x)
+    else:
+        n = x.shape[0]
+        k = n // chunk_size
+        states = plan.init()
+        if k > 0:
+            stack = x[: k * chunk_size].reshape(k, chunk_size, x.shape[1])
+            states = plan.consume(states, stack)
+        if n % chunk_size:
+            states = plan.update(states, x[k * chunk_size :])
+    return plan.finalize(states)

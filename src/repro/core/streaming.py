@@ -69,7 +69,11 @@ WindowKernel = Callable[[jax.Array], Any]
 # (y_padded (L + W - 1, d), start_mask (L,)) -> pytree: the ⊕-sum of
 # k(y_padded[s : s+W]) over starts s with start_mask[s].  Whenever
 # start_mask[s] is True, rows [s, s+W) hold real data.
-ChunkKernel = Callable[[jax.Array, jax.Array], Any]
+# With ``kernel_takes_offset=True`` the kernel receives a third argument,
+# z0 () int32 — the GLOBAL series index of y_padded's row 0 — so it can
+# apply its own alignment rules (per-member strides in a fused plan,
+# strided segment gathers) without the engine knowing about them.
+ChunkKernel = Callable[..., Any]
 
 _FAR = jnp.iinfo(jnp.int32).max
 
@@ -125,6 +129,17 @@ class StreamingEngine:
         registry default).  Recorded on the engine so finalizers
         (``streaming_autocovariance``'s ragged-tail correction) run their own
         contractions through the same substrate the updates used.
+      kernel_takes_offset: the chunk kernel accepts a third argument — the
+        global index of its first row — enabling per-member alignment rules
+        inside one shared traversal (fused plans, strided segment gathers).
+
+    Every traced entry point is built **once** here and cached: ``update``
+    / ``merge`` stay pure (composable under an outer jit/vmap), while
+    ``update_jit`` / ``merge_jit`` / ``update_batch`` / ``merge_batch`` are
+    jitted programs — repeated ingest through them never re-traces.
+    ``consume`` / ``consume_batch`` fold a stacked (k, c, d) chunk stack
+    with one ``lax.scan`` — a single device program for the whole stream,
+    no per-chunk Python dispatch, with the carried state's buffers donated.
     """
 
     def __init__(
@@ -136,6 +151,7 @@ class StreamingEngine:
         chunk_kernel: Optional[ChunkKernel] = None,
         stride: int = 1,
         backend: BackendSpec = None,
+        kernel_takes_offset: bool = False,
     ):
         if kernel is None and chunk_kernel is None:
             raise ValueError("need a per-window kernel or a chunk_kernel")
@@ -150,20 +166,38 @@ class StreamingEngine:
         self.backend = get_backend(backend)
         self.window = h_left + 1 + h_right
         self.carry = self.window - 1  # samples of context an update keeps
+        self.kernel_takes_offset = kernel_takes_offset
 
         if chunk_kernel is None:
+            if kernel_takes_offset:
+                raise ValueError("kernel_takes_offset requires a chunk_kernel")
             chunk_kernel = self._vmapped_chunk_kernel(kernel)
         self.chunk_kernel = chunk_kernel
-        self._stat_struct = jax.eval_shape(
-            chunk_kernel,
+        struct_args = [
             jax.ShapeDtypeStruct((self.window, d), jnp.float32),
             jax.ShapeDtypeStruct((1,), jnp.bool_),
-        )
+        ]
+        if kernel_takes_offset:
+            struct_args.append(jax.ShapeDtypeStruct((), jnp.int32))
+        self._stat_struct = jax.eval_shape(chunk_kernel, *struct_args)
 
         # Batched (multi-series) entry points: PartialState is a pytree of
-        # arrays, so a leading series axis is just vmap.
-        self.update_batch = jax.vmap(self.update)
-        self.merge_batch = jax.vmap(self.merge)
+        # arrays, so a leading series axis is just vmap.  All cached entry
+        # points are traced at most once per ingest shape — drivers that
+        # loop over chunks reuse the same compiled program.
+        self.update_jit = jax.jit(self.update)
+        self.merge_jit = jax.jit(self.merge)
+        self.update_batch = jax.jit(jax.vmap(self.update))
+        self.merge_batch = jax.jit(jax.vmap(self.merge))
+        self.consume = jax.jit(self._consume, donate_argnums=0)
+        self.consume_batch = jax.jit(self._consume_batch, donate_argnums=0)
+
+    def _call_kernel(self, y: jax.Array, mask: jax.Array, z0: jax.Array) -> Any:
+        """Invoke the chunk kernel, passing the global row-0 index when the
+        kernel is offset-aware (fused plans / strided gathers)."""
+        if self.kernel_takes_offset:
+            return self.chunk_kernel(y, mask, jnp.asarray(z0, jnp.int32))
+        return self.chunk_kernel(y, mask)
 
     # -- internals ---------------------------------------------------------
     def _vmapped_chunk_kernel(self, kernel: WindowKernel) -> ChunkKernel:
@@ -218,7 +252,7 @@ class StreamingEngine:
         mask = starts <= c - w
         if self.stride > 1:
             mask &= (t0 + starts) % self.stride == 0
-        stat = self.chunk_kernel(y, mask)
+        stat = self._call_kernel(y, mask, t0)
 
         rows = jnp.arange(carry)
         head = jnp.where(
@@ -286,13 +320,13 @@ class StreamingEngine:
             z = jnp.concatenate([first.tail, second.head])
             starts = jnp.arange(carry)
             mask = (starts >= carry - k_first) & (starts + w <= carry + k_second)
+            # z[carry - k_first] is the first valid row and holds global
+            # sample first.t0 + first.length - k_first, so row s of z sits
+            # at global index first.t0 + first.length - carry + s.
+            z0 = first.t0 + first.length - carry
             if self.stride > 1:
-                # z[carry - k_first] is the first valid row and holds global
-                # sample first.t0 + first.length - k_first, so row s of z sits
-                # at global index first.t0 + first.length - carry + s.
-                z0 = first.t0 + first.length - carry
                 mask &= (z0 + starts) % self.stride == 0
-            stat = tree_sum(stat, self.chunk_kernel(z, mask))
+            stat = tree_sum(stat, self._call_kernel(z, mask, z0))
 
             rows = jnp.arange(carry)
             head = jnp.where(
@@ -324,6 +358,35 @@ class StreamingEngine:
         series end, e.g. lag sums) a boundary correction read from
         ``state.tail``."""
         return state.stat
+
+    # -- scan-driven ingest ------------------------------------------------
+    def _consume(self, state: PartialState, chunks: jax.Array) -> PartialState:
+        """Fold a (k, c, d) stack of equal-length chunks into ``state`` with
+        one ``lax.scan`` — a single device program for the whole stream.
+
+        The public jitted entry point is ``self.consume`` (built in
+        ``__init__`` with ``donate_argnums=0``: the carried PartialState's
+        buffers are reused in place, so a long-running ingest loop allocates
+        nothing per chunk).  Equivalent to ``functools.reduce(update, chunks,
+        state)`` but without k Python dispatches and k host round-trips.
+        """
+
+        def step(st, chunk):
+            return self.update(st, chunk), None
+
+        state, _ = jax.lax.scan(step, state, chunks)
+        return state
+
+    def _consume_batch(self, state: PartialState, chunks: jax.Array) -> PartialState:
+        """Batched scan ingest: ``chunks`` is (k, batch, c, d); the scan runs
+        over the chunk axis, each step updating all series in one vmapped
+        pass.  Jitted + donated as ``self.consume_batch``."""
+
+        def step(st, chunk):
+            return jax.vmap(self.update)(st, chunk), None
+
+        state, _ = jax.lax.scan(step, state, chunks)
+        return state
 
     # -- batching ----------------------------------------------------------
     def init_batch(self, batch: int, t0: int | jax.Array = 0) -> PartialState:

@@ -13,7 +13,7 @@ every thread's window is local.  The TPU adaptation (DESIGN.md §2):
   * the output block (H+1, d, d) is revisited by every grid step
     (accumulation over the sequential TPU grid), initialized at step 0.
 
-Two kernels share the tiling scheme:
+Three kernels share the tiling scheme:
 
   :func:`cross_window_stats_pallas` — cross-lagged sums Σ_k a_k b_{k+h}ᵀ.
     With a = b this is the plain lagged-sum statistic; with a = mask·b it is
@@ -21,6 +21,13 @@ Two kernels share the tiling scheme:
     (`repro.core.backend.PallasBackend.masked_lagged_sums`).
   :func:`window_moments_pallas` — per-window first/second moment sums
     (rolling mean/variance), one VPU accumulation pass per tile.
+  :func:`fused_lag_moments_pallas` — lagged sums AND masked windowed-moment
+    sums from ONE staging of each VMEM tile: the series is read from HBM
+    once, the MXU lag contractions and the VPU moment accumulation both run
+    against the same resident tile pair.  This is the device half of the
+    fused statistics-plan layer (`repro.core.plan`): a plan serving
+    autocovariance + Yule-Walker + rolling moments costs one HBM traversal
+    instead of one per statistic.
 
 Zero-fill boundary handling: ops.py pads the series with one extra zero tile
 so the last core tile's "next" view is all zeros — out-of-range products
@@ -113,6 +120,115 @@ def window_stats_pallas(
     return cross_window_stats_pallas(
         x, x, max_lag, block_t=block_t, interpret=interpret
     )
+
+
+def _fused_kernel(
+    a_core_ref,
+    b_core_ref,
+    b_next_ref,
+    m_core_ref,
+    lag_ref,
+    mom_ref,
+    *,
+    max_lag: int,
+    window: int,
+    block_t: int,
+):
+    i = pl.program_id(0)
+
+    core = a_core_ref[...]  # (block_t, d) mask-zeroed left factor
+    both = jnp.concatenate([b_core_ref[...], b_next_ref[...]], axis=0)
+    m = m_core_ref[...]  # (block_t, 1) f32 start mask
+
+    @pl.when(i == 0)
+    def _init():
+        lag_ref[...] = jnp.zeros_like(lag_ref)
+        mom_ref[...] = jnp.zeros_like(mom_ref)
+
+    # MXU half: one contraction per lag, every window start of the tile.
+    for h in range(max_lag + 1):
+        shifted = jax.lax.dynamic_slice_in_dim(both, h, block_t, axis=0)
+        lag_ref[h, :, :] += jax.lax.dot_general(
+            core,
+            shifted,
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    # VPU half on the SAME resident tile pair: per-start window sums, then a
+    # masked reduce over starts — (2, d) moment partials per grid step.
+    def body(j, carry):
+        acc, acc2 = carry
+        seg = jax.lax.dynamic_slice_in_dim(both, j, block_t, axis=0)
+        seg = seg.astype(jnp.float32)
+        return acc + seg, acc2 + seg * seg
+
+    zeros = jnp.zeros((block_t, core.shape[1]), jnp.float32)
+    acc, acc2 = jax.lax.fori_loop(0, window, body, (zeros, zeros))
+    mom_ref[0, :] += jnp.sum(m * acc, axis=0)
+    mom_ref[1, :] += jnp.sum(m * acc2, axis=0)
+
+
+def fused_lag_moments_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    m: jax.Array,
+    max_lag: int,
+    window: int,
+    *,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> tuple:
+    """Masked lagged sums + masked windowed-moment sums in one tile pass.
+
+    Args:
+      a: (n_padded, d) mask-zeroed left factor (rows of b with the start
+        mask applied) — exactly the masked_lagged_sums contract.
+      b: (n_padded, d) raw padded series, ending with one all-zero tile.
+      m: (n_padded, 1) f32 start mask (1.0 at valid starts).
+      max_lag: H (≤ block_t); window: moment window w (≤ block_t + 1).
+
+    Returns:
+      lag: (max_lag+1, d, d) f32 — Σ_{s: m_s} b_s b_{s+h}ᵀ.
+      mom: (2, d) f32 — Σ_{s: m_s} Σ_{j<window} [b_{s+j}, b²_{s+j}].
+    """
+    n, d = b.shape
+    if a.shape != b.shape:
+        raise ValueError(f"a/b shapes must match, got {a.shape} vs {b.shape}")
+    if m.shape != (n, 1):
+        raise ValueError(f"mask must be ({n}, 1), got {m.shape}")
+    if n % block_t != 0:
+        raise ValueError(f"padded length {n} must be a multiple of block_t={block_t}")
+    if max_lag > block_t:
+        raise ValueError(f"max_lag={max_lag} must be ≤ block_t={block_t}")
+    if window > block_t + 1:
+        raise ValueError(f"window={window} must be ≤ block_t+1={block_t + 1}")
+    grid = (n // block_t,)
+    num_tiles = grid[0]
+
+    return pl.pallas_call(
+        functools.partial(
+            _fused_kernel, max_lag=max_lag, window=window, block_t=block_t
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),  # masked a tile
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),  # b core tile
+            pl.BlockSpec(  # halo: next b tile (clamped; last tile is zeros)
+                (block_t, d), lambda i: (jnp.minimum(i + 1, num_tiles - 1), 0)
+            ),
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),  # start mask tile
+        ],
+        out_specs=[
+            pl.BlockSpec((max_lag + 1, d, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((2, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((max_lag + 1, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((2, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, b, m)
 
 
 def _moments_kernel(x_core_ref, x_next_ref, out_ref, *, window: int, block_t: int):

@@ -14,7 +14,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import cross_window_stats_pallas, window_moments_pallas
+from .kernel import (
+    cross_window_stats_pallas,
+    fused_lag_moments_pallas,
+    window_moments_pallas,
+)
 from .ref import window_stats_ref
 
 
@@ -139,6 +143,59 @@ def windowed_moments(
         _pad_tiles(x, block_t), window, block_t=block_t, interpret=interpret
     )
     return jnp.moveaxis(out[:, :n_win], 0, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_lag", "window", "block_t", "interpret")
+)
+def fused_lagged_moments(
+    y_padded: jax.Array,
+    start_mask: jax.Array,
+    max_lag: int,
+    window: int,
+    *,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> tuple:
+    """Masked lagged sums AND masked windowed-moment sums, one HBM read.
+
+    The fused-plan device primitive: a single staging of each VMEM tile
+    feeds both the MXU lag contractions and the VPU moment accumulation, so
+    a plan serving autocovariance-family and rolling-moment statistics
+    costs one traversal instead of two.
+
+    Args:
+      y_padded: (≥ L, d) — rows [s, s + max(max_lag, window-1)] are read for
+        every unmasked start (zero-extended when shorter).
+      start_mask: (L,) bool.
+
+    Returns:
+      lag: (max_lag+1, d, d) — Σ_{s: mask} y_s y_{s+h}ᵀ.
+      mom: (2, d) — Σ_{s: mask} Σ_{j<window} [y_{s+j}, y²_{s+j}].
+    """
+    if y_padded.ndim == 1:
+        y_padded = y_padded[:, None]
+    L = start_mask.shape[0]
+    reach = max(max_lag, window - 1)
+    need = L + reach
+    if y_padded.shape[0] < need:
+        y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
+    y = y_padded.astype(jnp.float32)
+    head = jnp.where(start_mask[:, None], y[:L], 0.0)
+    head = jnp.pad(head, ((0, y.shape[0] - L), (0, 0)))
+    m = jnp.pad(start_mask.astype(jnp.float32)[:, None], ((0, y.shape[0] - L), (0, 0)))
+
+    n = y.shape[0]
+    block_t = _clamp_block_t(block_t, n, max(reach, 1))
+    return fused_lag_moments_pallas(
+        _pad_tiles(head, block_t),
+        _pad_tiles(y, block_t),
+        _pad_tiles(m, block_t),
+        max_lag,
+        window,
+        block_t=block_t,
+        interpret=interpret,
+    )
 
 
 @functools.partial(

@@ -33,3 +33,34 @@ def window_moments_ref(x: jax.Array, window: int) -> jax.Array:
         starts
     ).astype(jnp.float32)
     return jnp.stack([jnp.sum(wins, axis=1), jnp.sum(wins**2, axis=1)], axis=1)
+
+
+def fused_lag_moments_ref(
+    y_padded: jax.Array, start_mask: jax.Array, max_lag: int, window: int
+) -> tuple:
+    """Oracle for the fused primitive: per-start windows materialized naively.
+
+    Returns (lag (max_lag+1, d, d), mom (2, d)) matching
+    `ops.fused_lagged_moments` / `JnpBackend.fused_lagged_moments`.
+    """
+    L = start_mask.shape[0]
+    d = y_padded.shape[1]
+    reach = max(max_lag, window - 1)
+    need = L + reach
+    if y_padded.shape[0] < need:
+        y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
+    y = y_padded.astype(jnp.float32)
+    m = start_mask.astype(jnp.float32)
+
+    def one(h):
+        shifted = jax.lax.dynamic_slice_in_dim(y, h, L, axis=0)
+        return jnp.einsum("t,ti,tj->ij", m, y[:L], shifted)
+
+    lag = jax.vmap(one)(jnp.arange(max_lag + 1))
+
+    wins = jax.vmap(
+        lambda s: jax.lax.dynamic_slice_in_dim(y, s, window, axis=0)
+    )(jnp.arange(L))  # (L, window, d)
+    m1 = jnp.einsum("t,twd->d", m, wins)
+    m2 = jnp.einsum("t,twd->d", m, wins**2)
+    return lag, jnp.stack([m1, m2])

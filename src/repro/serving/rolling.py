@@ -15,6 +15,13 @@ service never stores raw series — only per-user `PartialState`s, which are
     blocks reduce with the single ``psum`` of
     `repro.parallel.sharding.psum_tree` — the read path's only collective.
 
+Lane storage is ONE stacked pytree with a leading ``(num_shards,
+num_users)`` axis pair — not a Python list of per-lane states — so every
+lane shares a single jit program: ingest scatter-updates into the stacked
+buffers (which are **donated**, so steady-state ingest allocates nothing),
+and a batched query gathers all lanes of all requested users with one
+indexed read and ⊕-folds the lane axis inside one compiled reduce.
+
 The compute substrate of the ingest hot loop is the engine's backend
 (`repro.core.backend`): build the engine with
 ``lag_sum_engine(..., backend="pallas")`` and every batched ``ingest``
@@ -23,7 +30,6 @@ tile kernels; with ``"auto"`` the registry picks by platform and size.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -51,15 +57,42 @@ class RollingStatsService:
         self.engine = engine
         self.num_users = num_users
         self.num_shards = num_shards
-        self._lanes = [engine.init_batch(num_users) for _ in range(num_shards)]
+        # One stacked pytree, leading axes (num_shards, num_users): every
+        # lane lives in the same buffers and every ingest/query below is a
+        # single jit program regardless of which lane it addresses.
+        one = engine.init_batch(num_users)
+        self._lanes = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (num_shards,) + l.shape), one
+        )
 
-        def scatter_update(lane, user_ids, chunks, t0):
-            sub = jax.tree.map(lambda l: l[user_ids], lane)
+        def scatter_update(lanes, shard, user_ids, chunks, t0):
+            sub = jax.tree.map(lambda l: l[shard, user_ids], lanes)
             new = jax.vmap(engine.update)(sub, chunks, t0)
-            return jax.tree.map(lambda l, nl: l.at[user_ids].set(nl), lane, new)
+            return jax.tree.map(
+                lambda l, nl: l.at[shard, user_ids].set(nl), lanes, new
+            )
 
-        # jit caches one program per (arrival batch, chunk length) shape.
-        self._scatter_update = jax.jit(scatter_update)
+        # jit caches one program per (arrival batch, chunk length) shape —
+        # shared by ALL lanes (shard is a traced scalar) — and donates the
+        # lane buffers: steady-state ingest updates them in place.
+        self._scatter_update = jax.jit(scatter_update, donate_argnums=0)
+
+        def lane_fold(stacked):
+            # ⊕-fold the leading lane axis of a stacked (S, k, …) pytree
+            # with the vmapped merge: one compiled reduce, no per-lane
+            # Python-indexed tree.map gathers.
+            acc = jax.tree.map(lambda l: l[0], stacked)
+            for s in range(1, num_shards):
+                acc = jax.vmap(engine.merge)(
+                    acc, jax.tree.map(lambda l: l[s], stacked)
+                )
+            return acc
+
+        self._gather_merge = jax.jit(
+            lambda lanes, user_ids: lane_fold(
+                jax.tree.map(lambda l: l[:, user_ids], lanes)
+            )
+        )
 
     @property
     def backend(self):
@@ -86,23 +119,35 @@ class RollingStatsService:
         """
         user_ids = jnp.asarray(user_ids, jnp.int32)
         # .at[ids].set would silently keep only one of two conflicting
-        # scattered states — reject the caller slip instead of losing data.
+        # scattered states, and jit scatter silently DROPS out-of-bounds
+        # ids (the gather on read would clamp to another user) — reject the
+        # caller slips instead of losing or cross-wiring data.
         if int(jnp.unique(user_ids).shape[0]) != int(user_ids.shape[0]):
             raise ValueError("user_ids must be distinct within one ingest batch")
+        if user_ids.shape[0] and not (
+            0 <= int(jnp.min(user_ids)) and int(jnp.max(user_ids)) < self.num_users
+        ):
+            raise ValueError(f"user_ids must lie in [0, {self.num_users})")
+        if not 0 <= shard < self.num_shards:
+            raise ValueError(f"shard {shard} out of range [0, {self.num_shards})")
         if t0 is None:
             # update() falls back to each state's own cursor.
             t0 = jnp.zeros(user_ids.shape, jnp.int32)
-        self._lanes[shard] = self._scatter_update(
-            self._lanes[shard], user_ids, jnp.asarray(chunks), jnp.asarray(t0)
+        self._lanes = self._scatter_update(
+            self._lanes,
+            jnp.asarray(shard, jnp.int32),
+            user_ids,
+            jnp.asarray(chunks),
+            jnp.asarray(t0),
         )
 
     # -- read path ---------------------------------------------------------
     def partial(self, user_id: int) -> PartialState:
         """The user's merged cross-lane PartialState (lane order free)."""
-        states = [
-            jax.tree.map(lambda l: l[user_id], lane) for lane in self._lanes
-        ]
-        return functools.reduce(self.engine.merge, states)
+        batched = self._gather_merge(
+            self._lanes, jnp.asarray([user_id], jnp.int32)
+        )
+        return jax.tree.map(lambda l: l[0], batched)
 
     def query(self, user_id: int, finalizer: Callable, *args, **kwargs) -> Any:
         """Rolling estimate for one user: merge lanes, then finalize with an
@@ -114,17 +159,15 @@ class RollingStatsService:
     def query_batch(
         self, user_ids: Sequence[int] | jax.Array, finalizer: Callable, *args, **kwargs
     ) -> Any:
-        """Vmapped multi-user read: one device pass merges every requested
-        user's lanes and finalizes (leading axis = user)."""
+        """Vmapped multi-user read: ONE gather pulls every requested user's
+        lane states from the stacked buffers, one compiled reduce ⊕-folds
+        the lane axis, then the finalizer runs vmapped over users."""
         user_ids = jnp.asarray(user_ids, jnp.int32)
-        subs = [
-            jax.tree.map(lambda l: l[user_ids], lane) for lane in self._lanes
-        ]
-        merged = functools.reduce(self.engine.merge_batch, subs)
+        merged = self._gather_merge(self._lanes, user_ids)
         return jax.vmap(
             lambda s: finalizer(self.engine, s, *args, **kwargs)
         )(merged)
 
     def lengths(self) -> jax.Array:
         """(num_users,) samples absorbed per user, summed over lanes."""
-        return sum(lane.length for lane in self._lanes)
+        return jnp.sum(self._lanes.length, axis=0)

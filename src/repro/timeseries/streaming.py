@@ -47,14 +47,19 @@ class StreamingEstimator:
     ):
         self.engine = engine
         self.batch = batch
+        # The engine's cached jitted programs: repeated ingest of same-shape
+        # chunks never re-traces, and `consume` folds a whole chunk stack in
+        # one lax.scan device program (donating the carried state buffers).
         if batch is None:
             self.state = engine.init(t0)
-            self._update = engine.update
-            self._merge = engine.merge
+            self._update = engine.update_jit
+            self._merge = engine.merge_jit
+            self._consume = engine.consume
         else:
             self.state = engine.init_batch(batch, t0)
             self._update = engine.update_batch
             self._merge = engine.merge_batch
+            self._consume = engine.consume_batch
 
     @classmethod
     def from_store(
@@ -73,6 +78,19 @@ class StreamingEstimator:
     def ingest_iter(self, chunks: Iterable[jax.Array]) -> "StreamingEstimator":
         for chunk in chunks:
             self.ingest(chunk)
+        return self
+
+    def consume(self, chunk_stack: jax.Array) -> "StreamingEstimator":
+        """Scan-driven ingest of a stack of equal-length chunks.
+
+        ``chunk_stack`` is (k, c, d) — or (k, batch, c, d) when batched —
+        and the whole stack is absorbed by ONE ``lax.scan`` device program
+        (`repro.core.streaming.StreamingEngine.consume`): no per-chunk
+        Python dispatch, no k host round-trips, and the carried
+        PartialState's buffers are donated (long ingest loops allocate
+        nothing per chunk).  Equivalent to ``ingest_iter(chunk_stack)``.
+        """
+        self.state = self._consume(self.state, chunk_stack)
         return self
 
     def merge_from(self, other: "StreamingEstimator | PartialState") -> "StreamingEstimator":

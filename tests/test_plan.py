@@ -1,0 +1,405 @@
+"""Fused statistics plans: fused ≡ independent, one traversal, monoid laws.
+
+Pins the `repro.core.plan` layer:
+  * every member of a fused plan matches its independent estimator call to
+    float round-off — across jnp/pallas-interpret backends and across the
+    monolithic / chunked / merged / scan-ingested execution strategies;
+  * a plan evaluation traverses the series exactly ONCE (counted by a
+    wrapper backend on the primitives), where independent calls traverse
+    once per statistic;
+  * the shared-halo construction is exact when members need very different
+    window widths (the widest member donates the halo, narrower members
+    recover their tail windows at finalize);
+  * non-offset-aware generic kernels with stride > 1 fall back to grouped
+    sub-plans (extra traversal), everything else fuses into one group.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backend import get_backend
+from repro.core.estimators.arma import fit_arma
+from repro.core.estimators.spectral import welch_psd
+from repro.core.estimators.stats import (
+    autocovariance,
+    lag_sum_engine,
+    moment_engine,
+    streaming_autocovariance,
+    streaming_window_moments,
+)
+from repro.core.estimators.yule_walker import yule_walker
+from repro.core.mapreduce import (
+    block_window_map_reduce,
+    scan_window_map_reduce,
+    serial_window_map_reduce,
+)
+from repro.core.overlap import OverlapSpec
+from repro.core.plan import (
+    StatPlan,
+    analyze,
+    arma_request,
+    autocovariance_request,
+    fused_engine,
+    kernel_request,
+    moments_request,
+    welch_request,
+    yule_walker_request,
+)
+from repro.timeseries import StreamingEstimator
+
+REQUESTS = [
+    autocovariance_request(8),
+    yule_walker_request(4),
+    moments_request(32),
+    welch_request(nperseg=64, overlap=32),
+]
+
+
+def _series(n=3000, d=2, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+def _independent(x, backend=None):
+    """The four REQUESTS statistics computed by separate estimator calls."""
+    me = moment_engine(32, x.shape[1], backend=backend)
+    return {
+        "autocovariance": autocovariance(x, 8, backend=backend),
+        "yule_walker": yule_walker(x, 4, backend=backend),
+        "moments": streaming_window_moments(me, me.from_chunk(x)),
+        "welch": welch_psd(x, nperseg=64, overlap=32, backend=backend),
+    }
+
+
+def _assert_matches(got, want):
+    np.testing.assert_allclose(
+        got["autocovariance"], want["autocovariance"], rtol=1e-5, atol=1e-4
+    )
+    for g, w in zip(got["yule_walker"], want["yule_walker"]):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+    for key in ("mean", "var", "count"):
+        np.testing.assert_allclose(
+            got["moments"][key], want["moments"][key], rtol=1e-5, atol=1e-6
+        )
+    np.testing.assert_allclose(got["welch"][0], want["welch"][0], rtol=1e-6)
+    np.testing.assert_allclose(got["welch"][1], want["welch"][1], rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------- fused ≡ independent
+
+
+@pytest.mark.backend
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_fused_equals_independent(backend):
+    x = _series()
+    got = analyze(x, REQUESTS, backend=backend)
+    _assert_matches(got, _independent(x, backend="jnp"))
+
+
+@pytest.mark.backend
+@pytest.mark.parametrize("max_lag,window", [(6, 10), (0, 1), (8, 1), (0, 16)])
+def test_fused_primitive_cross_backend_parity(max_lag, window):
+    """The sixth primitive agrees between jnp and the fused Pallas VMEM
+    kernel (interpret mode on CPU), and with its naive reference."""
+    from repro.kernels.window_stats.ref import fused_lag_moments_ref
+
+    y = jax.random.normal(jax.random.PRNGKey(11), (300, 3))
+    mask = jax.random.bernoulli(jax.random.PRNGKey(12), 0.7, (280,))
+    lag_j, mom_j = get_backend("jnp").fused_lagged_moments(y, mask, max_lag, window)
+    lag_p, mom_p = get_backend("pallas").fused_lagged_moments(y, mask, max_lag, window)
+    lag_r, mom_r = fused_lag_moments_ref(y, mask, max_lag, window)
+    np.testing.assert_allclose(lag_j, lag_r, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(mom_j, mom_r, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(lag_p, lag_r, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(mom_p, mom_r, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "strategy", ["monolithic", "chunked", "scan", "merged"]
+)
+def test_fused_strategies_agree(strategy):
+    """One traversal, chunked updates, scan ingest, and a merge tree all
+    produce the same member results."""
+    x = _series(seed=1)
+    plan = fused_engine(REQUESTS, d=x.shape[1])
+    if strategy == "monolithic":
+        states = plan.from_chunk(x)
+    elif strategy == "chunked":
+        states = plan.init()
+        for lo, hi in [(0, 1), (1, 700), (700, 1413), (1413, 3000)]:
+            states = plan.update(states, x[lo:hi])
+    elif strategy == "scan":
+        states = plan.consume(plan.init(), x.reshape(10, 300, x.shape[1]))
+    else:  # merged: adjacent segments joined with commuted operands
+        a = plan.from_chunk(x[:1100], 0)
+        b = plan.from_chunk(x[1100:1101], 1100)
+        c = plan.from_chunk(x[1101:], 1101)
+        states = plan.merge(c, plan.merge(b, a))
+    _assert_matches(plan.finalize(states), _independent(x))
+
+
+def test_shared_halo_mixed_windows():
+    """Members with very different h_right share the widest member's halo;
+    the narrow members' tail windows are recovered exactly at finalize."""
+    x = _series(n=700, d=3, seed=2)
+    got = analyze(
+        x,
+        [
+            autocovariance_request(2),
+            moments_request(5),
+            welch_request(nperseg=128, overlap=0),
+        ],
+    )
+    np.testing.assert_allclose(
+        got["autocovariance"], autocovariance(x, 2), rtol=1e-5, atol=1e-4
+    )
+    me = moment_engine(5, 3)
+    want_m = streaming_window_moments(me, me.from_chunk(x))
+    for key in ("mean", "var", "count"):
+        np.testing.assert_allclose(
+            got["moments"][key], want_m[key], rtol=1e-5, atol=1e-6
+        )
+    f, p = welch_psd(x, nperseg=128, overlap=0)
+    np.testing.assert_allclose(got["welch"][1], p, rtol=1e-4, atol=1e-5)
+
+
+def test_arma_member_shares_lagged_entry():
+    x = _series(seed=3)
+    got = analyze(x, [arma_request(1, 1), autocovariance_request(8)])
+    A, B, sig = got["arma"]
+    A_r, B_r, sig_r = fit_arma(x, 1, 1)
+    np.testing.assert_allclose(A, A_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(B, B_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(sig, sig_r, rtol=1e-4, atol=1e-5)
+
+
+def test_chunk_size_analyze_path():
+    x = _series(seed=4)
+    got = analyze(x, REQUESTS, chunk_size=271)  # ragged remainder exercised
+    _assert_matches(got, _independent(x))
+
+
+# ---------------------------------------------------------------- one traversal
+
+
+class CountingBackend:
+    """Delegating backend that records (primitive, rows) per invocation."""
+
+    name = "counting"
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.calls = []
+
+    def _rec(self, prim, rows):
+        self.calls.append((prim, int(rows)))
+
+    def lagged_sums(self, x, max_lag):
+        self._rec("lagged_sums", x.shape[0])
+        return self._inner.lagged_sums(x, max_lag)
+
+    def masked_lagged_sums(self, y, mask, max_lag):
+        self._rec("masked_lagged_sums", mask.shape[0])
+        return self._inner.masked_lagged_sums(y, mask, max_lag)
+
+    def windowed_moments(self, x, window):
+        self._rec("windowed_moments", x.shape[0])
+        return self._inner.windowed_moments(x, window)
+
+    def segment_fft_power(self, segments, taper, detrend=True):
+        self._rec("segment_fft_power", segments.shape[0] * segments.shape[1])
+        return self._inner.segment_fft_power(segments, taper, detrend)
+
+    def banded_matvec(self, diags, x):
+        self._rec("banded_matvec", diags.shape[0])
+        return self._inner.banded_matvec(diags, x)
+
+    def fused_lagged_moments(self, y, mask, max_lag, window):
+        self._rec("fused_lagged_moments", mask.shape[0])
+        return self._inner.fused_lagged_moments(y, mask, max_lag, window)
+
+    def series_traversals(self, n):
+        """Primitive invocations that walked ≥ n rows of *series-layout*
+        input.  ``segment_fft_power`` is excluded: it consumes segment
+        windows already gathered inside a traversal (overlap duplicates
+        rows), so its row count measures segment math, not series reads."""
+        return [
+            c for c in self.calls if c[1] >= n and c[0] != "segment_fft_power"
+        ]
+
+
+def test_analyze_is_one_traversal():
+    """analyze([autocov, yw, moments, welch]) reads the series ONCE: exactly
+    one series-sized primitive call (the fused one); every other primitive
+    call is a halo-sized finalize correction."""
+    n = 2000
+    x = _series(n=n)
+    counting = CountingBackend(get_backend("jnp"))
+    got = analyze(x, REQUESTS, backend=counting)
+    _assert_matches(got, _independent(x))
+
+    walks = counting.series_traversals(n)
+    assert walks == [("fused_lagged_moments", n)]
+    # no un-fused series-sized contraction ever ran
+    assert all(prim != "lagged_sums" for prim, _ in counting.calls)
+    assert all(prim != "windowed_moments" for prim, _ in counting.calls)
+    # the welch member FFTs segments exactly once during the traversal (plus
+    # at most one halo-sized finalize correction)
+    ffts = [r for p, r in counting.calls if p == "segment_fft_power"]
+    assert len(ffts) <= 2 and max(ffts) <= 2 * n + 64
+    # every remaining call is a halo-sized finalize correction
+    others = [
+        r
+        for p, r in counting.calls
+        if p not in ("fused_lagged_moments", "segment_fft_power") or (
+            p == "fused_lagged_moments" and r < n
+        )
+    ]
+    assert all(r < 64 for r in others)
+
+
+def test_independent_calls_are_n_traversals():
+    """The baseline the plan removes: each independent estimator call makes
+    its own series-sized traversal."""
+    n = 2000
+    x = _series(n=n)
+    counting = CountingBackend(get_backend("jnp"))
+    autocovariance(x, 8, backend=counting)
+    yule_walker(x, 4, backend=counting)
+    me = moment_engine(32, x.shape[1], backend=counting)
+    streaming_window_moments(me, me.from_chunk(x))
+    assert len(counting.series_traversals(n)) >= 3
+
+
+# ------------------------------------------------------------ generic members
+
+
+def test_kernel_request_custom_member():
+    """A generic ChunkKernel member rides the shared traversal; its raw stat
+    equals the serial window map-reduce over the same kernel."""
+    x = _series(n=500, d=2, seed=5)
+    w = 4  # window width h_left=0, h_right=3
+
+    def ck(y, mask):
+        wins = jax.vmap(
+            lambda s: jax.lax.dynamic_slice_in_dim(y, s, w, axis=0)
+        )(jnp.arange(mask.shape[0]))
+        per = jnp.sum(wins[:, 0] * wins[:, -1], axis=-1)  # first·last product
+        return jnp.sum(jnp.where(mask, per, 0.0))
+
+    plan = StatPlan(
+        [kernel_request("fl", ck, h_right=w - 1)], d=2
+    )
+    assert plan.num_traversals == 1
+    raw = plan.finalize(plan.from_chunk(x))["fl"]
+    want = serial_window_map_reduce(
+        lambda win: jnp.sum(win[0] * win[-1]), x, 0, w - 1
+    )
+    # member covers starts with a full fused window (= its own window here)
+    np.testing.assert_allclose(raw, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mixed_stride_generic_kernel_groups():
+    """A non-offset-aware strided kernel cannot fuse — it gets its own
+    traversal group; built-ins stay fused in group 0."""
+    ck = lambda y, mask: jnp.sum(jnp.where(mask[:, None], y[: mask.shape[0]], 0.0))
+    plan = StatPlan(
+        [
+            autocovariance_request(4),
+            welch_request(nperseg=32, overlap=16),  # strided but offset-aware
+            kernel_request("coarse", ck, h_right=0, stride=7),
+        ],
+        d=1,
+    )
+    assert plan.num_traversals == 2
+    x = _series(n=400, d=1, seed=6)
+    out = plan.finalize(plan.from_chunk(x))
+    np.testing.assert_allclose(
+        out["autocovariance"], autocovariance(x, 4), rtol=1e-5, atol=1e-4
+    )
+    # stride-7 member summed every 7th sample (window 1)
+    np.testing.assert_allclose(out["coarse"], jnp.sum(x[::7]), rtol=1e-5)
+
+
+def test_duplicate_request_names_dedup():
+    x = _series(n=300)
+    out = analyze(x, [moments_request(8), moments_request(16)])
+    assert set(out) == {"moments", "moments_2"}
+    assert float(out["moments"]["count"]) == 300 - 8 + 1
+    assert float(out["moments_2"]["count"]) == 300 - 16 + 1
+
+
+# ------------------------------------------------------------------ monoid laws
+
+
+def test_plan_monoid_laws():
+    x = _series(n=900, d=2, seed=7)
+    plan = fused_engine(
+        [autocovariance_request(3), welch_request(nperseg=32, overlap=16)], d=2
+    )
+    a = plan.from_chunk(x[:301], 0)
+    b = plan.from_chunk(x[301:600], 301)
+    c = plan.from_chunk(x[600:], 600)
+
+    left = plan.merge(plan.merge(a, b), c)
+    right = plan.merge(a, plan.merge(b, c))
+    ref = plan.finalize(plan.from_chunk(x))
+    for tree_a, tree_b in [(plan.finalize(left), ref), (plan.finalize(right), ref)]:
+        jax.tree.map(
+            lambda u, v: np.testing.assert_allclose(u, v, rtol=1e-4, atol=1e-5),
+            tree_a,
+            tree_b,
+        )
+    # identity
+    with_id = plan.merge(plan.init(), plan.from_chunk(x))
+    jax.tree.map(
+        lambda u, v: np.testing.assert_allclose(u, v, rtol=1e-5, atol=1e-6),
+        plan.finalize(with_id),
+        ref,
+    )
+
+
+# --------------------------------------------------------- scan-driven ingest
+
+
+def test_streaming_estimator_consume_equals_ingest_iter():
+    x = _series(n=2048, d=2, seed=8)
+    engine = lag_sum_engine(6, 2)
+    stack = x.reshape(16, 128, 2)
+
+    loop = StreamingEstimator(engine).ingest_iter(list(stack))
+    scan = StreamingEstimator(engine).consume(stack)
+    np.testing.assert_allclose(
+        scan.finalize(streaming_autocovariance),
+        loop.finalize(streaming_autocovariance),
+        rtol=1e-6,
+        atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        scan.finalize(streaming_autocovariance),
+        autocovariance(x, 6),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+
+
+def test_streaming_estimator_consume_batched():
+    xb = jax.random.normal(jax.random.PRNGKey(9), (3, 1200, 2))
+    engine = lag_sum_engine(4, 2)
+    stack = jnp.stack([xb[:, i * 300 : (i + 1) * 300] for i in range(4)])
+    est = StreamingEstimator(engine, batch=3).consume(stack)
+    got = est.finalize(streaming_autocovariance)
+    want = jnp.stack([autocovariance(xb[i], 4) for i in range(3)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_scan_window_map_reduce_equals_block():
+    x = _series(n=1000, d=2, seed=10)
+    spec = OverlapSpec(n=1000, block_size=128, h_left=1, h_right=2)
+    kernel = lambda w: jnp.outer(w[0], w[-1])
+    want = block_window_map_reduce(kernel, x, spec)
+    got = scan_window_map_reduce(kernel, x, spec)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        got, serial_window_map_reduce(kernel, x, 1, 2), rtol=1e-5, atol=1e-5
+    )
