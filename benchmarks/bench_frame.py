@@ -1,0 +1,165 @@
+"""SeriesFrame session API — lazy-batched collect vs eager per-call (PR 4).
+
+Four questions, answered on the jnp backend (CPU numbers; the saved
+traversals are HBM reads on TPU):
+
+  * what does ONE lazy-batched ``collect()`` of four deferred statistics
+    (with TWO distinct moment windows — the multi-window fused primitive)
+    cost vs the four eager per-call estimators it replaces;
+  * what does the memoized re-collect cost (per-member results cached
+    between queries — should be ~free);
+  * what does append-ingest throughput look like: chunks folding into the
+    carried fused PartialState (never re-reading history), vs the
+    recompute-from-scratch a non-incremental API would pay;
+  * how many passes over the data each path makes (counted, not asserted).
+
+Emits ``BENCH_frame.json`` at the repo root (via `benchmarks.run`) so the
+session-layer perf trajectory populates per commit —
+`benchmarks.check_regression` diffs it against the committed baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import SeriesFrame
+from repro.core.backend import get_backend
+from repro.core.estimators.stats import (
+    autocovariance,
+    moment_engine,
+    streaming_window_moments,
+)
+from repro.core.estimators.yule_walker import yule_walker
+
+from .common import row, time_call, write_bench_json
+
+N, D, H = 400_000, 8, 16
+MOM_W1, MOM_W2 = 64, 256
+CHUNK, N_CHUNKS = 2_048, 64  # append-ingest stream shape
+
+
+def _defer_four(frame):
+    frame.autocovariance(H)
+    frame.yule_walker(H)
+    frame.moments(MOM_W1)
+    frame.moments(MOM_W2)
+    return frame
+
+
+class _CountingBackend:
+    """Counts series-sized traversals (mirrors tests/test_frame.py)."""
+
+    name = "counting"
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.walks = 0
+
+    def __getattr__(self, prim):
+        fn = getattr(self._inner, prim)
+        masked = prim in ("masked_lagged_sums", "fused_lagged_moments")
+
+        def wrapped(*args, **kwargs):
+            lead = args[1].shape[0] if masked else args[0].shape[0]
+            if prim != "segment_fft_power" and lead >= N:
+                self.walks += 1
+            return fn(*args, **kwargs)
+
+        return wrapped
+
+
+def _eager_four(x, backend):
+    autocovariance(x, H, backend=backend)
+    yule_walker(x, H, backend=backend)
+    for w in (MOM_W1, MOM_W2):
+        me = moment_engine(w, D, backend=backend)
+        streaming_window_moments(me, me.from_chunk(x))
+
+
+def run() -> None:
+    x = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+    results = []
+
+    def bench(name, fn, *args, derived=""):
+        us = time_call(fn, *args)
+        results.append({"name": name, "us_per_call": us, "derived": derived})
+        row(f"frame_{name}", us, derived)
+        return us
+
+    # -- lazy-batched collect vs eager per-call -----------------------------
+    def collect_fresh():
+        frame = _defer_four(SeriesFrame.from_array(x, backend="jnp"))
+        return frame.collect()
+
+    us_collect = bench(
+        "collect_4stats", collect_fresh,
+        derived=f"N={N};d={D};H={H};mom_windows=({MOM_W1},{MOM_W2})",
+    )
+    us_eager = bench("eager_4stats", lambda: _eager_four(x, "jnp"))
+
+    counting = _CountingBackend(get_backend("jnp"))
+    _defer_four(SeriesFrame.from_array(x, backend=counting)).collect()
+    passes_frame = counting.walks
+    counting = _CountingBackend(get_backend("jnp"))
+    _eager_four(x, counting)
+    passes_eager = counting.walks
+    row(
+        "frame_speedup_vs_eager",
+        0.0,
+        f"eager/collect={us_eager / us_collect:.2f}x;"
+        f"passes_frame={passes_frame};passes_eager={passes_eager}",
+    )
+
+    # -- memoized re-collect -------------------------------------------------
+    warm = _defer_four(SeriesFrame.from_array(x, backend="jnp"))
+    warm.collect()
+    us_memo = bench("recollect_memoized", warm.collect)
+    row("frame_memo_vs_collect", 0.0,
+        f"collect/memoized={us_collect / max(us_memo, 1e-9):.0f}x")
+
+    # -- append-ingest throughput -------------------------------------------
+    stack = x[: CHUNK * N_CHUNKS].reshape(N_CHUNKS, CHUNK, D)
+    base = _defer_four(SeriesFrame.from_array(x, backend="jnp"))
+    base.collect()
+
+    def append_stream():
+        for i in range(N_CHUNKS):
+            base.append(stack[i])
+        return base.collect()
+
+    us_append = time_call(append_stream, warmup=0, iters=1)
+    derived = (
+        f"chunks={N_CHUNKS};chunk={CHUNK};us_per_chunk={us_append / N_CHUNKS:.1f}"
+    )
+    results.append(
+        {"name": "append_ingest", "us_per_call": us_append, "derived": derived}
+    )
+    row("frame_append_ingest", us_append, derived)
+    # the non-incremental alternative: a full recompute per arrival batch
+    row(
+        "frame_append_vs_recompute",
+        0.0,
+        f"recompute/append={us_collect * N_CHUNKS / us_append:.1f}x"
+        f" (recompute-per-chunk extrapolated)",
+    )
+
+    write_bench_json(
+        "BENCH_frame.json",
+        {
+            "shapes": {
+                "collect": {
+                    "n": N, "d": D, "max_lag": H,
+                    "moments_windows": [MOM_W1, MOM_W2],
+                },
+                "append": {"chunks": N_CHUNKS, "chunk": CHUNK},
+            },
+            "speedup_eager_vs_collect": us_eager / us_collect,
+            "passes_over_data": {"frame": passes_frame, "eager": passes_eager},
+            "memoized_recollect_us": us_memo,
+            "results": results,
+        },
+    )
+
+
+if __name__ == "__main__":
+    run()

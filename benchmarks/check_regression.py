@@ -29,6 +29,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_FILES = [
     "BENCH_backends.json",
     "BENCH_fused.json",
+    "BENCH_frame.json",
     "BENCH_streaming.json",
 ]
 # Timing rows with us_per_call below this are jitter, not signal — a 1.5×

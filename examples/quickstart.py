@@ -1,8 +1,25 @@
-"""Quickstart — the paper's workflow end to end on one machine.
+"""Quickstart — the paper's workflow through the deferred session API.
 
-Simulate a causal VAR(2), ingest it into the overlapping distributed store,
-compute sufficient statistics by embarrassingly-parallel map-reduce, fit
-AR / MA / ARMA models, and forecast.
+Everything goes through ONE front door now: build a `SeriesFrame` over your
+data placement, defer the statistics you want, and ``collect()`` them in a
+single fused traversal.
+
+    from repro import SeriesFrame
+
+    frame = SeriesFrame.from_array(xs)          # or .from_chunks(stream)
+    gamma = frame.autocovariance(6)             # deferred — reads nothing
+    fit   = frame.yule_walker(2)                # rides the same traversal
+    roll  = frame.moments(window=256)           # ... and so does this
+    psd   = frame.welch(nperseg=512)
+    frame.collect()                             # ONE pass serves all four
+    A_hat, sigma = fit.result()                 # memoized — free
+    frame.append(new_chunk)                     # folds into the carried ⊕
+    fit.result()                                # re-read: walks ONLY new data
+
+The demo below simulates a causal VAR(2), places it three ways (monolithic
+array / chunked stream / overlapping shards — the paper's §10 structure,
+halo sized lazily from the widest deferred window), collects identical
+statistics from each, identifies and fits the model, and forecasts.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,10 +29,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
+from repro import SeriesFrame
 from repro.core.estimators.prediction import ar_forecast
 from repro.core.estimators.stats import autocorrelation, partial_autocorrelation
-from repro.core.estimators.yule_walker import block_levinson, yule_walker
-from repro.timeseries import TimeSeriesStore, random_stable_var, simulate_var
+from repro.timeseries import random_stable_var, simulate_var
 
 
 def main():
@@ -25,34 +42,56 @@ def main():
     xs = simulate_var(jax.random.PRNGKey(1), A_true, n)
     print(f"simulated VAR({p}) with d={d}, N={n}")
 
-    # 2. Overlapping distributed store (paper §10): partitioned along TIME,
-    #    halo h_right = max lag we will ever need.
+    # 2. One frame, four deferred statistics, ONE traversal at collect().
     max_lag = 6
-    store = TimeSeriesStore.from_series(xs, block_size=8192, h_left=0, h_right=max_lag)
-    print(f"store: {store.spec.num_blocks} blocks, "
-          f"replication overhead {store.replication_overhead:.4%}")
+    frame = SeriesFrame.from_array(xs)
+    gamma_h = frame.autocovariance(max_lag, normalization="paper")
+    fit_h = frame.yule_walker(p)
+    roll_h = frame.moments(window=4096)
+    frame.welch(nperseg=1024)
+    frame.collect()
+    print(f"collected {len(frame.collect())} statistics in "
+          f"{frame.num_traversals} fused traversal(s)")
 
-    # 3. Sufficient statistics by weak-memory map-reduce — the data is never
-    #    shuffled; only the (max_lag+1, d, d) statistic is reduced.
-    kern = lambda w: jnp.stack([jnp.outer(w[0], w[h]) for h in range(max_lag + 1)])
-    gamma = store.map_reduce(kern) / n
+    # 3. The same session over the paper's placements: a chunked stream
+    #    (scan-driven ingest) and mesh-ready overlapping shards (per-shard
+    #    partials + one psum; the halo is sized lazily at collect, when the
+    #    fused plan knows its widest window).
+    stream = SeriesFrame.from_chunks(
+        [xs[lo : lo + 8192] for lo in range(0, n, 8192)]
+    )
+    stream.autocovariance(max_lag)
+    sharded = SeriesFrame.from_sharded(xs, block_size=8192)
+    sharded.autocovariance(max_lag)
+    agree = jnp.max(jnp.abs(
+        stream.collect()["autocovariance"] - sharded.collect()["autocovariance"]
+    ))
+    print(f"chunked ≡ sharded placement to {float(agree):.2e}")
 
-    # 4. Model identification (paper §3.1): ACF / PACF.
+    # 4. Model identification (paper §3.1): ACF / PACF from the collected γ̂.
+    gamma = gamma_h.result()  # memoized — no second traversal
     rho = autocorrelation(gamma)
     pacf = partial_autocorrelation(gamma, 4)
     pacf_norm = [float(jnp.max(jnp.abs(pacf[m]))) for m in range(4)]
     print("PACF magnitude by order:", [f"{v:.3f}" for v in pacf_norm],
-          "→ first insignificant order", 1 + int(jnp.argmax(jnp.asarray(pacf_norm) < 0.02)),
           "⇒ choose p =", int(jnp.argmax(jnp.asarray(pacf_norm) < 0.02)))
 
-    # 5. Fit by Yule-Walker (dense + Whittle recursion agree).
-    A_hat, sigma = yule_walker(gamma, p)
-    A_lev, _, _ = block_levinson(gamma, p)
-    print(f"YW error: {float(jnp.max(jnp.abs(A_hat - A_true))):.4f} "
-          f"(dense vs levinson: {float(jnp.max(jnp.abs(A_hat - A_lev))):.2e})")
+    # 5. The Yule-Walker fit rode the same traversal as γ̂.
+    A_hat, sigma = fit_h.result()
+    print(f"YW error: {float(jnp.max(jnp.abs(A_hat - A_true))):.4f}; "
+          f"rolling var (last 4096-window avg): "
+          f"{float(jnp.mean(roll_h.result()['var'])):.3f}")
 
-    # 6. Forecast.
-    preds = ar_forecast(A_hat, xs[-10:], steps=5)
+    # 6. New data folds into the carried state — history is never re-read.
+    tail = simulate_var(jax.random.PRNGKey(2), A_true, 5_000)
+    frame.append(tail)
+    A_hat2, _ = fit_h.result()
+    print(f"after append(+5k): YW drift "
+          f"{float(jnp.max(jnp.abs(A_hat2 - A_hat))):.2e} "
+          f"(incremental — only the new chunk was walked)")
+
+    # 7. Forecast.
+    preds = ar_forecast(A_hat2, tail[-10:], steps=5)
     print("5-step forecast (first dim):", [f"{float(v):.3f}" for v in preds[:, 0]])
 
 

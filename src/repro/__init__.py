@@ -6,6 +6,11 @@ framework-scale substrates (model zoo, distribution, training, serving,
 checkpointing) required to run it on multi-pod TPU meshes.
 
 Public entry points:
+  repro.SeriesFrame — the lazy, placement-aware session API: defer
+                      estimator requests, collect them in ONE fused
+                      traversal, append and re-collect incrementally
+  repro.FrameSession— the multi-tenant variant (per-user fused-plan states
+                      behind one donated scatter-ingest program)
   repro.core        — overlapping-block data structure + weak-memory estimators
   repro.timeseries  — synthetic generators, distributed series store
   repro.models      — assigned-architecture model zoo
@@ -14,3 +19,7 @@ Public entry points:
 """
 
 __version__ = "1.0.0"
+
+from .core.frame import Deferred, FrameSession, SeriesFrame
+
+__all__ = ["SeriesFrame", "FrameSession", "Deferred", "__version__"]

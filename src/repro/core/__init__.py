@@ -8,6 +8,8 @@ Layering:
   mapreduce.py    — the execution engine (serial / blocked / shard_map paths)
   streaming.py    — the mergeable PartialState monoid + scan-driven ingest
   plan.py         — fused statistics plans (N estimators, one traversal)
+  frame.py        — SeriesFrame/FrameSession: the lazy, placement-aware
+                    session front door over plans, streaming, and serving
   halo.py         — replication vs collective-permute halo materialization
   estimators/     — M- and Z-estimators of the paper (§2–§6)
   graphs.py       — order-(H,K) graph generalization + traffic DBN (§9, §11)
@@ -49,6 +51,7 @@ from .plan import (
     welch_request,
     kernel_request,
 )
+from .frame import SeriesFrame, FrameSession, Deferred
 from .halo import halo_exchange, halo_exchange_grouped
 from . import estimators
 from .estimators import *  # noqa: F401,F403  (re-export the estimator API)

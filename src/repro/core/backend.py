@@ -22,7 +22,13 @@ estimator in the repo reduces to a handful of primitive contractions, and a
                                          the Pallas backend both statistics
                                          are emitted from a single VMEM
                                          staging of each tile (one HBM read
-                                         instead of two)
+                                         instead of two).  ``w`` may be an
+                                         int (→ (2, d) moments) or a tuple
+                                         of DISTINCT windows (→ (K, 2, d)):
+                                         every window is accumulated from
+                                         the same resident tile, so a plan
+                                         tracking rolling moments at K
+                                         horizons still costs one traversal
 
 Backends in the registry:
 
@@ -116,13 +122,20 @@ class Backend(Protocol):
         ...
 
     def fused_lagged_moments(
-        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int, window: int
+        self,
+        y_padded: jax.Array,
+        start_mask: jax.Array,
+        max_lag: int,
+        window: "int | tuple",
     ) -> tuple:
-        """One traversal → (lag (max_lag+1, d, d), mom (2, d)).
+        """One traversal → (lag (max_lag+1, d, d), mom).
 
         ``lag`` is exactly ``masked_lagged_sums(y_padded, start_mask,
-        max_lag)``; ``mom`` is Σ_{s: mask} Σ_{j<window} [y_{s+j}, y²_{s+j}]
+        max_lag)``; ``mom`` is Σ_{s: mask} Σ_{j<w} [y_{s+j}, y²_{s+j}]
         — the product-monoid stat a fused statistics plan carries.
+        ``window`` is an int (``mom`` is (2, d)) or a tuple of distinct
+        windows (``mom`` is (len(window), 2, d), row k for ``window[k]``);
+        either way the series is walked once.
         """
         ...
 
@@ -231,25 +244,42 @@ class JnpBackend:
         return jnp.einsum("...dw,dw->...d", xn, diags.astype(jnp.float32))
 
     def fused_lagged_moments(
-        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int, window: int
+        self,
+        y_padded: jax.Array,
+        start_mask: jax.Array,
+        max_lag: int,
+        window: "int | tuple",
     ) -> tuple:
+        # leaf-module import (jnp-only): the window validation is shared
+        # with the Pallas wrappers without a kernels → core back-edge
+        from ..kernels.window_stats.ref import normalize_windows
+
+        windows, single = normalize_windows(window)
         y_padded = _as_2d(y_padded).astype(jnp.float32)
         L = start_mask.shape[0]
-        need = L + max(max_lag, window - 1)
+        w_max = max(windows)
+        need = L + max(max_lag, w_max - 1)
         if y_padded.shape[0] < need:
             y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
         lag = self.masked_lagged_sums(y_padded, start_mask, max_lag)
 
-        # windowed sums per start via one cumsum pass, then a masked reduce —
-        # no second traversal of the series.
+        # windowed sums per start via ONE cumsum pass shared by every window
+        # — no second traversal of the series, and K windows cost K slices.
         zero = jnp.zeros((1, y_padded.shape[1]), jnp.float32)
-        y = y_padded[: L + window - 1]
+        y = y_padded[: L + w_max - 1]
         cs = jnp.concatenate([zero, jnp.cumsum(y, axis=0)])
         cs2 = jnp.concatenate([zero, jnp.cumsum(y * y, axis=0)])
-        s1 = cs[window : L + window] - cs[:L]
-        s2 = cs2[window : L + window] - cs2[:L]
         m = start_mask.astype(jnp.float32)[:, None]
-        return lag, jnp.stack([jnp.sum(m * s1, axis=0), jnp.sum(m * s2, axis=0)])
+
+        moms = []
+        for w in windows:
+            s1 = cs[w : L + w] - cs[:L]
+            s2 = cs2[w : L + w] - cs2[:L]
+            moms.append(
+                jnp.stack([jnp.sum(m * s1, axis=0), jnp.sum(m * s2, axis=0)])
+            )
+        mom = jnp.stack(moms)
+        return lag, (mom[0] if single else mom)
 
 
 class PallasBackend:
@@ -324,7 +354,11 @@ class PallasBackend:
         return y.T.reshape(*lead, d) if lead else y
 
     def fused_lagged_moments(
-        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int, window: int
+        self,
+        y_padded: jax.Array,
+        start_mask: jax.Array,
+        max_lag: int,
+        window: "int | tuple",
     ) -> tuple:
         from ..kernels.window_stats import ops as ws
 
@@ -387,7 +421,11 @@ class AutoBackend:
         return self._pick(diags.shape[0]).banded_matvec(diags, x)
 
     def fused_lagged_moments(
-        self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int, window: int
+        self,
+        y_padded: jax.Array,
+        start_mask: jax.Array,
+        max_lag: int,
+        window: "int | tuple",
     ) -> tuple:
         return self._pick(start_mask.shape[0]).fused_lagged_moments(
             y_padded, start_mask, max_lag, window

@@ -131,7 +131,7 @@ def _fused_kernel(
     mom_ref,
     *,
     max_lag: int,
-    window: int,
+    windows: tuple,
     block_t: int,
 ):
     i = pl.program_id(0)
@@ -156,7 +156,12 @@ def _fused_kernel(
         )
 
     # VPU half on the SAME resident tile pair: per-start window sums, then a
-    # masked reduce over starts — (2, d) moment partials per grid step.
+    # masked reduce over starts — (2, d) moment partials per grid step and
+    # per requested window.  Windows are visited in ascending order so the
+    # running per-start accumulator is SHARED: window w_k's sums extend
+    # w_{k-1}'s with rows [w_{k-1}, w_k) — total work is O(max(windows)) per
+    # tile whatever K is, and every window reads the same resident tile pair
+    # (one HBM staging for all of them).
     def body(j, carry):
         acc, acc2 = carry
         seg = jax.lax.dynamic_slice_in_dim(both, j, block_t, axis=0)
@@ -164,9 +169,14 @@ def _fused_kernel(
         return acc + seg, acc2 + seg * seg
 
     zeros = jnp.zeros((block_t, core.shape[1]), jnp.float32)
-    acc, acc2 = jax.lax.fori_loop(0, window, body, (zeros, zeros))
-    mom_ref[0, :] += jnp.sum(m * acc, axis=0)
-    mom_ref[1, :] += jnp.sum(m * acc2, axis=0)
+    carry = (zeros, zeros)
+    prev_w = 0
+    for k in sorted(range(len(windows)), key=lambda q: windows[q]):
+        carry = jax.lax.fori_loop(prev_w, windows[k], body, carry)
+        prev_w = windows[k]
+        acc, acc2 = carry
+        mom_ref[k, 0, :] += jnp.sum(m * acc, axis=0)
+        mom_ref[k, 1, :] += jnp.sum(m * acc2, axis=0)
 
 
 def fused_lag_moments_pallas(
@@ -174,7 +184,7 @@ def fused_lag_moments_pallas(
     b: jax.Array,
     m: jax.Array,
     max_lag: int,
-    window: int,
+    windows: tuple,
     *,
     block_t: int = 512,
     interpret: bool = False,
@@ -186,13 +196,16 @@ def fused_lag_moments_pallas(
         mask applied) — exactly the masked_lagged_sums contract.
       b: (n_padded, d) raw padded series, ending with one all-zero tile.
       m: (n_padded, 1) f32 start mask (1.0 at valid starts).
-      max_lag: H (≤ block_t); window: moment window w (≤ block_t + 1).
+      max_lag: H (≤ block_t); windows: tuple of distinct moment windows
+        (each ≤ block_t + 1) — all accumulated from the same resident tile.
 
     Returns:
       lag: (max_lag+1, d, d) f32 — Σ_{s: m_s} b_s b_{s+h}ᵀ.
-      mom: (2, d) f32 — Σ_{s: m_s} Σ_{j<window} [b_{s+j}, b²_{s+j}].
+      mom: (K, 2, d) f32 — row k is Σ_{s: m_s} Σ_{j<windows[k]}
+        [b_{s+j}, b²_{s+j}].
     """
     n, d = b.shape
+    windows = tuple(windows)
     if a.shape != b.shape:
         raise ValueError(f"a/b shapes must match, got {a.shape} vs {b.shape}")
     if m.shape != (n, 1):
@@ -201,14 +214,19 @@ def fused_lag_moments_pallas(
         raise ValueError(f"padded length {n} must be a multiple of block_t={block_t}")
     if max_lag > block_t:
         raise ValueError(f"max_lag={max_lag} must be ≤ block_t={block_t}")
-    if window > block_t + 1:
-        raise ValueError(f"window={window} must be ≤ block_t+1={block_t + 1}")
+    if not windows:
+        raise ValueError("need at least one moment window")
+    if max(windows) > block_t + 1:
+        raise ValueError(
+            f"windows={windows} must all be ≤ block_t+1={block_t + 1}"
+        )
     grid = (n // block_t,)
     num_tiles = grid[0]
+    K = len(windows)
 
     return pl.pallas_call(
         functools.partial(
-            _fused_kernel, max_lag=max_lag, window=window, block_t=block_t
+            _fused_kernel, max_lag=max_lag, windows=windows, block_t=block_t
         ),
         grid=grid,
         in_specs=[
@@ -221,11 +239,11 @@ def fused_lag_moments_pallas(
         ],
         out_specs=[
             pl.BlockSpec((max_lag + 1, d, d), lambda i: (0, 0, 0)),
-            pl.BlockSpec((2, d), lambda i: (0, 0)),
+            pl.BlockSpec((K, 2, d), lambda i: (0, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((max_lag + 1, d, d), jnp.float32),
-            jax.ShapeDtypeStruct((2, d), jnp.float32),
+            jax.ShapeDtypeStruct((K, 2, d), jnp.float32),
         ],
         interpret=interpret,
     )(a, b, b, m)

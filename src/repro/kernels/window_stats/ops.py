@@ -19,7 +19,7 @@ from .kernel import (
     fused_lag_moments_pallas,
     window_moments_pallas,
 )
-from .ref import window_stats_ref
+from .ref import normalize_windows, window_stats_ref
 
 
 def _clamp_block_t(block_t: int, n: int, min_tile: int) -> int:
@@ -152,7 +152,7 @@ def fused_lagged_moments(
     y_padded: jax.Array,
     start_mask: jax.Array,
     max_lag: int,
-    window: int,
+    window: "int | tuple",
     *,
     block_t: int = 512,
     interpret: bool = False,
@@ -165,18 +165,23 @@ def fused_lagged_moments(
     costs one traversal instead of two.
 
     Args:
-      y_padded: (≥ L, d) — rows [s, s + max(max_lag, window-1)] are read for
-        every unmasked start (zero-extended when shorter).
+      y_padded: (≥ L, d) — rows [s, s + max(max_lag, max(windows)-1)] are
+        read for every unmasked start (zero-extended when shorter).
       start_mask: (L,) bool.
+      window: one moment window, or a tuple of distinct windows — every
+        window is accumulated against the same resident VMEM tile, so K
+        windows still cost one HBM traversal.
 
     Returns:
       lag: (max_lag+1, d, d) — Σ_{s: mask} y_s y_{s+h}ᵀ.
-      mom: (2, d) — Σ_{s: mask} Σ_{j<window} [y_{s+j}, y²_{s+j}].
+      mom: (2, d) for an int window, (K, 2, d) for a tuple —
+        Σ_{s: mask} Σ_{j<w} [y_{s+j}, y²_{s+j}] per window w.
     """
+    windows, single = normalize_windows(window)
     if y_padded.ndim == 1:
         y_padded = y_padded[:, None]
     L = start_mask.shape[0]
-    reach = max(max_lag, window - 1)
+    reach = max(max_lag, max(windows) - 1)
     need = L + reach
     if y_padded.shape[0] < need:
         y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
@@ -187,15 +192,16 @@ def fused_lagged_moments(
 
     n = y.shape[0]
     block_t = _clamp_block_t(block_t, n, max(reach, 1))
-    return fused_lag_moments_pallas(
+    lag, mom = fused_lag_moments_pallas(
         _pad_tiles(head, block_t),
         _pad_tiles(y, block_t),
         _pad_tiles(m, block_t),
         max_lag,
-        window,
+        windows,
         block_t=block_t,
         interpret=interpret,
     )
+    return lag, (mom[0] if single else mom)
 
 
 @functools.partial(

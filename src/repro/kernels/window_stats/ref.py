@@ -11,6 +11,28 @@ import jax
 import jax.numpy as jnp
 
 
+def normalize_windows(window: "int | tuple") -> tuple:
+    """Normalize the fused primitive's ``window`` argument: returns
+    (windows tuple, was_single).  Tuples must hold distinct positive ints.
+    Lives in this leaf module (jnp-only, no Pallas import) so the kernel
+    wrappers AND `repro.core.backend` share one validation without a
+    kernels → core back-edge.
+    """
+    if isinstance(window, int):
+        windows: tuple = (window,)
+        single = True
+    else:
+        windows = tuple(window)
+        single = False
+    if not windows:
+        raise ValueError("need at least one moment window")
+    if any((not isinstance(w, int)) or w < 1 for w in windows):
+        raise ValueError(f"moment windows must be positive ints, got {windows}")
+    if len(set(windows)) != len(windows):
+        raise ValueError(f"moment windows must be distinct, got {windows}")
+    return windows, single
+
+
 def window_stats_ref(x: jax.Array, max_lag: int) -> jax.Array:
     n = x.shape[0]
 
@@ -36,16 +58,17 @@ def window_moments_ref(x: jax.Array, window: int) -> jax.Array:
 
 
 def fused_lag_moments_ref(
-    y_padded: jax.Array, start_mask: jax.Array, max_lag: int, window: int
+    y_padded: jax.Array, start_mask: jax.Array, max_lag: int, window: "int | tuple"
 ) -> tuple:
     """Oracle for the fused primitive: per-start windows materialized naively.
 
-    Returns (lag (max_lag+1, d, d), mom (2, d)) matching
-    `ops.fused_lagged_moments` / `JnpBackend.fused_lagged_moments`.
+    Returns (lag (max_lag+1, d, d), mom) matching
+    `ops.fused_lagged_moments` / `JnpBackend.fused_lagged_moments`: ``mom``
+    is (2, d) for an int window and (K, 2, d) for a tuple of windows.
     """
+    windows, single = normalize_windows(window)
     L = start_mask.shape[0]
-    d = y_padded.shape[1]
-    reach = max(max_lag, window - 1)
+    reach = max(max_lag, max(windows) - 1)
     need = L + reach
     if y_padded.shape[0] < need:
         y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
@@ -58,9 +81,13 @@ def fused_lag_moments_ref(
 
     lag = jax.vmap(one)(jnp.arange(max_lag + 1))
 
-    wins = jax.vmap(
-        lambda s: jax.lax.dynamic_slice_in_dim(y, s, window, axis=0)
-    )(jnp.arange(L))  # (L, window, d)
-    m1 = jnp.einsum("t,twd->d", m, wins)
-    m2 = jnp.einsum("t,twd->d", m, wins**2)
-    return lag, jnp.stack([m1, m2])
+    moms = []
+    for w in windows:
+        wins = jax.vmap(
+            lambda s: jax.lax.dynamic_slice_in_dim(y, s, w, axis=0)
+        )(jnp.arange(L))  # (L, w, d)
+        m1 = jnp.einsum("t,twd->d", m, wins)
+        m2 = jnp.einsum("t,twd->d", m, wins**2)
+        moms.append(jnp.stack([m1, m2]))
+    mom = jnp.stack(moms)
+    return lag, (mom[0] if single else mom)

@@ -25,8 +25,12 @@ Params = Dict[str, Any]
 
 
 def _model_axis_size() -> int:
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or m.empty:
+    # version-portable active-mesh lookup (jax.sharding.get_abstract_mesh
+    # does not exist on JAX 0.4.x) — shared with the sharding-rule resolver
+    from ..parallel.sharding import _active_mesh
+
+    m = _active_mesh()
+    if m is None:
         return 1
     return dict(m.shape).get("model", 1)
 

@@ -15,12 +15,26 @@ service never stores raw series — only per-user `PartialState`s, which are
     blocks reduce with the single ``psum`` of
     `repro.parallel.sharding.psum_tree` — the read path's only collective.
 
-Lane storage is ONE stacked pytree with a leading ``(num_shards,
+Lane storage is ONE stacked pytree with a leading ``(num_lanes,
 num_users)`` axis pair — not a Python list of per-lane states — so every
 lane shares a single jit program: ingest scatter-updates into the stacked
 buffers (which are **donated**, so steady-state ingest allocates nothing),
 and a batched query gathers all lanes of all requested users with one
 indexed read and ⊕-folds the lane axis inside one compiled reduce.
+
+**Sliding-window eviction mode** (``window=``): instead of growing
+forever, each user's state is a ring of ``num_buckets`` *window-aligned
+sub-states*, each covering a contiguous ``window / num_buckets``-sample
+span.  Ingest lands in the bucket owning the chunk's global index,
+resetting it to the neutral element when a new span begins — which is the
+eviction: the span from ``num_buckets`` rings ago vanishes in O(1),
+without ever revisiting data.  A query ⊕-folds the ring exactly like
+lanes (the merge orders operands by global start index), so served
+statistics cover the retained horizon: the last ``w`` samples with
+``window − bucket_len < w ≤ window``, bucket-aligned.  Because bucket
+``t0``s are global, strided members (Welch segments) stay aligned across
+evictions.  The multi-statistic front door over this machinery is
+`repro.core.frame.FrameSession`.
 
 The compute substrate of the ingest hot loop is the engine's backend
 (`repro.core.backend`): build the engine with
@@ -49,21 +63,64 @@ class RollingStatsService:
       num_shards: independent ingest lanes.  A user's stream may be split
         across lanes in contiguous time segments (pass ``t0`` at the first
         ingest of a mid-stream lane); queries merge lanes in any order.
+      window: sliding-window eviction mode — retain only (about) the last
+        ``window`` samples per user, in a ring of ``num_buckets``
+        window-aligned sub-states (see the module docstring).  Requires
+        ``num_shards == 1``; every ingested chunk must tile the bucket
+        grid (chunk length ≤ bucket span, never straddling a boundary).
+      num_buckets: ring size in eviction mode (default 8); ``window`` must
+        divide evenly into it.
     """
 
-    def __init__(self, engine: StreamingEngine, num_users: int, num_shards: int = 1):
+    def __init__(
+        self,
+        engine: StreamingEngine,
+        num_users: int,
+        num_shards: int = 1,
+        window: Optional[int] = None,
+        num_buckets: Optional[int] = None,
+    ):
         if num_users <= 0 or num_shards <= 0:
             raise ValueError("num_users and num_shards must be positive")
         self.engine = engine
         self.num_users = num_users
         self.num_shards = num_shards
-        # One stacked pytree, leading axes (num_shards, num_users): every
+        self.window = window
+        if window is None:
+            if num_buckets is not None:
+                raise ValueError("num_buckets only applies with window= set")
+            self.num_buckets = None
+            self.bucket_len = None
+            num_lanes = num_shards
+        else:
+            if num_shards != 1:
+                raise ValueError(
+                    "eviction mode is a single ingest lane (num_shards=1); "
+                    "the lane axis is the eviction ring"
+                )
+            self.num_buckets = 8 if num_buckets is None else num_buckets
+            if self.num_buckets < 2:
+                raise ValueError("eviction needs at least 2 ring buckets")
+            if window <= 0 or window % self.num_buckets != 0:
+                raise ValueError(
+                    f"window={window} must be a positive multiple of "
+                    f"num_buckets={self.num_buckets}"
+                )
+            self.bucket_len = window // self.num_buckets
+            num_lanes = self.num_buckets
+        self._num_lanes = num_lanes
+        # One stacked pytree, leading axes (num_lanes, num_users): every
         # lane lives in the same buffers and every ingest/query below is a
         # single jit program regardless of which lane it addresses.
         one = engine.init_batch(num_users)
         self._lanes = jax.tree.map(
-            lambda l: jnp.broadcast_to(l, (num_shards,) + l.shape), one
+            lambda l: jnp.broadcast_to(l, (num_lanes,) + l.shape), one
         )
+        # Total samples ever ingested per user — the eviction ring's global
+        # cursor (concrete between calls, so host-side alignment checks are
+        # free).  Growing mode reads lengths straight off the lane states
+        # and never touches this.
+        self._counts = jnp.zeros((num_users,), jnp.int32)
 
         def scatter_update(lanes, shard, user_ids, chunks, t0):
             sub = jax.tree.map(lambda l: l[shard, user_ids], lanes)
@@ -77,12 +134,55 @@ class RollingStatsService:
         # lane buffers: steady-state ingest updates them in place.
         self._scatter_update = jax.jit(scatter_update, donate_argnums=0)
 
+        def scatter_evict(lanes, user_ids, chunks, counts):
+            # Ring ingest: the chunk's bucket is derived from the user's
+            # global cursor; a cursor on a bucket boundary means the slot
+            # holds the span from num_buckets rings ago — reset it to the
+            # neutral element (THE eviction) before absorbing the chunk.
+            bucket = (counts // self.bucket_len) % self.num_buckets
+            sub = jax.tree.map(lambda l: l[bucket, user_ids], lanes)
+            fresh = engine.init_batch(user_ids.shape[0], t0=counts)
+            boundary = counts % self.bucket_len == 0
+
+            def pick(cur, new):
+                b = boundary.reshape(boundary.shape + (1,) * (cur.ndim - 1))
+                return jnp.where(b, new, cur)
+
+            cur = jax.tree.map(pick, sub, fresh)
+            new = jax.vmap(engine.update)(cur, chunks, counts)
+            return jax.tree.map(
+                lambda l, nl: l.at[bucket, user_ids].set(nl), lanes, new
+            )
+
+        self._scatter_evict = jax.jit(scatter_evict, donate_argnums=0)
+
         def lane_fold(stacked):
             # ⊕-fold the leading lane axis of a stacked (S, k, …) pytree
             # with the vmapped merge: one compiled reduce, no per-lane
-            # Python-indexed tree.map gathers.
+            # Python-indexed tree.map gathers.  The merge combines
+            # *adjacent* segments, so the running ⊕-accumulator must stay
+            # contiguous at every step: in eviction mode the ring slots are
+            # time-rotated per user, so sort them by global start first
+            # (empty slots last — they are neutral).  Growing-mode lanes
+            # are caller-ordered contiguous splits; slot order is already
+            # time order there.
+            if window is not None:
+                key = jnp.where(
+                    stacked.length > 0,
+                    stacked.t0,
+                    jnp.iinfo(jnp.int32).max,
+                )
+                order = jnp.argsort(key, axis=0)  # (S, k)
+                stacked = jax.tree.map(
+                    lambda leaf: jnp.take_along_axis(
+                        leaf,
+                        order.reshape(order.shape + (1,) * (leaf.ndim - 2)),
+                        axis=0,
+                    ),
+                    stacked,
+                )
             acc = jax.tree.map(lambda l: l[0], stacked)
-            for s in range(1, num_shards):
+            for s in range(1, num_lanes):
                 acc = jax.vmap(engine.merge)(
                     acc, jax.tree.map(lambda l: l[s], stacked)
                 )
@@ -113,9 +213,12 @@ class RollingStatsService:
         Args:
           user_ids: (k,) int — distinct users in this batch.
           chunks: (k, c, d) — equal-length chunk per user (pad+resend
-            shorter arrivals separately; chunk granularity is free).
+            shorter arrivals separately; chunk granularity is free in
+            growing mode; in eviction mode chunks must tile the bucket
+            grid).
           t0: (k,) global start indices, used only for users whose lane
             state is still empty (a lane that picks up mid-stream).
+            Growing mode only — the eviction ring owns the global cursor.
         """
         user_ids = jnp.asarray(user_ids, jnp.int32)
         # .at[ids].set would silently keep only one of two conflicting
@@ -128,26 +231,67 @@ class RollingStatsService:
             0 <= int(jnp.min(user_ids)) and int(jnp.max(user_ids)) < self.num_users
         ):
             raise ValueError(f"user_ids must lie in [0, {self.num_users})")
-        if not 0 <= shard < self.num_shards:
+        if not 0 <= shard < self._num_lanes or (
+            self.window is not None and shard != 0
+        ):
             raise ValueError(f"shard {shard} out of range [0, {self.num_shards})")
-        if t0 is None:
-            # update() falls back to each state's own cursor.
-            t0 = jnp.zeros(user_ids.shape, jnp.int32)
-        self._lanes = self._scatter_update(
-            self._lanes,
-            jnp.asarray(shard, jnp.int32),
-            user_ids,
-            jnp.asarray(chunks),
-            jnp.asarray(t0),
-        )
+        chunks = jnp.asarray(chunks)
+        if chunks.shape[1] == 0:
+            # nothing to absorb — and in eviction mode the boundary reset
+            # below must not fire for an empty arrival (it would wipe a
+            # still-retained bucket without advancing the cursor)
+            return
+        if self.window is not None:
+            if t0 is not None:
+                raise ValueError(
+                    "eviction mode owns the global cursor; t0 is not accepted"
+                )
+            c = int(chunks.shape[1])
+            if c > self.bucket_len:
+                raise ValueError(
+                    f"chunk length {c} exceeds the eviction bucket span "
+                    f"{self.bucket_len} (= window / num_buckets)"
+                )
+            starts = self._counts[user_ids]
+            if bool(
+                jnp.any(starts // self.bucket_len != (starts + c - 1) // self.bucket_len)
+            ):
+                raise ValueError(
+                    "chunk would straddle an eviction bucket boundary; "
+                    f"chunks must tile the {self.bucket_len}-sample bucket grid"
+                )
+            self._lanes = self._scatter_evict(
+                self._lanes, user_ids, chunks, starts
+            )
+        else:
+            if t0 is None:
+                # update() falls back to each state's own cursor.
+                t0 = jnp.zeros(user_ids.shape, jnp.int32)
+            self._lanes = self._scatter_update(
+                self._lanes,
+                jnp.asarray(shard, jnp.int32),
+                user_ids,
+                chunks,
+                jnp.asarray(t0),
+            )
+        if self.window is not None:
+            self._counts = self._counts.at[user_ids].add(chunks.shape[1])
 
     # -- read path ---------------------------------------------------------
     def partial(self, user_id: int) -> PartialState:
         """The user's merged cross-lane PartialState (lane order free)."""
-        batched = self._gather_merge(
-            self._lanes, jnp.asarray([user_id], jnp.int32)
-        )
+        batched = self.partials_batch(jnp.asarray([user_id], jnp.int32))
         return jax.tree.map(lambda l: l[0], batched)
+
+    def partials_batch(self, user_ids: Sequence[int] | jax.Array) -> PartialState:
+        """Merged cross-lane PartialStates for many users in one program
+        (leading ``len(user_ids)`` axis): one gather pulls every requested
+        user's lane states, one compiled reduce ⊕-folds the lane axis.
+        The batched read path multi-statistic front-ends
+        (`repro.core.frame.FrameSession`) build on."""
+        return self._gather_merge(
+            self._lanes, jnp.asarray(user_ids, jnp.int32)
+        )
 
     def query(self, user_id: int, finalizer: Callable, *args, **kwargs) -> Any:
         """Rolling estimate for one user: merge lanes, then finalize with an
@@ -162,12 +306,29 @@ class RollingStatsService:
         """Vmapped multi-user read: ONE gather pulls every requested user's
         lane states from the stacked buffers, one compiled reduce ⊕-folds
         the lane axis, then the finalizer runs vmapped over users."""
-        user_ids = jnp.asarray(user_ids, jnp.int32)
-        merged = self._gather_merge(self._lanes, user_ids)
+        merged = self.partials_batch(user_ids)
         return jax.vmap(
             lambda s: finalizer(self.engine, s, *args, **kwargs)
         )(merged)
 
     def lengths(self) -> jax.Array:
-        """(num_users,) samples absorbed per user, summed over lanes."""
-        return jnp.sum(self._lanes.length, axis=0)
+        """(num_users,) samples ingested per user (total, incl. evicted)."""
+        if self.window is None:
+            return jnp.sum(self._lanes.length, axis=0)
+        return self._counts
+
+    def retained_lengths(self) -> jax.Array:
+        """(num_users,) samples a query covers right now: all of them in
+        growing mode; in eviction mode the ring-retained span — the last
+        ``w`` samples, ``window − bucket_len < w ≤ window`` once the ring
+        has wrapped."""
+        if self.window is None:
+            return self.lengths()
+        cnt = self._counts
+        evicted = (
+            jnp.maximum(
+                (cnt - 1) // self.bucket_len - (self.num_buckets - 1), 0
+            )
+            * self.bucket_len
+        )
+        return jnp.where(cnt > 0, cnt - evicted, 0)

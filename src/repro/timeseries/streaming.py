@@ -10,6 +10,13 @@ queue) and maintains the rolling `PartialState`.  Two axes of scale:
     independent series in one device pass (states are pytrees with a
     leading batch axis).
 
+Since the SeriesFrame redesign this class is a thin shim over
+`repro.core.frame.SeriesFrame.from_engine` — the frame owns the carried
+state and every ingest/merge/finalize program, so the chunk-driver and the
+lazy dataframe-style API share one query path.  Prefer the frame for new
+code: `SeriesFrame.from_chunks(...)` plus deferred requests replaces the
+(engine, finalizer) pairing entirely.
+
 Estimator results are read out through the front-end finalizers
 (``estimators.stats.streaming_autocovariance``,
 ``estimators.yule_walker.streaming_yule_walker``,
@@ -18,11 +25,11 @@ Estimator results are read out through the front-end finalizers
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Iterable, Iterator, Optional
+from typing import Any, Callable, Iterable, Optional
 
 import jax
-import jax.numpy as jnp
 
+from ..core.frame import SeriesFrame
 from ..core.streaming import PartialState, StreamingEngine
 
 __all__ = ["StreamingEstimator"]
@@ -47,19 +54,11 @@ class StreamingEstimator:
     ):
         self.engine = engine
         self.batch = batch
-        # The engine's cached jitted programs: repeated ingest of same-shape
-        # chunks never re-traces, and `consume` folds a whole chunk stack in
-        # one lax.scan device program (donating the carried state buffers).
-        if batch is None:
-            self.state = engine.init(t0)
-            self._update = engine.update_jit
-            self._merge = engine.merge_jit
-            self._consume = engine.consume
-        else:
-            self.state = engine.init_batch(batch, t0)
-            self._update = engine.update_batch
-            self._merge = engine.merge_batch
-            self._consume = engine.consume_batch
+        # The frame carries the state and the engine's cached jitted
+        # programs: repeated ingest of same-shape chunks never re-traces,
+        # and `consume` folds a whole chunk stack in one lax.scan device
+        # program (donating the carried state buffers).
+        self._frame = SeriesFrame.from_engine(engine, batch=batch, t0=t0)
 
     @classmethod
     def from_store(
@@ -70,9 +69,18 @@ class StreamingEstimator:
         est.ingest_iter(store.iter_chunks(chunk_size))
         return est
 
+    @property
+    def state(self) -> PartialState:
+        """The carried PartialState (lives on the underlying frame)."""
+        return self._frame.state
+
+    @state.setter
+    def state(self, value: PartialState) -> None:
+        self._frame.state = value
+
     def ingest(self, chunk: jax.Array) -> "StreamingEstimator":
         """Absorb the next chunk ((c, d), or (batch, c, d) when batched)."""
-        self.state = self._update(self.state, chunk)
+        self._frame.append(chunk)
         return self
 
     def ingest_iter(self, chunks: Iterable[jax.Array]) -> "StreamingEstimator":
@@ -90,13 +98,13 @@ class StreamingEstimator:
         PartialState's buffers are donated (long ingest loops allocate
         nothing per chunk).  Equivalent to ``ingest_iter(chunk_stack)``.
         """
-        self.state = self._consume(self.state, chunk_stack)
+        self._frame.consume(chunk_stack)
         return self
 
     def merge_from(self, other: "StreamingEstimator | PartialState") -> "StreamingEstimator":
         """⊕ another partial into this one (adjacent segment, any order)."""
         state = other.state if isinstance(other, StreamingEstimator) else other
-        self.state = self._merge(self.state, state)
+        self._frame.merge_state(state)
         return self
 
     def finalize(self, finalizer: Callable, *args, **kwargs) -> Any:
@@ -106,16 +114,12 @@ class StreamingEstimator:
         ``est.finalize(streaming_autocovariance, normalization="standard")``.
         Batched drivers vmap the finalizer over the series axis.
         """
-        if self.batch is None:
-            return finalizer(self.engine, self.state, *args, **kwargs)
-        return jax.vmap(lambda s: finalizer(self.engine, s, *args, **kwargs))(
-            self.state
-        )
+        return self._frame.finalize_with(finalizer, *args, **kwargs)
 
     @property
     def length(self) -> jax.Array:
         """Samples absorbed so far (per series when batched)."""
-        return self.state.length
+        return self._frame.state.length
 
     @property
     def backend(self):

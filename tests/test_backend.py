@@ -147,6 +147,42 @@ def test_windowed_moments_parity(n, window):
         PALLAS.windowed_moments(x, n + 1)
 
 
+@pytest.mark.parametrize(
+    "max_lag,windows",
+    [(6, (10, 3, 24)), (0, (1, 2)), (8, (16,)), (0, (33, 1, 7, 16))],
+)
+def test_fused_lagged_moments_multi_window_parity(max_lag, windows):
+    """The fused primitive accepts a tuple of distinct moment windows: one
+    traversal emits every window's sums, matching both the per-window
+    single calls and the naive reference, on jnp AND the Pallas VMEM
+    kernel (interpret mode on CPU) — including unsorted window order."""
+    from repro.kernels.window_stats.ref import fused_lag_moments_ref
+
+    y = _series(300, 3, seed=11)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(12), 0.7, (280,))
+    lag_r, mom_r = fused_lag_moments_ref(y, mask, max_lag, windows)
+    assert mom_r.shape == (len(windows), 2, 3)
+    for be in (JNP, PALLAS):
+        lag, mom = be.fused_lagged_moments(y, mask, max_lag, windows)
+        np.testing.assert_allclose(lag, lag_r, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(mom, mom_r, rtol=1e-5, atol=1e-4)
+        for k, w in enumerate(windows):
+            _, mom_one = be.fused_lagged_moments(y, mask, max_lag, w)
+            np.testing.assert_allclose(mom[k], mom_one, rtol=1e-5, atol=1e-4)
+
+
+def test_fused_lagged_moments_window_validation():
+    y = _series(64, 2, seed=13)
+    mask = jnp.ones((60,), jnp.bool_)
+    for be in (JNP, PALLAS):
+        with pytest.raises(ValueError, match="distinct"):
+            be.fused_lagged_moments(y, mask, 2, (8, 8))
+        with pytest.raises(ValueError, match="positive"):
+            be.fused_lagged_moments(y, mask, 2, (8, 0))
+        with pytest.raises(ValueError, match="window"):
+            be.fused_lagged_moments(y, mask, 2, ())
+
+
 def test_segment_fft_power_shared_path():
     segs = jax.random.normal(jax.random.PRNGKey(7), (5, 64, 2))
     taper = jnp.hanning(64)

@@ -1,0 +1,533 @@
+"""SeriesFrame / FrameSession: the lazy placement-aware session front door.
+
+Pins the `repro.core.frame` layer (PR 4 acceptance):
+  * for every placement (array / chunks / sharded) and backend, N deferred
+    requests ``.collect()`` in exactly ONE series-sized traversal (counting
+    backend) and match the independent eager estimator calls;
+  * results are memoized — a repeated ``.collect()`` with no ingest makes
+    ZERO new primitive calls (the StatPlan per-member result cache);
+  * ``.append`` + re-collect equals recomputing on the concatenated series
+    and never re-reads history (no traversal of the old samples);
+  * ``FrameSession`` multi-tenant queries equal dedicated per-user
+    ``SeriesFrame``s, across ingest lanes;
+  * the sliding-window eviction mode serves statistics equal to a recompute
+    from only the retained window, across jnp/pallas backends.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import Deferred, FrameSession, SeriesFrame
+from repro.core.backend import get_backend
+from repro.core.estimators.arma import fit_arma
+from repro.core.estimators.spectral import welch_psd
+from repro.core.estimators.stats import (
+    autocovariance,
+    moment_engine,
+    streaming_window_moments,
+)
+from repro.core.estimators.yule_walker import yule_walker
+from repro.core.mapreduce import serial_window_map_reduce
+from repro.timeseries import TimeSeriesStore
+
+N, D = 3000, 2
+BLOCK = 512  # sharded-placement core size
+BIG = 256    # calls walking ≥ this many rows count as series traversals
+
+
+def _series(n=N, d=D, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+def _make_frame(placement, x, backend=None):
+    if placement == "array":
+        return SeriesFrame.from_array(x, backend=backend)
+    if placement == "chunks":
+        cuts = [0, 500, 1000, 1500, 1501, x.shape[0]]
+        chunks = [x[a:b] for a, b in zip(cuts, cuts[1:])]
+        return SeriesFrame.from_chunks(chunks, backend=backend)
+    if placement == "sharded":
+        return SeriesFrame.from_sharded(x, block_size=BLOCK, backend=backend)
+    if placement == "sharded_mesh":
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+        return SeriesFrame.from_sharded(
+            x, mesh=mesh, block_size=BLOCK, backend=backend
+        )
+    raise ValueError(placement)
+
+
+def _defer_all(frame):
+    """The acceptance request set: lag family + two moment windows + Welch."""
+    return {
+        "autocovariance": frame.autocovariance(8),
+        "yule_walker": frame.yule_walker(4),
+        "moments": frame.moments(32),
+        "moments_2": frame.moments(16),
+        "welch": frame.welch(nperseg=64, overlap=32),
+    }
+
+
+def _eager(x):
+    """The same five statistics by independent estimator calls (jnp)."""
+    me32 = moment_engine(32, x.shape[1], backend="jnp")
+    me16 = moment_engine(16, x.shape[1], backend="jnp")
+    return {
+        "autocovariance": autocovariance(x, 8, backend="jnp"),
+        "yule_walker": yule_walker(x, 4, backend="jnp"),
+        "moments": streaming_window_moments(me32, me32.from_chunk(x)),
+        "moments_2": streaming_window_moments(me16, me16.from_chunk(x)),
+        "welch": welch_psd(x, nperseg=64, overlap=32, backend="jnp"),
+    }
+
+
+def _assert_matches(got, want):
+    np.testing.assert_allclose(
+        got["autocovariance"], want["autocovariance"], rtol=1e-5, atol=1e-4
+    )
+    for g, w in zip(got["yule_walker"], want["yule_walker"]):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+    for key in ("moments", "moments_2"):
+        for stat in ("mean", "var", "count"):
+            np.testing.assert_allclose(
+                got[key][stat], want[key][stat], rtol=1e-5, atol=1e-6
+            )
+    np.testing.assert_allclose(got["welch"][0], want["welch"][0], rtol=1e-6)
+    np.testing.assert_allclose(got["welch"][1], want["welch"][1], rtol=1e-4, atol=1e-5)
+
+
+class CountingBackend:
+    """Delegating backend recording (primitive, rows walked) per invocation
+    (mirrors tests/test_plan.py; fused moments may take a window tuple)."""
+
+    name = "counting"
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.calls = []
+
+    def lagged_sums(self, x, max_lag):
+        self.calls.append(("lagged_sums", int(x.shape[0])))
+        return self._inner.lagged_sums(x, max_lag)
+
+    def masked_lagged_sums(self, y, mask, max_lag):
+        self.calls.append(("masked_lagged_sums", int(mask.shape[0])))
+        return self._inner.masked_lagged_sums(y, mask, max_lag)
+
+    def windowed_moments(self, x, window):
+        self.calls.append(("windowed_moments", int(x.shape[0])))
+        return self._inner.windowed_moments(x, window)
+
+    def segment_fft_power(self, segments, taper, detrend=True):
+        self.calls.append(
+            ("segment_fft_power", int(segments.shape[0] * segments.shape[1]))
+        )
+        return self._inner.segment_fft_power(segments, taper, detrend)
+
+    def banded_matvec(self, diags, x):
+        self.calls.append(("banded_matvec", int(diags.shape[0])))
+        return self._inner.banded_matvec(diags, x)
+
+    def fused_lagged_moments(self, y, mask, max_lag, window):
+        self.calls.append(("fused_lagged_moments", int(mask.shape[0])))
+        return self._inner.fused_lagged_moments(y, mask, max_lag, window)
+
+    def big_walks(self, threshold=BIG):
+        """Traced primitive calls that walked ≥ threshold series rows
+        (segment FFTs excluded: they consume windows a traversal already
+        gathered)."""
+        return [
+            c
+            for c in self.calls
+            if c[1] >= threshold and c[0] != "segment_fft_power"
+        ]
+
+
+PLACEMENTS = ["array", "chunks", "sharded", "sharded_mesh"]
+
+
+# ------------------------------------------------- collect ≡ eager, 1 traversal
+
+
+@pytest.mark.backend
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("placement", PLACEMENTS)
+def test_collect_equals_eager(placement, backend):
+    x = _series()
+    frame = _make_frame(placement, x, backend=backend)
+    handles = _defer_all(frame)
+    got = frame.collect()
+    assert set(got) == set(handles)
+    _assert_matches(got, _eager(x))
+    # deferred handles read the same (memoized) results
+    np.testing.assert_allclose(
+        handles["autocovariance"].result(), got["autocovariance"]
+    )
+
+
+@pytest.mark.parametrize("placement", PLACEMENTS)
+def test_collect_is_one_traversal(placement):
+    """Five deferred requests (two distinct moment windows!) collect in ONE
+    fused traversal: the only primitive that walks series-scale data is
+    ``fused_lagged_moments``, exactly once per ingest program — never the
+    per-statistic ``lagged_sums`` / ``windowed_moments`` walks."""
+    x = _series()
+    counting = CountingBackend(get_backend("jnp"))
+    frame = _make_frame(placement, x, backend=counting)
+    _defer_all(frame)
+    got = frame.collect()
+    _assert_matches(got, _eager(x))
+
+    assert all(p != "lagged_sums" for p, _ in counting.calls)
+    assert all(p != "windowed_moments" for p, _ in counting.calls)
+    walks = counting.big_walks()
+    # the ONLY series-scale primitive is the fused one, and the traced
+    # ingest programs together read each sample once (≤ n rows total)
+    assert {p for p, _ in walks} == {"fused_lagged_moments"}
+    assert sum(r for _, r in walks) <= N
+    if placement == "array":
+        assert walks == [("fused_lagged_moments", N)]
+    # everything else is halo-sized (merge straddles, finalize corrections)
+    small = [
+        r for p, r in counting.calls
+        if p == "masked_lagged_sums"
+    ]
+    assert all(r < 64 for r in small)
+
+
+def test_eager_baseline_is_n_traversals():
+    """The baseline the frame removes: independent estimator calls walk the
+    series once each."""
+    x = _series()
+    counting = CountingBackend(get_backend("jnp"))
+    autocovariance(x, 8, backend=counting)
+    yule_walker(x, 4, backend=counting)
+    me = moment_engine(32, x.shape[1], backend=counting)
+    streaming_window_moments(me, me.from_chunk(x))
+    assert len(counting.big_walks(N)) >= 3
+
+
+# ------------------------------------------------------------- memoization
+
+
+@pytest.mark.parametrize("placement", ["array", "chunks", "sharded"])
+def test_repeated_collect_makes_zero_calls(placement):
+    """Per-member results are cached between queries when no ingest
+    happened: a repeated .collect() (or Deferred.result()) is free."""
+    x = _series()
+    counting = CountingBackend(get_backend("jnp"))
+    frame = _make_frame(placement, x, backend=counting)
+    handles = _defer_all(frame)
+    first = frame.collect()
+    counting.calls.clear()
+    again = frame.collect()
+    assert counting.calls == []
+    np.testing.assert_allclose(
+        again["autocovariance"], first["autocovariance"]
+    )
+    handles["welch"].result()
+    assert counting.calls == []
+
+
+def test_statplan_finalize_cache_direct():
+    """StatPlan.finalize itself memoizes per states-tuple identity; ingest
+    produces fresh states and invalidates."""
+    from repro.core.plan import StatPlan, autocovariance_request
+
+    x = _series(n=800)
+    counting = CountingBackend(get_backend("jnp"))
+    plan = StatPlan([autocovariance_request(4)], d=D, backend=counting)
+    states = plan.from_chunk(x)
+    out1 = plan.finalize(states)
+    counting.calls.clear()
+    out2 = plan.finalize(states)
+    assert counting.calls == []  # cache hit: no finalize corrections re-run
+    np.testing.assert_allclose(out1["autocovariance"], out2["autocovariance"])
+    states2 = plan.update(states, _series(n=64, seed=3))
+    plan.finalize(states2)
+    assert counting.calls != []  # fresh states → recompute
+
+
+# ------------------------------------------------------- append / incremental
+
+
+@pytest.mark.parametrize("placement", ["array", "chunks", "sharded"])
+def test_append_recollect_equals_concat(placement):
+    """.append folds into the carried fused PartialState: re-collect equals
+    recomputing on the concatenated series, WITHOUT re-reading history."""
+    x = _series()
+    extra = [_series(n=97, seed=5), _series(n=300, seed=6)]
+    counting = CountingBackend(get_backend("jnp"))
+    frame = _make_frame(placement, x, backend=counting)
+    _defer_all(frame)
+    frame.collect()
+
+    counting.calls.clear()
+    for chunk in extra:
+        frame.append(chunk)
+    got = frame.collect()
+    # incremental: every primitive call walked at most one appended chunk,
+    # never the n = 3000 sample history (segment FFTs consume windows the
+    # chunk walk already gathered — overlap double-counts their rows)
+    assert all(
+        rows <= 300
+        for p, rows in counting.calls
+        if p != "segment_fft_power"
+    )
+    assert all(rows < N for p, rows in counting.calls)
+    _assert_matches(got, _eager(jnp.concatenate([x] + extra)))
+
+
+def test_append_before_first_collect():
+    x, y = _series(n=1000, seed=1), _series(n=123, seed=2)
+    frame = SeriesFrame.from_array(x)
+    frame.autocovariance(6)
+    frame.append(y)
+    got = frame.collect()
+    np.testing.assert_allclose(
+        got["autocovariance"],
+        autocovariance(jnp.concatenate([x, y]), 6),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+
+
+def test_new_requests_replan_on_array_and_raise_on_chunks():
+    x = _series(n=900, seed=4)
+    frame = SeriesFrame.from_array(x)
+    frame.autocovariance(4)
+    frame.collect()
+    frame.moments(16)  # new request after a collect: array replans
+    got = frame.collect()
+    me = moment_engine(16, D, backend="jnp")
+    want = streaming_window_moments(me, me.from_chunk(x))
+    np.testing.assert_allclose(got["moments"]["mean"], want["mean"], rtol=1e-5)
+
+    stream = SeriesFrame.from_chunks([x[:500], x[500:]])
+    stream.autocovariance(4)
+    stream.collect()
+    stream.moments(16)
+    with pytest.raises(ValueError, match="weak memory"):
+        stream.collect()
+
+
+# ------------------------------------------------------------ generic members
+
+
+def test_map_reduce_deferred_member():
+    x = _series(n=500, seed=5)
+    w = 4
+
+    def ck(y, mask):
+        wins = jax.vmap(
+            lambda s: jax.lax.dynamic_slice_in_dim(y, s, w, axis=0)
+        )(jnp.arange(mask.shape[0]))
+        per = jnp.sum(wins[:, 0] * wins[:, -1], axis=-1)
+        return jnp.sum(jnp.where(mask, per, 0.0))
+
+    frame = SeriesFrame.from_array(x)
+    handle = frame.map_reduce(ck, h_right=w - 1, name="fl")
+    assert frame.num_traversals == 1
+    want = serial_window_map_reduce(lambda win: jnp.sum(win[0] * win[-1]), x, 0, w - 1)
+    np.testing.assert_allclose(handle.result(), want, rtol=1e-5, atol=1e-5)
+
+
+def test_arma_deferred_and_duplicate_names():
+    x = _series(seed=3)
+    frame = SeriesFrame.from_array(x)
+    a1 = frame.arma(1, 1)
+    m1 = frame.moments(8)
+    m2 = frame.moments(24)
+    assert isinstance(a1, Deferred) and (m1.name, m2.name) == ("moments", "moments_2")
+    A, B, sig = a1.result()
+    A_r, B_r, sig_r = fit_arma(x, 1, 1)
+    np.testing.assert_allclose(A, A_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(B, B_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(sig, sig_r, rtol=1e-4, atol=1e-5)
+
+
+def test_from_chunks_store_source():
+    x = _series(n=2000, seed=7)
+    store = TimeSeriesStore.from_series(x, block_size=256, h_left=0, h_right=8)
+    frame = SeriesFrame.from_chunks(store, chunk_size=333)
+    frame.autocovariance(8)
+    got = frame.collect()
+    np.testing.assert_allclose(
+        got["autocovariance"], autocovariance(x, 8), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_from_sharded_accepts_prebuilt_store_and_validates_halo():
+    x = _series(n=2000, seed=8)
+    store = TimeSeriesStore.from_series(x, block_size=256, h_left=0, h_right=40)
+    frame = SeriesFrame.from_sharded(store)
+    frame.autocovariance(8)
+    frame.moments(32)
+    got = frame.collect()
+    np.testing.assert_allclose(
+        got["autocovariance"], autocovariance(x, 8), rtol=1e-5, atol=1e-4
+    )
+
+    narrow = TimeSeriesStore.from_series(x, block_size=256, h_left=0, h_right=2)
+    bad = SeriesFrame.from_sharded(narrow)
+    bad.moments(32)  # needs h_right ≥ 31
+    with pytest.raises(ValueError, match="halo"):
+        bad.collect()
+
+
+# ------------------------------------------------------------- FrameSession
+
+
+@pytest.mark.parametrize("num_shards", [1, 2])
+def test_frame_session_equals_per_user_frames(num_shards):
+    """Multi-tenant queries ≡ dedicated per-user SeriesFrames, including
+    streams split across ingest lanes in contiguous segments."""
+    streams = [_series(n=600, seed=10 + u) for u in range(3)]
+    sess = FrameSession(d=D, num_users=3, num_shards=num_shards, backend="jnp")
+    sess.autocovariance(4)
+    sess.yule_walker(2)
+    sess.moments(8)
+    ids = jnp.arange(3)
+    for lo in range(0, 600, 100):
+        shard = 0 if (lo < 300 or num_shards == 1) else 1
+        t0 = None if shard == 0 else jnp.full((3,), lo, jnp.int32)
+        sess.ingest(ids, jnp.stack([s[lo : lo + 100] for s in streams]),
+                    shard=shard, t0=t0)
+
+    batched = sess.query_batch(ids)
+    for u, stream in enumerate(streams):
+        ref = SeriesFrame.from_array(stream, backend="jnp")
+        ref.autocovariance(4)
+        ref.yule_walker(2)
+        ref.moments(8)
+        want = ref.collect()
+        got = sess.query(u)
+        np.testing.assert_allclose(
+            got["autocovariance"], want["autocovariance"], rtol=1e-4, atol=1e-4
+        )
+        for g, w in zip(got["yule_walker"], want["yule_walker"]):
+            np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-4)
+        for k in ("mean", "var", "count"):
+            np.testing.assert_allclose(
+                got["moments"][k], want["moments"][k], rtol=1e-5, atol=1e-5
+            )
+            np.testing.assert_allclose(
+                batched["moments"][k][u], want["moments"][k], rtol=1e-5, atol=1e-5
+            )
+        np.testing.assert_allclose(
+            batched["autocovariance"][u], want["autocovariance"],
+            rtol=1e-4, atol=1e-4,
+        )
+    np.testing.assert_allclose(sess.lengths(), jnp.full((3,), 600))
+
+
+@pytest.mark.backend
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_session_eviction_equals_retained_recompute(backend):
+    """Sliding-window mode: served statistics ≡ recomputing from ONLY the
+    retained window (same plan, same global offsets), per user, after the
+    ring has wrapped several times — and before it wraps at all."""
+    sess = FrameSession(
+        d=D, num_users=2, window=400, num_buckets=4, backend=backend
+    )
+    sess.autocovariance(4)
+    sess.moments(8)
+    sess.welch(nperseg=32, overlap=16)
+    s0 = _series(n=1000, seed=20)
+    s1 = _series(n=450, seed=21)
+    for lo in range(0, 1000, 50):
+        if lo < 450:
+            sess.ingest(jnp.asarray([0, 1]),
+                        jnp.stack([s0[lo : lo + 50], s1[lo : lo + 50]]))
+        else:
+            sess.ingest(jnp.asarray([0]), s0[None, lo : lo + 50])
+
+    plan = sess.plan
+    retained = np.asarray(sess.retained_lengths())
+    assert retained.tolist() == [400, 350]
+    for u, (stream, cnt) in enumerate([(s0, 1000), (s1, 450)]):
+        got = sess.query(u)
+        start = cnt - int(retained[u])
+        want = plan.finalize(
+            plan.from_chunk(stream[start:], t0=start), cache=False
+        )
+        np.testing.assert_allclose(
+            got["autocovariance"], want["autocovariance"], rtol=1e-4, atol=1e-4
+        )
+        for k in ("mean", "var", "count"):
+            np.testing.assert_allclose(
+                got["moments"][k], want["moments"][k], rtol=1e-5, atol=1e-5
+            )
+        np.testing.assert_allclose(
+            got["welch"][1], want["welch"][1], rtol=1e-4, atol=1e-4
+        )
+
+
+def test_eviction_zero_length_chunk_is_a_noop():
+    """An empty arrival at a bucket boundary must NOT fire the boundary
+    reset (it would silently wipe a still-retained bucket while the cursor
+    — and retained_lengths — stand still)."""
+    from repro.core.estimators.stats import lag_sum_engine, streaming_mean
+    from repro.serving.rolling import RollingStatsService
+
+    svc = RollingStatsService(lag_sum_engine(0, 1), 1, window=16, num_buckets=4)
+    x = jnp.arange(20.0)[:, None]
+    for lo in range(0, 20, 4):
+        svc.ingest(jnp.asarray([0]), x[None, lo : lo + 4])
+    before = float(svc.query(0, lambda eng, s: streaming_mean(s))[0])
+    svc.ingest(jnp.asarray([0]), jnp.zeros((1, 0, 1)))  # cursor on boundary
+    after = float(svc.query(0, lambda eng, s: streaming_mean(s))[0])
+    assert before == after == np.mean(np.arange(4, 20))
+    assert int(svc.retained_lengths()[0]) == 16
+
+
+def test_eviction_mode_validation():
+    sess = FrameSession(d=1, num_users=1, window=40, num_buckets=4)
+    sess.moments(4)
+    sess.ingest(jnp.asarray([0]), jnp.ones((1, 5, 1)))
+    with pytest.raises(ValueError, match="straddle"):
+        # cursor at 5; a 10-sample chunk would cross the bucket-10 boundary
+        sess.ingest(jnp.asarray([0]), jnp.ones((1, 10, 1)))
+    with pytest.raises(ValueError, match="bucket span"):
+        sess.ingest(jnp.asarray([0]), jnp.ones((1, 11, 1)))
+    with pytest.raises(ValueError, match="cursor"):
+        sess.ingest(jnp.asarray([0]), jnp.ones((1, 5, 1)), t0=jnp.asarray([7]))
+    from repro.serving.rolling import RollingStatsService
+    from repro.core.estimators.stats import lag_sum_engine
+
+    with pytest.raises(ValueError, match="single ingest lane"):
+        RollingStatsService(lag_sum_engine(2, 1), 4, num_shards=2, window=40)
+    with pytest.raises(ValueError, match="multiple"):
+        RollingStatsService(lag_sum_engine(2, 1), 4, window=41, num_buckets=4)
+
+
+# ------------------------------------------------------------ shim coherence
+
+
+def test_streaming_estimator_is_frame_shim():
+    """The StreamingEstimator chunk driver now rides the frame's engine
+    mode — same state, same programs."""
+    from repro.core.estimators.stats import lag_sum_engine, streaming_autocovariance
+    from repro.timeseries import StreamingEstimator
+
+    x = _series(n=1200, seed=30)
+    est = StreamingEstimator(lag_sum_engine(4, D))
+    est.ingest(x[:700]).ingest(x[700:])
+    assert isinstance(est._frame, SeriesFrame)
+    np.testing.assert_allclose(
+        est.finalize(streaming_autocovariance),
+        autocovariance(x, 4),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+
+
+def test_analyze_is_frame_shim():
+    from repro.core.plan import analyze, autocovariance_request, moments_request
+
+    x = _series(n=1100, seed=31)
+    out = analyze(x, [autocovariance_request(5), moments_request(16)],
+                  chunk_size=271)
+    np.testing.assert_allclose(
+        out["autocovariance"], autocovariance(x, 5), rtol=1e-5, atol=1e-4
+    )
