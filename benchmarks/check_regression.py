@@ -1,16 +1,24 @@
 """Perf-regression gate over the committed BENCH_*.json trajectories.
 
 Diffs the working-tree benchmark JSONs (the ones `benchmarks.run` just
-wrote) against the versions committed at HEAD (``git show HEAD:<file>``)
-and FAILS — nonzero exit — when any named entry slowed down by more than
-``THRESHOLD`` (1.5×).  Speedups and new entries pass; an entry present at
-HEAD but missing from the fresh run fails (a silently dropped benchmark is
-how perf coverage rots).
+wrote) against the **baseline**: the blessed snapshot in
+``benchmarks/baselines/<file>`` when one exists, else the version committed
+at HEAD (``git show HEAD:<file>``).  FAILS — nonzero exit — when any named
+entry slowed down by more than ``THRESHOLD`` (1.5×).  Speedups and new
+entries pass; an entry present in the baseline but missing from the fresh
+run fails (a silently dropped benchmark is how perf coverage rots).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.check_regression [--threshold 1.5]
+    PYTHONPATH=src python -m benchmarks.check_regression --update-baselines
 
-Meant to run right after ``python -m benchmarks.run`` in CI: the committed
+``--update-baselines`` blesses the current working-tree JSONs: they are
+copied into ``benchmarks/baselines/`` (shown against the old baseline
+first, never gated), and committing that directory pins them as the
+reference for every later run.  Use it after an intentional perf trade-off
+or a hardware change, not to silence a regression you have not read.
+
+Meant to run right after ``python -m benchmarks.run`` in CI: the blessed
 JSONs are the trajectory, the fresh ones are the candidate, and the gate
 keeps a PR from landing a >1.5× slowdown on any tracked hot path.
 """
@@ -19,15 +27,18 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import shutil
 import subprocess
 import sys
 
 THRESHOLD = 1.5
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(REPO_ROOT, "benchmarks", "baselines")
 
 # Every tracked trajectory file; entries are matched by (name, backend).
 BENCH_FILES = [
     "BENCH_backends.json",
+    "BENCH_spectral.json",
     "BENCH_fused.json",
     "BENCH_frame.json",
     "BENCH_streaming.json",
@@ -62,14 +73,41 @@ def _committed(fname: str):
     return json.loads(blob)
 
 
+def _baseline(fname: str):
+    """Baseline payload: the blessed benchmarks/baselines snapshot when one
+    exists, the HEAD-committed file otherwise."""
+    blessed = os.path.join(BASELINE_DIR, fname)
+    if os.path.exists(blessed):
+        with open(blessed) as f:
+            return json.load(f)
+    return _committed(fname)
+
+
+def update_baselines(files) -> int:
+    """Copy the working-tree BENCH files into benchmarks/baselines/."""
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    missing = []
+    for fname in files:
+        src = os.path.join(REPO_ROOT, fname)
+        if not os.path.exists(src):
+            missing.append(fname)
+            continue
+        shutil.copyfile(src, os.path.join(BASELINE_DIR, fname))
+        print(f"blessed {fname} -> benchmarks/baselines/{fname}")
+    if missing:
+        print(f"not blessed (missing from working tree): {missing}",
+              file=sys.stderr)
+    return 0
+
+
 def check_file(fname: str, threshold: float) -> list:
     """Returns a list of human-readable failure strings for one file."""
     path = os.path.join(REPO_ROOT, fname)
     if not os.path.exists(path):
         return [f"{fname}: missing from working tree (benchmarks not run?)"]
-    base_payload = _committed(fname)
+    base_payload = _baseline(fname)
     if base_payload is None:
-        print(f"{fname}: no committed baseline at HEAD — skipping")
+        print(f"{fname}: no blessed or committed baseline — skipping")
         return []
     with open(path) as f:
         fresh_payload = json.load(f)
@@ -114,7 +152,26 @@ def main(argv=None) -> int:
         "--files", nargs="*", default=BENCH_FILES,
         help="BENCH json filenames (repo-root relative) to check",
     )
+    parser.add_argument(
+        "--update-baselines", action="store_true",
+        help="bless the working-tree JSONs as the new baseline "
+             "(benchmarks/baselines/); shows diffs, never fails",
+    )
     args = parser.parse_args(argv)
+
+    if args.update_baselines:
+        # Show the diff being blessed — including disappeared entries: a
+        # benchmark silently baked out of the baseline is exactly the
+        # coverage rot the gate exists to prevent.  Blessing proceeds (the
+        # flag is for intentional changes) but never silently.
+        warnings = []
+        for fname in args.files:
+            warnings.extend(check_file(fname, args.threshold))
+        if warnings:
+            print("\nBLESSING OVER THESE DIFFERENCES:", file=sys.stderr)
+            for w in warnings:
+                print(f"  {w}", file=sys.stderr)
+        return update_baselines(args.files)
 
     failures = []
     for fname in args.files:

@@ -11,16 +11,19 @@ import jax
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+# Every-leaf blocker shared with the calibration measurements — one
+# definition of "the call is finished" for both timing harnesses.
+from repro.core.calibrate import block_all  # noqa: E402
+
+
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall time in microseconds (blocks on jax outputs)."""
+    """Median wall time in microseconds (blocks on every output leaf)."""
     for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
+        block_all(fn(*args))
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
+        block_all(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2] * 1e6

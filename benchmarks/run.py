@@ -1,13 +1,14 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmark contract).
-``bench_backends`` / ``bench_fused`` / ``bench_frame`` /
-``bench_streaming`` additionally emit ``BENCH_backends.json`` /
-``BENCH_fused.json`` / ``BENCH_frame.json`` / ``BENCH_streaming.json`` at
-the repo root so the kernel-backend, fused-plan, session-API, and
+``bench_backends`` / ``bench_spectral`` / ``bench_fused`` /
+``bench_frame`` / ``bench_streaming`` additionally emit
+``BENCH_{backends,spectral,fused,frame,streaming}.json`` at the repo root
+so the kernel-backend, spectral-primitive, fused-plan, session-API, and
 streaming-ingest perf trajectories populate per commit;
 ``python -m benchmarks.check_regression`` diffs them against the committed
-baselines and fails on >1.5× slowdowns.
+baselines and fails on >1.5× slowdowns (re-bless with
+``--update-baselines`` after an intentional trade-off).
 """
 from __future__ import annotations
 
@@ -17,6 +18,7 @@ import traceback
 MODULES = [
     "bench_autocov",        # paper Fig. 2 (+ Fig. 9 kernel check)
     "bench_backends",       # compute-registry shootout → BENCH_backends.json
+    "bench_spectral",       # spectral primitive + fused Welch → BENCH_spectral.json
     "bench_fused",          # fused N-statistic plans → BENCH_fused.json
     "bench_frame",          # SeriesFrame session API → BENCH_frame.json
     "bench_streaming",      # streaming monoid → BENCH_streaming.json

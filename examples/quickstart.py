@@ -94,6 +94,27 @@ def main():
     preds = ar_forecast(A_hat2, tail[-10:], steps=5)
     print("5-step forecast (first dim):", [f"{float(v):.3f}" for v in preds[:, 0]])
 
+    # 8. Where the math ran: the default "auto" backend dispatches each of
+    #    the six primitives through MEASURED per-primitive crossovers
+    #    (repro.core.calibrate), not a hard-coded size constant.  On TPU the
+    #    first dispatch microbenchmarks and caches the thresholds; anywhere
+    #    you can also calibrate explicitly — one pass, persisted, picked up
+    #    by every later process on this machine:
+    #
+    #        from repro.core.calibrate import calibrate
+    #        get_backend("auto").set_table(calibrate())   # measures + caches
+    #
+    from repro.core.backend import get_backend
+    from repro.core.calibrate import cache_path
+
+    table = get_backend("auto").table
+    shown = {k: ("never" if v == float("inf") else int(v))
+             for k, v in sorted(table.thresholds.items())}
+    print(f"auto-backend crossovers ({table.platform}, {table.source}; "
+          f"cache: {cache_path()}):")
+    for prim, thr in shown.items():
+        print(f"  {prim:<22s} -> pallas at {thr} rows")
+
 
 if __name__ == "__main__":
     main()

@@ -35,24 +35,28 @@ Backends in the registry:
   ``"jnp"``     pure jax.numpy on whatever XLA device is active — the
                 correctness oracle and the CPU/cluster default.
   ``"pallas"``  explicit VMEM tile kernels (`repro.kernels.window_stats`,
-                `repro.kernels.banded_matvec`) — the TPU re-instantiation of
+                `repro.kernels.banded_matvec`,
+                `repro.kernels.segment_dft`) — the TPU re-instantiation of
                 the paper's §12 GPU shared-memory scheme.  Runs in interpret
                 mode off-TPU so CPU tests exercise the identical tiling.
-                Primitives without a Pallas kernel (``segment_fft_power``:
-                there is no Pallas FFT) fall back to the jnp implementation.
-  ``"auto"``    per-call policy (the default): Pallas when running on a TPU
-                AND the problem is large enough to fill tiles, jnp otherwise.
-                Selection rules (see :class:`AutoBackend`):
-                  * off-TPU → always jnp (interpret mode is a testing
-                    vehicle, not a serving path);
-                  * lagged/masked sums and windowed moments → Pallas when the
-                    series has ≥ ``min_rows`` rows (default 4096);
-                  * banded matvec → Pallas when d ≥ ``min_rows``;
-                  * segment FFT power → always jnp.
+                All six primitives have a real kernel: the spectral one
+                evaluates the fixed-L real DFT as tiled matmuls against
+                precomputed twiddle/window matrices, so a fused plan with a
+                Welch member no longer ejects to jnp.
+  ``"auto"``    per-call policy (the default): each primitive routes to
+                Pallas once its problem size crosses a **measured**,
+                per-primitive threshold (`repro.core.calibrate`).  The
+                thresholds resolve lazily at first dispatch — a cached
+                calibration if one exists, a fresh microbenchmark pass on
+                TPU (persisted for next time), the built-in default table
+                otherwise (off-accelerator that table says "always jnp":
+                interpret mode is a testing vehicle, not a serving path).
+                There is no hard-coded row constant left in the policy;
+                re-measure with ``repro.core.calibrate.calibrate()``.
 
 Registering a new backend (a GPU Triton port, a CPU-vectorized build, …):
 
-    class TritonBackend: ...    # implement the five primitives
+    class TritonBackend: ...    # implement the six primitives
     register_backend("triton", TritonBackend())
     gamma = autocovariance(x, 8, backend="triton")
 
@@ -288,6 +292,7 @@ class PallasBackend:
     Args:
       block_t: core tile length for the windowed-contraction kernels.
       block_rows: row tile for the banded matvec.
+      block_s: segments staged per grid step in the segment-DFT kernel.
       interpret: force Pallas interpret mode.  ``None`` (default) resolves
         per call: compiled on TPU, interpret everywhere else — so the same
         backend object validates on CPU and serves on TPU.
@@ -299,12 +304,13 @@ class PallasBackend:
         self,
         block_t: int = 512,
         block_rows: int = 256,
+        block_s: int = 8,
         interpret: Optional[bool] = None,
     ):
         self.block_t = block_t
         self.block_rows = block_rows
+        self.block_s = block_s
         self.interpret = interpret
-        self._jnp = JnpBackend()
 
     def _interp(self) -> bool:
         if self.interpret is not None:
@@ -337,9 +343,15 @@ class PallasBackend:
     def segment_fft_power(
         self, segments: jax.Array, taper: jax.Array, detrend: bool = True
     ) -> jax.Array:
-        # No Pallas FFT primitive exists; the spectral path runs through XLA's
-        # rfft on every backend (documented selection rule).
-        return self._jnp.segment_fft_power(segments, taper, detrend)
+        from ..kernels.segment_dft import ops as sd
+
+        return sd.segment_fft_power(
+            segments,
+            taper,
+            detrend,
+            block_s=self.block_s,
+            interpret=self._interp(),
+        )
 
     def banded_matvec(self, diags: jax.Array, x: jax.Array) -> jax.Array:
         from ..kernels.banded_matvec import ops as bmv
@@ -373,13 +385,21 @@ class PallasBackend:
 
 
 class AutoBackend:
-    """Per-call dispatch by platform and problem size.
+    """Per-call dispatch by *measured* crossover, not a hard-coded constant.
 
-    Off-TPU every primitive routes to jnp (Pallas interpret mode is a
-    validation vehicle, ~100× slower than XLA).  On TPU the tiled kernels
-    take over once the problem fills tiles: windowed contractions when the
-    series has ≥ ``min_rows`` rows, banded matvec when d ≥ ``min_rows``;
-    ``segment_fft_power`` always runs through jnp (no Pallas FFT).
+    Each primitive routes to the Pallas tile kernel once its problem size
+    (rows for the windowed contractions, banded dimension for the matvec,
+    total staged samples S·L for the segment DFT) reaches that primitive's
+    calibrated crossover threshold (`repro.core.calibrate`).  The table is
+    resolved lazily at the first dispatch: a cached measurement for this
+    platform if one exists, a fresh microbenchmark pass on TPU (persisted),
+    else the built-in default table — which off-accelerator says "always
+    jnp", since interpret-mode Pallas is a validation vehicle ~100× slower
+    than XLA.
+
+    Inject or refresh the policy at runtime:
+
+        get_backend("auto").set_table(calibrate())
     """
 
     name = "auto"
@@ -388,37 +408,58 @@ class AutoBackend:
         self,
         jnp_backend: Optional[JnpBackend] = None,
         pallas_backend: Optional[PallasBackend] = None,
-        min_rows: int = 4096,
+        table=None,
     ):
         self._jnp = jnp_backend or JnpBackend()
         self._pallas = pallas_backend or PallasBackend()
-        self.min_rows = min_rows
+        self._table = table
 
-    def _pick(self, rows: int) -> Backend:
-        if jax.default_backend() == "tpu" and rows >= self.min_rows:
+    @property
+    def table(self):
+        """The active `repro.core.calibrate.CalibrationTable` (resolving it
+        on first access — cache > TPU auto-measure > built-in default)."""
+        if self._table is None:
+            from .calibrate import resolve_table
+
+            self._table = resolve_table()
+        return self._table
+
+    def set_table(self, table) -> None:
+        """Swap the crossover table (e.g. a fresh ``calibrate()`` result)."""
+        self._table = table
+
+    def _pick(self, primitive: str, size: int) -> Backend:
+        if size >= self.table.crossover(primitive):
             return self._pallas
         return self._jnp
 
     def lagged_sums(self, x: jax.Array, max_lag: int) -> jax.Array:
-        return self._pick(x.shape[0]).lagged_sums(x, max_lag)
+        return self._pick("lagged_sums", x.shape[0]).lagged_sums(x, max_lag)
 
     def masked_lagged_sums(
         self, y_padded: jax.Array, start_mask: jax.Array, max_lag: int
     ) -> jax.Array:
-        return self._pick(start_mask.shape[0]).masked_lagged_sums(
-            y_padded, start_mask, max_lag
-        )
+        return self._pick(
+            "masked_lagged_sums", start_mask.shape[0]
+        ).masked_lagged_sums(y_padded, start_mask, max_lag)
 
     def windowed_moments(self, x: jax.Array, window: int) -> jax.Array:
-        return self._pick(x.shape[0]).windowed_moments(x, window)
+        return self._pick("windowed_moments", x.shape[0]).windowed_moments(
+            x, window
+        )
 
     def segment_fft_power(
         self, segments: jax.Array, taper: jax.Array, detrend: bool = True
     ) -> jax.Array:
-        return self._jnp.segment_fft_power(segments, taper, detrend)
+        staged = segments.shape[0] * segments.shape[1]
+        return self._pick("segment_fft_power", staged).segment_fft_power(
+            segments, taper, detrend
+        )
 
     def banded_matvec(self, diags: jax.Array, x: jax.Array) -> jax.Array:
-        return self._pick(diags.shape[0]).banded_matvec(diags, x)
+        return self._pick("banded_matvec", diags.shape[0]).banded_matvec(
+            diags, x
+        )
 
     def fused_lagged_moments(
         self,
@@ -427,9 +468,9 @@ class AutoBackend:
         max_lag: int,
         window: "int | tuple",
     ) -> tuple:
-        return self._pick(start_mask.shape[0]).fused_lagged_moments(
-            y_padded, start_mask, max_lag, window
-        )
+        return self._pick(
+            "fused_lagged_moments", start_mask.shape[0]
+        ).fused_lagged_moments(y_padded, start_mask, max_lag, window)
 
 
 _REGISTRY: Dict[str, Backend] = {

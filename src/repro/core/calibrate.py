@@ -1,0 +1,342 @@
+"""Measured backend crossovers: the "auto" policy learns from the hardware.
+
+The compute-backend registry (`repro.core.backend`) dispatches each of the
+six primitive contractions to jnp or the Pallas tile kernels.  Where the
+crossover sits — the problem size above which the tile kernel beats XLA's
+fusion — is a property of the *hardware* (HBM bandwidth, MXU shape, grid
+launch overhead), not something a constant in the source can know.  PR 2
+shipped a single hard-coded ``min_rows=4096`` guess; this module replaces
+it with measurement:
+
+  * :func:`calibrate` microbenchmarks every registered primitive on both
+    backends across a grid of problem sizes and derives a per-primitive
+    **crossover threshold** — the smallest grid size at which the Pallas
+    kernel wins and keeps winning for every larger size (``inf`` when it
+    never does, e.g. interpret mode off-TPU);
+  * the resulting :class:`CalibrationTable` is persisted to a per-platform
+    cache file (:func:`save_table` / :func:`load_table`; the path honours
+    ``REPRO_CALIB_CACHE``), so one calibration pass serves every later
+    process on the same machine;
+  * `repro.core.backend.AutoBackend` resolves its thresholds lazily at the
+    first dispatch through :func:`resolve_table`: a cached measured table
+    if one exists, else — on TPU, or when ``REPRO_AUTO_CALIBRATE=1`` — a
+    fresh :func:`calibrate` run persisted for next time, else the built-in
+    :func:`default_table` (off-accelerator the Pallas path is interpret
+    mode, never profitable, so the default is "always jnp").
+
+The built-in defaults are a *fallback*, not policy: any measured table,
+cached or injected (``AutoBackend(table=...)``), overrides them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PRIMITIVES",
+    "CalibrationTable",
+    "block_all",
+    "default_table",
+    "cache_path",
+    "load_table",
+    "save_table",
+    "resolve_table",
+    "calibrate",
+]
+
+# The six registered primitive contractions (`repro.core.backend.Backend`).
+PRIMITIVES: Tuple[str, ...] = (
+    "lagged_sums",
+    "masked_lagged_sums",
+    "windowed_moments",
+    "segment_fft_power",
+    "banded_matvec",
+    "fused_lagged_moments",
+)
+
+# Built-in fallback crossovers when no measured table exists.  On TPU these
+# are the PR 2 reasoning (tiles fill around 4k rows; the matmul-DFT needs
+# more samples to amortize its O(L²) constant); everywhere else Pallas runs
+# in interpret mode — a validation vehicle, never a serving path — so the
+# crossover is "never".
+_TPU_DEFAULTS: Dict[str, float] = {
+    "lagged_sums": 4096.0,
+    "masked_lagged_sums": 4096.0,
+    "windowed_moments": 4096.0,
+    "fused_lagged_moments": 4096.0,
+    "banded_matvec": 4096.0,
+    "segment_fft_power": 32768.0,
+}
+
+
+@dataclasses.dataclass
+class CalibrationTable:
+    """Per-primitive crossover thresholds for one platform.
+
+    ``thresholds[name]`` is the problem size (rows for the windowed
+    contractions, banded dimension for the matvec, total staged samples
+    S·L for the segment DFT) at which the ``"auto"`` policy starts routing
+    that primitive to the Pallas backend; ``math.inf`` means never.
+    ``source`` records provenance: "default", "measured", or "cache".
+    """
+
+    platform: str
+    thresholds: Dict[str, float]
+    source: str = "default"
+
+    def crossover(self, primitive: str) -> float:
+        return float(self.thresholds.get(primitive, math.inf))
+
+    def to_json(self) -> dict:
+        return {
+            "platform": self.platform,
+            # inf is not valid JSON — encode as null.
+            "thresholds": {
+                k: (None if math.isinf(v) else v)
+                for k, v in self.thresholds.items()
+            },
+            "source": self.source,
+        }
+
+    @classmethod
+    def from_json(cls, payload: dict) -> "CalibrationTable":
+        thresholds = {
+            k: (math.inf if v is None else float(v))
+            for k, v in payload.get("thresholds", {}).items()
+        }
+        return cls(
+            platform=payload.get("platform", "unknown"),
+            thresholds=thresholds,
+            source=payload.get("source", "cache"),
+        )
+
+
+def default_table(platform: Optional[str] = None) -> CalibrationTable:
+    """The built-in fallback table for ``platform`` (default: current)."""
+    platform = platform or jax.default_backend()
+    if platform == "tpu":
+        thresholds = dict(_TPU_DEFAULTS)
+    else:
+        thresholds = {p: math.inf for p in PRIMITIVES}
+    return CalibrationTable(platform, thresholds, source="default")
+
+
+def cache_path(platform: Optional[str] = None) -> str:
+    """Where the measured table persists: ``$REPRO_CALIB_CACHE`` when set
+    (one file, platform recorded inside), else
+    ``~/.cache/repro/calibration_<platform>.json``."""
+    env = os.environ.get("REPRO_CALIB_CACHE")
+    if env:
+        return env
+    platform = platform or jax.default_backend()
+    base = os.environ.get(
+        "XDG_CACHE_HOME", os.path.join(os.path.expanduser("~"), ".cache")
+    )
+    return os.path.join(base, "repro", f"calibration_{platform}.json")
+
+
+def load_table(platform: Optional[str] = None) -> Optional[CalibrationTable]:
+    """The cached measured table for ``platform``, or None.  A cache written
+    on a different platform is ignored, never misapplied."""
+    platform = platform or jax.default_backend()
+    path = cache_path(platform)
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return None
+    table = CalibrationTable.from_json(payload)
+    if table.platform != platform:
+        return None
+    table.source = "cache"
+    return table
+
+
+def save_table(table: CalibrationTable, path: Optional[str] = None) -> str:
+    path = path or cache_path(table.platform)
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(table.to_json(), f, indent=2)
+        f.write("\n")
+    return path
+
+
+def _autocalibrate_default(platform: str) -> bool:
+    env = os.environ.get("REPRO_AUTO_CALIBRATE")
+    if env is not None:
+        return env not in ("", "0", "false", "False")
+    # First use on a TPU pays one measurement pass and caches it; elsewhere
+    # the interpret-mode "measurement" would only confirm the default inf.
+    return platform == "tpu"
+
+
+def resolve_table(
+    platform: Optional[str] = None, autocalibrate: Optional[bool] = None
+) -> CalibrationTable:
+    """The table the ``"auto"`` backend should dispatch with, resolved at
+    first use: cached measurement > fresh measurement (TPU or
+    ``REPRO_AUTO_CALIBRATE=1``) > built-in default."""
+    platform = platform or jax.default_backend()
+    cached = load_table(platform)
+    if cached is not None:
+        return cached
+    if autocalibrate is None:
+        autocalibrate = _autocalibrate_default(platform)
+    if autocalibrate:
+        return calibrate(save=True)
+    return default_table(platform)
+
+
+# ---------------------------------------------------------------- measurement
+def block_all(out) -> None:
+    """Block on EVERY jax leaf of ``out``, explicitly.
+
+    A measurement must not return while any async leaf is still in flight:
+    with donated-carry programs the visible leaf can materialize while
+    sibling buffers are still being rewritten in place — blocking only the
+    first leaf under-reports exactly the donation wins being measured.
+    Non-array leaves (Python scalars in result dicts) are skipped.  Shared
+    with the benchmark harness (`benchmarks.common`).
+    """
+    for leaf in jax.tree_util.tree_leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def _time(fn, iters: int, warmup: int) -> float:
+    """Median wall seconds per call, blocking on every output leaf."""
+    for _ in range(warmup):
+        block_all(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        block_all(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _workloads(
+    n: int, d: int, max_lag: int, window: int, nperseg: int, bandwidth: int
+) -> Dict[str, callable]:
+    """One closure per primitive at problem size ``n``: builds the inputs
+    once (outside the timed region) and returns ``fn(backend) -> callable``.
+    Sizes are clamped so tiny grid points stay valid."""
+    key = jax.random.PRNGKey(n)
+    ks = jax.random.split(key, 4)
+    H = min(max_lag, max(n - 1, 0))
+    w = min(window, n)
+    x = jax.random.normal(ks[0], (n, d))
+    y = jax.random.normal(ks[1], (n + max(H, w - 1, 1), d))
+    mask = jnp.ones((n,), jnp.bool_)
+    L = min(nperseg, n)
+    S = max(n // max(L, 1), 1)
+    segs = jax.random.normal(ks[2], (S, L, d))
+    taper = 0.5 - 0.5 * jnp.cos(2 * jnp.pi * jnp.arange(L) / max(L, 1))
+    b = min(bandwidth, max((n - 1) // 2, 0))
+    diags = jax.random.normal(ks[3], (n, 2 * b + 1))
+    v = x[:, 0]
+
+    return {
+        "lagged_sums": lambda be: (lambda: be.lagged_sums(x, H)),
+        "masked_lagged_sums": lambda be: (
+            lambda: be.masked_lagged_sums(y, mask, H)
+        ),
+        "windowed_moments": lambda be: (lambda: be.windowed_moments(x, w)),
+        "segment_fft_power": lambda be: (
+            lambda: be.segment_fft_power(segs, taper)
+        ),
+        "banded_matvec": lambda be: (lambda: be.banded_matvec(diags, v)),
+        "fused_lagged_moments": lambda be: (
+            lambda: be.fused_lagged_moments(y, mask, H, w)
+        ),
+    }
+
+
+def calibrate(
+    sizes: Sequence[int] = (512, 2048, 8192, 32768),
+    d: int = 8,
+    max_lag: int = 8,
+    window: int = 64,
+    nperseg: int = 256,
+    bandwidth: int = 8,
+    iters: int = 3,
+    warmup: int = 1,
+    backends: Tuple[str, str] = ("jnp", "pallas"),
+    save: bool = True,
+    path: Optional[str] = None,
+    verbose: bool = False,
+) -> CalibrationTable:
+    """Measure per-primitive backend crossovers on THIS machine.
+
+    For every primitive and every grid size, times the ``backends`` pair
+    (median of ``iters`` after ``warmup``, blocking on every output leaf)
+    and derives the crossover: the smallest grid size where the alternate
+    backend is at least as fast as the baseline *and stays so for every
+    larger size* — a single fluky win at one size does not flip the policy.
+    ``inf`` (never) when no such size exists.
+
+    Returns the measured :class:`CalibrationTable`; with ``save=True``
+    (default) it is also persisted to the platform cache file so later
+    processes skip the measurement.  Inject into a live policy with
+    ``get_backend("auto").set_table(table)`` (a fresh process picks the
+    cache up automatically).
+    """
+    from .backend import get_backend
+
+    base_be, alt_be = (get_backend(b) for b in backends)
+    platform = jax.default_backend()
+    sizes = sorted(set(int(s) for s in sizes))
+    if not sizes:
+        raise ValueError("need at least one calibration grid size")
+
+    wins: Dict[str, list] = {p: [] for p in PRIMITIVES}
+    for n in sizes:
+        loads = _workloads(n, d, max_lag, window, nperseg, bandwidth)
+        for prim in PRIMITIVES:
+            t_base = _time(loads[prim](base_be), iters, warmup)
+            t_alt = _time(loads[prim](alt_be), iters, warmup)
+            wins[prim].append(t_alt <= t_base)
+            if verbose:
+                print(
+                    f"calibrate {prim:<22s} n={n:<8d} "
+                    f"{backends[0]}={t_base * 1e6:10.1f}us "
+                    f"{backends[1]}={t_alt * 1e6:10.1f}us "
+                    f"{'<<' if t_alt <= t_base else ''}"
+                )
+
+    thresholds: Dict[str, float] = {}
+    for prim in PRIMITIVES:
+        thr = math.inf
+        # smallest size from which the alternate backend never loses again
+        for i in range(len(sizes) - 1, -1, -1):
+            if not wins[prim][i]:
+                break
+            thr = float(sizes[i])
+        thresholds[prim] = thr
+
+    table = CalibrationTable(platform, thresholds, source="measured")
+    if save:
+        # The measured table is the product; the cache is an optimization.
+        # ``calibrate`` can run implicitly at the auto backend's first
+        # dispatch (resolve_table), so an unwritable cache location must
+        # not crash the user's first estimator call.
+        try:
+            save_table(table, path)
+        except OSError as e:
+            import warnings
+
+            warnings.warn(
+                f"calibration succeeded but the cache could not be written "
+                f"({e}); the measured table is used for this process only"
+            )
+    return table

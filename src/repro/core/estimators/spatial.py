@@ -80,9 +80,10 @@ def banded_predict(
 
     Routes through the compute-backend registry's ``banded_matvec``
     primitive (`repro.core.backend`): gather-einsum on "jnp", the row-tiled
-    VMEM kernel of `repro.kernels.banded_matvec` on "pallas".  Note the
-    Pallas kernel is forward-only (no custom VJP); differentiable paths
-    (`banded_nll`) pin the jnp backend.
+    VMEM kernel of `repro.kernels.banded_matvec` on "pallas".  The Pallas
+    kernel carries a custom VJP (Aᵀ g is another banded matvec against the
+    transposed band), so differentiable paths (`banded_nll`,
+    `fit_banded_ar`) run on any backend.
 
     Args:
       diags: (d, 2b+1);  x: (..., d).
@@ -149,6 +150,7 @@ def banded_nll(
     x: jax.Array,
     block_precisions: Optional[jax.Array] = None,
     part: Optional[SpatialPartition] = None,
+    backend: BackendSpec = None,
 ) -> jax.Array:
     """Mean conditional NLL with block-diagonal precision (paper §6.2).
 
@@ -157,6 +159,9 @@ def banded_nll(
       x: (T, d) observations.
       block_precisions: (P, ps, ps) diagonal blocks π_i of Π (defaults I).
       part: spatial partitioning (defaults to one part).
+      backend: compute-backend spec for the predictor contraction.  The
+        loss is differentiated; the Pallas banded matvec has a custom VJP,
+        so any backend works (previously "jnp" was pinned here).
 
     The separability claim: this loss is a sum over partitions i of terms
     that only read X^{P_i⁺} — verified in tests by comparing against the
@@ -165,9 +170,7 @@ def banded_nll(
     d = diags.shape[0]
     if part is None:
         part = SpatialPartition(d=d, num_parts=1, bandwidth=(diags.shape[1] - 1) // 2)
-    # jnp backend pinned: the loss is differentiated and the Pallas banded
-    # matvec has no VJP.
-    pred = banded_predict(diags, x[:-1], backend="jnp")  # (T-1, d)
+    pred = banded_predict(diags, x[:-1], backend=backend)  # (T-1, d)
     resid = x[1:] - pred
     ps = part.part_size
     r = resid.reshape(resid.shape[0], part.num_parts, ps)
@@ -194,12 +197,16 @@ def fit_banded_ar(
     step_size: Optional[float] = None,
     num_parts: int = 1,
     block_precisions: Optional[jax.Array] = None,
+    backend: BackendSpec = None,
 ) -> BandedFitResult:
     """First-order conditional MLE of the banded model (paper §6.2–6.3).
 
     The gradient w.r.t. the (d, 2b+1) diagonals separates across row
     partitions; jax.grad through :func:`banded_nll` realizes exactly the
     paper's per-node gradient with time complexity O(N·(2b+1)²) per row.
+    ``backend`` picks the predictor substrate for both the forward loss and
+    (via the kernel's custom VJP) the gradient — the fit is no longer
+    pinned to the jnp path.
     """
     d = x.shape[1]
     part = SpatialPartition(d=d, num_parts=num_parts, bandwidth=bandwidth)
@@ -209,7 +216,7 @@ def fit_banded_ar(
         ev = jnp.linalg.eigvalsh(c)
         step_size = float(2.0 / (ev[0] + ev[-1]))
 
-    loss = lambda dg: banded_nll(dg, x, block_precisions, part)
+    loss = lambda dg: banded_nll(dg, x, block_precisions, part, backend=backend)
 
     @jax.jit
     def step(dg):

@@ -348,7 +348,11 @@ class SeriesFrame(_DeferredRequests):
         Invalidates the memoized results; if a plan is already compiled the
         chunk folds into the carried fused `PartialState` with the
         weak-memory ⊕ — history is never re-read, so a following
-        ``collect()`` costs one walk of these samples only.
+        ``collect()`` costs one walk of these samples only.  The fold runs
+        through the engines' cached *donated* jitted updates: the carried
+        states' buffers are reused in place, so a steady append stream of
+        same-shape chunks re-traces nothing and allocates nothing per
+        chunk, with zero device→host copies on the whole path.
         """
         if self._placement == "engine":
             self._e_state = self._e_update(self._e_state, chunk)
@@ -365,14 +369,31 @@ class SeriesFrame(_DeferredRequests):
         elif self._placement == "chunks":
             if self._plan is None:
                 self._tail_chunks().append(chunk)
-        else:  # sharded: retained for replans (the store keeps history anyway)
+        elif self._can_scatter_append():
+            # sharded with an owned single-host store: the chunk scatters
+            # INTO the device store (one donated scatter program), so
+            # replans re-read a complete series — no host-side replay list.
+            self._store.append_rows(chunk)
+        else:  # sharded pre-plan / mesh / user store: retained for replans
             self._pending.append(chunk)
         if self._plan is not None:
-            # cached jitted programs: a steady append stream of same-shape
-            # chunks re-traces nothing
-            self._states = self._plan.update_jit(self._states, chunk)
+            self._states = self._plan.update_donated(self._states, chunk)
         self._n += chunk.shape[0]
         return self
+
+    def _can_scatter_append(self) -> bool:
+        """Sharded appends scatter into the store when the frame owns a
+        single-host replicate-mode store with causal halos — the
+        `TimeSeriesStore.append_rows` contract.  Mesh-placed or caller-owned
+        stores keep the host-side pending list (a growth step there would
+        reshard or mutate shared state)."""
+        return (
+            self._store is not None
+            and self._store_owned
+            and self._store.mesh is None
+            and self._store.halo_mode == "replicate"
+            and self._store.spec.h_left == 0
+        )
 
     @property
     def length(self) -> int | jax.Array:
@@ -581,15 +602,21 @@ class SeriesFrame(_DeferredRequests):
 
         carry_max = max(g.engine.carry for g in groups)
         head_full, tail_full = self._series_edges(store, carry_max)
+        # Each group's state must own ITS OWN buffers: the donated append
+        # path (`StatPlan.update_donated`) consumes group states in place
+        # one by one, so a leaf shared between two groups would be freed by
+        # the first group's update and read-after-delete by the second.
+        # Single-group plans (every built-in request) skip the copies.
+        own = (lambda a: a) if len(groups) == 1 else jnp.copy
         states = []
         for g, stat in zip(groups, stat_sum):
             c = g.engine.carry
             states.append(
                 PartialState(
                     stat=stat,
-                    sample_sum=sample_sum,
-                    head=head_full[:c],
-                    tail=tail_full[carry_max - c :] if c > 0
+                    sample_sum=own(sample_sum),
+                    head=own(head_full[:c]),
+                    tail=own(tail_full[carry_max - c :]) if c > 0
                     else jnp.zeros((0, self._d)),
                     length=jnp.asarray(n, jnp.int32),
                     t0=jnp.asarray(0, jnp.int32),
@@ -598,6 +625,13 @@ class SeriesFrame(_DeferredRequests):
         states = tuple(states)
         for chunk in self._pending:
             states = plan.update(states, chunk)
+        if self._pending and self._can_scatter_append():
+            # appends buffered before the store existed migrate into it now
+            # (one donated scatter each), so future replans re-read a
+            # complete series and the host-side replay list dies here.
+            for chunk in self._pending:
+                self._store.append_rows(chunk)
+            self._pending = []
         return states
 
     def _series_edges(self, store, carry_max: int):

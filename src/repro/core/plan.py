@@ -143,9 +143,12 @@ def kernel_request(
 
     ``finalizer(member, state, raw_stat)`` (member exposes ``.window`` /
     ``.stride``; ``state`` is the group PartialState) may correct for the
-    fused halo from ``state.tail``; default returns the raw stat.  A
-    non-offset-aware kernel with ``stride > 1`` forces a grouped sub-plan
-    (its own traversal) — see the module docstring.
+    fused halo from ``state.tail``; default returns a copy of the raw stat.
+    A custom finalizer must likewise return freshly derived arrays, never
+    ``state``'s own leaves by identity — the donated append ingest consumes
+    the carried state in place, which would delete a result the caller is
+    still holding.  A non-offset-aware kernel with ``stride > 1`` forces a
+    grouped sub-plan (its own traversal) — see the module docstring.
     """
     return StatRequest(
         "kernel", name, (chunk_kernel, h_right, h_left, stride, takes_offset, finalizer)
@@ -395,7 +398,13 @@ class _PlanGroup:
         def fin(state: PartialState):
             raw = state.stat[name]
             if finalizer is None:
-                return raw
+                # Hand out COPIES, never the carried stat's own buffers:
+                # the donated append path (`update_donated`) consumes the
+                # state in place, which would delete a result the caller
+                # is still holding.  Built-in members always derive fresh
+                # arrays (normalize / divide), so only this raw-readout
+                # path needs the copy.
+                return jax.tree.map(jnp.copy, raw)
             return finalizer(member, state, raw)
 
         member.finalize = fin
@@ -492,6 +501,18 @@ class StatPlan:
         ingest of same-shape chunks never re-traces (the append hot path)."""
         return tuple(
             g.engine.update_jit(s, chunk) for g, s in zip(self.groups, states)
+        )
+
+    def update_donated(self, states, chunk: jax.Array):
+        """``update_jit`` with the carried group states DONATED: the old
+        states' buffers are reused in place, so steady-state append ingest
+        allocates nothing per chunk.  Callers must own ``states``
+        exclusively — every other alias of the old tuple's arrays dies
+        (`SeriesFrame.append` does; its memo caches compare by identity
+        only and never re-read donated buffers)."""
+        return tuple(
+            g.engine.update_donated(s, chunk)
+            for g, s in zip(self.groups, states)
         )
 
     def merge(self, a, b):

@@ -186,6 +186,12 @@ class StreamingEngine:
         # points are traced at most once per ingest shape — drivers that
         # loop over chunks reuse the same compiled program.
         self.update_jit = jax.jit(self.update)
+        # The ingest hot path's variant: the carried PartialState's buffers
+        # are DONATED — XLA reuses them for the new state, so a long-running
+        # append stream allocates nothing per chunk.  Only for callers that
+        # own the state exclusively (`SeriesFrame.append`): any other alias
+        # of the old state dies with the donation.
+        self.update_donated = jax.jit(self.update, donate_argnums=0)
         self.merge_jit = jax.jit(self.merge)
         self.update_batch = jax.jit(jax.vmap(self.update))
         self.merge_batch = jax.jit(jax.vmap(self.merge))

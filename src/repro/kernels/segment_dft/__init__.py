@@ -1,0 +1,1 @@
+from .ops import segment_fft_power, segment_fft_power_reference  # noqa: F401

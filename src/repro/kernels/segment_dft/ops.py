@@ -1,0 +1,66 @@
+"""Public jit'd wrapper for the segment-DFT power kernel.
+
+Handles: segment-count padding to a ``block_s`` multiple (with all-zero
+segments, sliced off after the call), twiddle-matrix construction, f32
+promotion, and the interpret switch for CPU validation.  This is the Pallas
+half of the compute-backend registry's ``segment_fft_power`` primitive
+(`repro.core.backend.PallasBackend`); prefer routing through the registry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segment_dft_power_pallas
+from .ref import dft_power_matrices, segment_dft_power_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("detrend", "block_s", "interpret")
+)
+def segment_fft_power(
+    segments: jax.Array,
+    taper: jax.Array,
+    detrend: bool = True,
+    *,
+    block_s: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-segment one-sided power |rfft((seg − mean)·taper)|², via Pallas.
+
+    Drop-in for the jnp rfft form (`repro.core.backend.JnpBackend
+    .segment_fft_power`): the DFT of a fixed segment length is a constant
+    linear map, evaluated here as two MXU matmuls per segment against
+    precomputed taper-folded twiddle matrices — one VMEM staging per
+    segment, no FFT primitive needed.
+
+    Args:
+      segments: (S, L, d), any float dtype (f32 accumulation).
+      taper: (L,) window function (e.g. Hann).
+
+    Returns (S, L//2+1, d) float32.
+    """
+    if segments.ndim != 3:
+        raise ValueError(f"segments must be (S, L, d), got {segments.shape}")
+    s, L, d = segments.shape
+    if taper.shape != (L,):
+        raise ValueError(f"taper must be ({L},), got {taper.shape}")
+    C, Sn = dft_power_matrices(L, taper)
+    block_s = max(1, min(block_s, max(s, 1)))
+    s_pad = -(-max(s, 1) // block_s) * block_s
+    segs = jnp.pad(
+        segments.astype(jnp.float32), ((0, s_pad - s), (0, 0), (0, 0))
+    )
+    out = segment_dft_power_pallas(
+        segs, C, Sn, detrend=detrend, block_s=block_s, interpret=interpret
+    )
+    return out[:s]
+
+
+def segment_fft_power_reference(
+    segments: jax.Array, taper: jax.Array, detrend: bool = True
+) -> jax.Array:
+    """Matmul-form oracle re-export used by tests/benchmarks."""
+    return segment_dft_power_ref(segments, taper, detrend)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the segment-DFT power kernel.
+
+Two independent references: the matmul form restated without Pallas (the
+tiling oracle) and the rfft form (the numerical ground truth every backend
+is pinned against in tests/test_backend.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dft_power_matrices(L: int, taper: jax.Array):
+    """Taper-folded real-DFT twiddle matrices, both (L, L//2+1).
+
+    ``rfft(y · taper)[f] = Σ_t y_t C[t, f] + i Σ_t y_t S[t, f]`` — the fixed
+    linear map the Pallas kernel contracts each segment against.
+
+    The phase index ``t·f`` grows to ~L²/2, which float32 cannot represent
+    past L ≈ 4k — exactly the sizes the calibrated auto policy routes to
+    this kernel.  The twiddles are L-periodic, so the index is reduced
+    ``mod L`` in exact host integer arithmetic first (L is static); the
+    reduced phase (< L) is float32-exact and the angle error stays O(ulp)
+    at every segment length.
+    """
+    F = L // 2 + 1
+    phase = np.mod(
+        np.outer(np.arange(L, dtype=np.int64), np.arange(F, dtype=np.int64)), L
+    )
+    ang = jnp.asarray(phase, jnp.float32) * jnp.float32(2.0 * np.pi / L)
+    taper = taper.astype(jnp.float32)[:, None]
+    return taper * jnp.cos(ang), -taper * jnp.sin(ang)
+
+
+def segment_dft_power_ref(
+    segments: jax.Array, taper: jax.Array, detrend: bool = True
+) -> jax.Array:
+    """Matmul-form oracle: (S, L, d) segments → (S, L//2+1, d) power."""
+    y = segments.astype(jnp.float32)
+    if detrend:
+        y = y - jnp.mean(y, axis=1, keepdims=True)
+    C, S = dft_power_matrices(segments.shape[1], taper)
+    re = jnp.einsum("std,tf->sfd", y, C)
+    im = jnp.einsum("std,tf->sfd", y, S)
+    return re * re + im * im

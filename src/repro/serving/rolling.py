@@ -48,6 +48,7 @@ from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.streaming import PartialState, StreamingEngine
 
@@ -117,10 +118,12 @@ class RollingStatsService:
             lambda l: jnp.broadcast_to(l, (num_lanes,) + l.shape), one
         )
         # Total samples ever ingested per user — the eviction ring's global
-        # cursor (concrete between calls, so host-side alignment checks are
-        # free).  Growing mode reads lengths straight off the lane states
-        # and never touches this.
-        self._counts = jnp.zeros((num_users,), jnp.int32)
+        # cursor.  Kept as a HOST array: the cursor is only ever read for
+        # alignment checks and bucket derivation, and a device-resident
+        # counter would force one device→host sync per ingest batch (the
+        # hot path).  Growing mode reads lengths straight off the lane
+        # states and never touches this.
+        self._counts = np.zeros((num_users,), np.int64)
 
         def scatter_update(lanes, shard, user_ids, chunks, t0):
             sub = jax.tree.map(lambda l: l[shard, user_ids], lanes)
@@ -220,21 +223,28 @@ class RollingStatsService:
             state is still empty (a lane that picks up mid-stream).
             Growing mode only — the eviction ring owns the global cursor.
         """
-        user_ids = jnp.asarray(user_ids, jnp.int32)
+        # Validation runs on a HOST view of the ids: when the caller passes
+        # host data (a list, a numpy batch straight off the wire) the whole
+        # check costs zero device round-trips — the old jnp form issued a
+        # device dispatch plus a blocking device→host read per ingest call.
+        ids = np.asarray(user_ids)
+        if ids.dtype.kind != "i":
+            # match the old jnp.asarray(user_ids, jnp.int32) coercion —
+            # float-typed ids ingested fine before the host-side validation
+            ids = ids.astype(np.int64)
         # .at[ids].set would silently keep only one of two conflicting
         # scattered states, and jit scatter silently DROPS out-of-bounds
         # ids (the gather on read would clamp to another user) — reject the
         # caller slips instead of losing or cross-wiring data.
-        if int(jnp.unique(user_ids).shape[0]) != int(user_ids.shape[0]):
+        if np.unique(ids).shape[0] != ids.shape[0]:
             raise ValueError("user_ids must be distinct within one ingest batch")
-        if user_ids.shape[0] and not (
-            0 <= int(jnp.min(user_ids)) and int(jnp.max(user_ids)) < self.num_users
-        ):
+        if ids.shape[0] and not (0 <= ids.min() and ids.max() < self.num_users):
             raise ValueError(f"user_ids must lie in [0, {self.num_users})")
         if not 0 <= shard < self._num_lanes or (
             self.window is not None and shard != 0
         ):
             raise ValueError(f"shard {shard} out of range [0, {self.num_shards})")
+        user_ids = jnp.asarray(ids, jnp.int32)
         chunks = jnp.asarray(chunks)
         if chunks.shape[1] == 0:
             # nothing to absorb — and in eviction mode the boundary reset
@@ -252,16 +262,16 @@ class RollingStatsService:
                     f"chunk length {c} exceeds the eviction bucket span "
                     f"{self.bucket_len} (= window / num_buckets)"
                 )
-            starts = self._counts[user_ids]
-            if bool(
-                jnp.any(starts // self.bucket_len != (starts + c - 1) // self.bucket_len)
+            starts = self._counts[ids]  # host cursor: no device sync
+            if np.any(
+                starts // self.bucket_len != (starts + c - 1) // self.bucket_len
             ):
                 raise ValueError(
                     "chunk would straddle an eviction bucket boundary; "
                     f"chunks must tile the {self.bucket_len}-sample bucket grid"
                 )
             self._lanes = self._scatter_evict(
-                self._lanes, user_ids, chunks, starts
+                self._lanes, user_ids, chunks, jnp.asarray(starts, jnp.int32)
             )
         else:
             if t0 is None:
@@ -275,7 +285,7 @@ class RollingStatsService:
                 jnp.asarray(t0),
             )
         if self.window is not None:
-            self._counts = self._counts.at[user_ids].add(chunks.shape[1])
+            self._counts[ids] += chunks.shape[1]
 
     # -- read path ---------------------------------------------------------
     def partial(self, user_id: int) -> PartialState:
@@ -315,7 +325,7 @@ class RollingStatsService:
         """(num_users,) samples ingested per user (total, incl. evicted)."""
         if self.window is None:
             return jnp.sum(self._lanes.length, axis=0)
-        return self._counts
+        return jnp.asarray(self._counts, jnp.int32)
 
     def retained_lengths(self) -> jax.Array:
         """(num_users,) samples a query covers right now: all of them in
@@ -324,7 +334,7 @@ class RollingStatsService:
         has wrapped."""
         if self.window is None:
             return self.lengths()
-        cnt = self._counts
+        cnt = jnp.asarray(self._counts, jnp.int32)
         evicted = (
             jnp.maximum(
                 (cnt - 1) // self.bucket_len - (self.num_buckets - 1), 0

@@ -12,6 +12,7 @@ on a mesh the leading axis is sharded (NamedSharding over ``axis``).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Literal, Optional
 
 import jax
@@ -25,6 +26,28 @@ from ..core import halo as halo_mod
 HaloMode = Literal["replicate", "exchange"]
 
 __all__ = ["TimeSeriesStore"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("B", "width"), donate_argnums=0
+)
+def _scatter_append_rows(blocks, chunk, n0, *, B: int, width: int):
+    """Scatter ``chunk`` (global rows [n0, n0+c)) into every padded block
+    slot that owns it: row g lives in block j at slot g − j·B for every j
+    with j·B ≤ g < j·B + width — its core block plus the right-halo region
+    of up to ⌈(width−B)/B⌉ predecessors.  The ``blocks`` buffer is donated:
+    steady-state ingest rewrites the store in place.  Out-of-range copies
+    are dropped by routing them to a past-the-end block index."""
+    c = chunk.shape[0]
+    g = n0 + jnp.arange(c)
+    copies = (width - 1) // B + 1
+    for k in range(copies):
+        j = g // B - k
+        slot = g - j * B
+        valid = (j >= 0) & (slot < width)
+        jj = jnp.where(valid, j, blocks.shape[0])
+        blocks = blocks.at[jj, slot].set(chunk, mode="drop")
+    return blocks
 
 
 @dataclasses.dataclass
@@ -79,6 +102,70 @@ class TimeSeriesStore:
             blocks = jax.device_put(blocks, sharding)
         return cls(blocks=blocks, spec=spec, mesh=mesh, axis=axis, halo_mode=halo_mode)
 
+    # -- growth --------------------------------------------------------------
+    def append_rows(self, chunk: jax.Array) -> None:
+        """Absorb ``chunk`` new samples at the end of the stored series with
+        ONE donated device scatter — no host-side re-placement, no re-read
+        of the existing blocks.
+
+        Each appended row lands in its owning block's core AND in the
+        right-halo slots of up to ``ceil(h_right / block_size)`` earlier
+        blocks, so the store stays exactly
+        ``from_series(concat(series, chunk), ...)`` (property-tested).  The
+        block array grows by whole zero blocks only when the appended rows
+        overflow the allocated capacity.  Single-host replicate-mode stores
+        with causal halos only (``h_left == 0``, no mesh): a mesh-sharded
+        store would need a resharding collective per growth step — callers
+        there fall back to carrying the chunk in their own partial state.
+        """
+        if self.mesh is not None:
+            raise ValueError("append_rows is single-host only (mesh stores "
+                             "re-place on the next full traversal)")
+        if self.halo_mode != "replicate":
+            raise ValueError("append_rows requires replicate-mode halos")
+        if self.spec.h_left != 0:
+            raise ValueError("append_rows requires causal halos (h_left == 0)")
+        if chunk.ndim == 1:
+            chunk = chunk[:, None]
+        c = chunk.shape[0]
+        if c == 0:
+            return
+        if chunk.shape[1] != self.blocks.shape[-1]:
+            raise ValueError(
+                f"chunk has d={chunk.shape[1]}, store has d={self.blocks.shape[-1]}"
+            )
+        s = self.spec
+        B = s.block_size
+        width = s.h_left + B + s.h_right
+        new_n = s.n + c
+        blocks = self.blocks
+        need_blocks = -(-new_n // B)
+        if need_blocks > blocks.shape[0]:
+            # Geometric growth: capacity at least doubles, so a steady
+            # append stream pays O(log n) full-store copies (amortized O(1)
+            # per row) and O(log n) retraces of the donated scatter —
+            # growing to the exact need would copy the whole store every
+            # block_size rows.  Over-allocated trailing blocks are all-zero
+            # and sliced off by the num_blocks-aware readers.
+            new_cap = max(need_blocks, 2 * blocks.shape[0])
+            blocks = jnp.concatenate(
+                [
+                    blocks,
+                    jnp.zeros(
+                        (new_cap - blocks.shape[0], width, blocks.shape[-1]),
+                        blocks.dtype,
+                    ),
+                ]
+            )
+        self.blocks = _scatter_append_rows(
+            blocks,
+            chunk.astype(blocks.dtype),
+            jnp.asarray(s.n, jnp.int32),
+            B=B,
+            width=width,
+        )
+        self.spec = dataclasses.replace(s, n=new_n)
+
     # -- views ---------------------------------------------------------------
     def padded_blocks_local(self, blocks_local: jax.Array) -> jax.Array:
         """Inside shard_map: return halo-padded blocks for local computation.
@@ -103,9 +190,12 @@ class TimeSeriesStore:
         return padded_flat[idx]
 
     def padded_blocks_single_host(self) -> jax.Array:
-        """Single-host padded view (for tests / examples without a mesh)."""
+        """Single-host padded view (for tests / examples without a mesh):
+        exactly ``spec.num_blocks`` blocks — any over-allocated growth
+        capacity from :meth:`append_rows` is sliced off."""
         if self.halo_mode == "replicate":
-            return self.blocks
+            k = self.spec.num_blocks
+            return self.blocks if self.blocks.shape[0] == k else self.blocks[:k]
         s = self.spec
         flat = self.blocks.reshape(-1, self.blocks.shape[-1])[: s.n]
         blocks, _ = make_overlapping_blocks(flat, s)
@@ -159,7 +249,7 @@ class TimeSeriesStore:
     def to_series(self) -> jax.Array:
         """Gather back the contiguous (n, d) series (small-data paths only)."""
         if self.halo_mode == "replicate":
-            return reconstruct(self.blocks, self.spec)
+            return reconstruct(self.padded_blocks_single_host(), self.spec)
         flat = self.blocks.reshape(-1, self.blocks.shape[-1])
         return flat[: self.spec.n]
 

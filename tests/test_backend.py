@@ -183,12 +183,54 @@ def test_fused_lagged_moments_window_validation():
             be.fused_lagged_moments(y, mask, 2, ())
 
 
-def test_segment_fft_power_shared_path():
-    segs = jax.random.normal(jax.random.PRNGKey(7), (5, 64, 2))
-    taper = jnp.hanning(64)
-    np.testing.assert_array_equal(
-        PALLAS.segment_fft_power(segs, taper), JNP.segment_fft_power(segs, taper)
+@pytest.mark.parametrize("detrend", [True, False])
+@pytest.mark.parametrize(
+    "S,L,d", [(5, 64, 2), (3, 33, 1), (9, 16, 5), (1, 256, 3), (17, 8, 2)]
+)
+def test_segment_fft_power_parity(S, L, d, detrend):
+    """The Pallas twiddle-matmul DFT ≡ the jnp rfft oracle across segment
+    counts (incl. non-block_s multiples), segment lengths (incl. odd L —
+    the F = L//2+1 one-sided grid), and channel counts."""
+    segs = jax.random.normal(jax.random.PRNGKey(7), (S, L, d))
+    taper = jnp.hanning(L)
+    ref = JNP.segment_fft_power(segs, taper, detrend)
+    out = PALLAS.segment_fft_power(segs, taper, detrend)
+    assert out.shape == ref.shape == (S, L // 2 + 1, d)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-4 * L)
+    # and against the standalone matmul oracle (tiling check, tighter tol)
+    from repro.kernels.segment_dft import segment_fft_power_reference
+
+    np.testing.assert_allclose(
+        out, segment_fft_power_reference(segs, taper, detrend),
+        rtol=1e-5, atol=1e-5 * L,
     )
+
+
+def test_segment_fft_power_large_L_twiddle_precision():
+    """The twiddle phase index t·f overflows f32 past L ≈ 4k; the exact
+    mod-L integer reduction keeps the matmul DFT tight at the sizes the
+    calibrated auto policy routes to it."""
+    L = 4096
+    segs = jax.random.normal(jax.random.PRNGKey(30), (2, L, 1))
+    taper = jnp.hanning(L)
+    ref = JNP.segment_fft_power(segs, taper)
+    out = PALLAS.segment_fft_power(segs, taper)
+    err = float(jnp.max(jnp.abs(out - ref))) / float(jnp.max(ref))
+    assert err < 5e-5, f"relative-to-peak error {err:.2e}"
+
+
+def test_segment_fft_power_bf16_and_validation():
+    segs = jax.random.normal(jax.random.PRNGKey(7), (4, 32, 2), jnp.bfloat16)
+    taper = jnp.hanning(32)
+    out = PALLAS.segment_fft_power(segs, taper)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(
+        out, JNP.segment_fft_power(segs, taper), rtol=5e-2, atol=1e-1 * 32
+    )
+    from repro.kernels.segment_dft import segment_fft_power
+
+    with pytest.raises(ValueError, match="taper"):
+        segment_fft_power(segs.astype(jnp.float32), jnp.hanning(16))
 
 
 # ------------------------------------------------- estimator-level parity --
@@ -219,6 +261,45 @@ def test_welch_cross_backend():
     fp, pp = welch_psd(x, 128, backend="pallas")
     np.testing.assert_allclose(pp, pj, atol=1e-4)
     np.testing.assert_array_equal(fj, fp)
+
+
+@pytest.mark.parametrize("d", [1, 3])
+@pytest.mark.parametrize(
+    "nperseg,overlap", [(64, 32), (64, 0), (32, 24), (50, 25)]
+)
+def test_welch_parity_across_segment_geometry(nperseg, overlap, d):
+    """Welch through the Pallas DFT kernel ≡ jnp rfft across segment
+    lengths L, steps (L − overlap), and channel counts — the estimator-level
+    pin of the new spectral primitive."""
+    x = _series(1200, d, seed=20)
+    fj, pj = welch_psd(x, nperseg, overlap=overlap, backend="jnp")
+    fp, pp = welch_psd(x, nperseg, overlap=overlap, backend="pallas")
+    np.testing.assert_array_equal(fj, fp)
+    np.testing.assert_allclose(pp, pj, rtol=1e-3, atol=1e-4)
+
+
+def test_fused_plan_welch_rides_pallas_spectral():
+    """A fused plan containing a Welch member stays backend-uniform: the
+    pallas-compiled plan (spectral member included) matches the jnp plan —
+    previously the spectral member silently ejected to jnp."""
+    from repro.core.plan import (
+        analyze,
+        autocovariance_request,
+        moments_request,
+        welch_request,
+    )
+
+    x = _series(900, 2, seed=21)
+    reqs = lambda: [
+        welch_request(64),
+        autocovariance_request(4),
+        moments_request(16),
+    ]
+    rj = analyze(x, reqs(), backend="jnp")
+    rp = analyze(x, reqs(), backend="pallas")
+    np.testing.assert_allclose(rp["welch"][1], rj["welch"][1], rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(rp["autocovariance"], rj["autocovariance"], atol=1e-4)
+    np.testing.assert_allclose(rp["moments"]["var"], rj["moments"]["var"], atol=1e-4)
 
 
 # ------------------------------------------------- streaming path parity --
@@ -280,6 +361,51 @@ def test_banded_predict_backend():
         banded_predict(diags, x, backend="jnp"),
         atol=1e-5,
     )
+
+
+def test_band_transpose_is_matrix_transpose():
+    from repro.kernels.banded_matvec.ops import band_transpose
+
+    from repro.core.estimators.spatial import dense_to_banded
+
+    # canonical storage: off-matrix slots zeroed (transpose zeroes them too)
+    diags = dense_to_banded(banded_to_dense(_series(37, 5, seed=22)), 2)
+    np.testing.assert_allclose(
+        banded_to_dense(band_transpose(diags)),
+        banded_to_dense(diags).T,
+        atol=1e-6,
+    )
+    # involution on canonical storage
+    np.testing.assert_allclose(
+        band_transpose(band_transpose(diags)), diags, atol=1e-6
+    )
+
+
+def test_banded_matvec_custom_vjp_matches_jnp_grad():
+    """The Pallas banded matvec is differentiable: both cotangents (w.r.t.
+    the diagonals and the vector) match jax.grad through the jnp gather
+    oracle — the satellite unblocking `fit_banded_ar` from the jnp pin."""
+    d, b, T = 48, 2, 6
+    diags = 0.1 * _series(d, 2 * b + 1, seed=23)
+    X = _series(T, d, seed=24)
+
+    def loss(be):
+        return lambda dg, xx: jnp.sum(jnp.sin(banded_predict(dg, xx, backend=be)) ** 2)
+
+    gj_d, gj_x = jax.grad(loss("jnp"), argnums=(0, 1))(diags, X)
+    gp_d, gp_x = jax.grad(loss("pallas"), argnums=(0, 1))(diags, X)
+    np.testing.assert_allclose(gp_d, gj_d, atol=1e-4)
+    np.testing.assert_allclose(gp_x, gj_x, atol=1e-4)
+
+
+def test_fit_banded_ar_runs_on_pallas_backend():
+    from repro.core.estimators.spatial import fit_banded_ar
+
+    xs = _series(200, 16, seed=25)
+    fj = fit_banded_ar(xs, 2, n_steps=5, backend="jnp")
+    fp = fit_banded_ar(xs, 2, n_steps=5, backend="pallas")
+    np.testing.assert_allclose(fp.diags, fj.diags, atol=1e-4)
+    np.testing.assert_allclose(fp.nll_trace, fj.nll_trace, rtol=1e-5)
 
 
 # ----------------------------------------------------------- regressions --

@@ -1,0 +1,150 @@
+"""Calibration-subsystem suite (`repro.core.calibrate`).
+
+Pins the PR 5 policy contract: the "auto" backend dispatches every
+primitive through per-primitive *measured* crossovers — default table when
+nothing is cached (off-accelerator: always jnp), cache round-trip, measured
+tables actually steering dispatch, and platform hygiene (a cache from
+another platform is never misapplied).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import calibrate as cal
+from repro.core.backend import (
+    AutoBackend,
+    JnpBackend,
+    PallasBackend,
+    get_backend,
+)
+
+pytestmark = pytest.mark.backend
+
+
+def _table(thresholds, platform=None, source="test"):
+    return cal.CalibrationTable(
+        platform or jax.default_backend(), dict(thresholds), source
+    )
+
+
+class _Recording(PallasBackend):
+    """Pallas backend that counts which primitives were dispatched to it."""
+
+    def __init__(self):
+        super().__init__()
+        self.calls = []
+
+    def __getattribute__(self, name):
+        attr = object.__getattribute__(self, name)
+        if name in cal.PRIMITIVES:
+            calls = object.__getattribute__(self, "calls")
+
+            def wrapped(*args, **kwargs):
+                calls.append(name)
+                return attr(*args, **kwargs)
+
+            return wrapped
+        return attr
+
+
+def _drive_all_primitives(be):
+    """One small call per registered primitive through ``be``."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (48, 2))
+    y = jax.random.normal(jax.random.PRNGKey(1), (52, 2))
+    mask = jnp.ones((48,), jnp.bool_)
+    segs = jax.random.normal(jax.random.PRNGKey(2), (3, 16, 2))
+    taper = jnp.hanning(16)
+    diags = jax.random.normal(jax.random.PRNGKey(3), (48, 5))
+    be.lagged_sums(x, 4)
+    be.masked_lagged_sums(y, mask, 4)
+    be.windowed_moments(x, 8)
+    be.segment_fft_power(segs, taper)
+    be.banded_matvec(diags, x[:, 0])
+    be.fused_lagged_moments(y, mask, 4, 8)
+
+
+def test_default_table_off_accelerator_never_picks_pallas():
+    table = cal.default_table("cpu")
+    assert set(table.thresholds) == set(cal.PRIMITIVES)
+    assert all(math.isinf(v) for v in table.thresholds.values())
+    # ...and a TPU default exists for every primitive (finite sane values)
+    tpu = cal.default_table("tpu")
+    assert set(tpu.thresholds) == set(cal.PRIMITIVES)
+    assert all(np.isfinite(v) and v > 0 for v in tpu.thresholds.values())
+
+
+def test_auto_dispatch_follows_injected_table():
+    rec = _Recording()
+    # threshold 0: everything crosses over → every primitive hits pallas
+    auto = AutoBackend(
+        pallas_backend=rec, table=_table({p: 0.0 for p in cal.PRIMITIVES})
+    )
+    _drive_all_primitives(auto)
+    assert sorted(set(rec.calls)) == sorted(cal.PRIMITIVES)
+    # threshold inf: nothing does
+    rec2 = _Recording()
+    auto2 = AutoBackend(
+        pallas_backend=rec2,
+        table=_table({p: math.inf for p in cal.PRIMITIVES}),
+    )
+    _drive_all_primitives(auto2)
+    assert rec2.calls == []
+
+
+def test_auto_per_primitive_thresholds_are_independent():
+    rec = _Recording()
+    thresholds = {p: math.inf for p in cal.PRIMITIVES}
+    thresholds["lagged_sums"] = 10.0  # only this one crosses over
+    auto = AutoBackend(pallas_backend=rec, table=_table(thresholds))
+    _drive_all_primitives(auto)
+    assert set(rec.calls) == {"lagged_sums"}
+    # parity while doing so
+    x = jax.random.normal(jax.random.PRNGKey(4), (64, 2))
+    np.testing.assert_allclose(
+        auto.lagged_sums(x, 3), JnpBackend().lagged_sums(x, 3), atol=1e-4
+    )
+
+
+def test_cache_roundtrip_and_platform_hygiene(tmp_path, monkeypatch):
+    path = tmp_path / "calib.json"
+    monkeypatch.setenv("REPRO_CALIB_CACHE", str(path))
+    table = _table(
+        {p: (512.0 if i % 2 else math.inf) for i, p in enumerate(cal.PRIMITIVES)},
+        source="measured",
+    )
+    cal.save_table(table)
+    loaded = cal.load_table()
+    assert loaded is not None and loaded.source == "cache"
+    assert loaded.thresholds == table.thresholds  # inf survives JSON (null)
+    # resolve_table prefers the cache over defaults and auto-measurement
+    resolved = cal.resolve_table()
+    assert resolved.thresholds == table.thresholds
+    # a cache written on another platform is ignored, never misapplied
+    alien = _table({p: 1.0 for p in cal.PRIMITIVES}, platform="tpu")
+    cal.save_table(alien)
+    assert cal.load_table() is None
+    assert cal.resolve_table(autocalibrate=False).source == "default"
+
+
+def test_calibrate_measures_all_primitives_and_persists(tmp_path, monkeypatch):
+    path = tmp_path / "calib.json"
+    monkeypatch.setenv("REPRO_CALIB_CACHE", str(path))
+    table = cal.calibrate(sizes=(32, 64), d=2, iters=1, warmup=0, save=True)
+    assert table.source == "measured"
+    assert set(table.thresholds) == set(cal.PRIMITIVES)
+    for v in table.thresholds.values():
+        assert math.isinf(v) or v in (32.0, 64.0)
+    assert path.exists()
+    # a fresh resolve (e.g. a new process's first "auto" dispatch) reads it
+    assert cal.resolve_table().thresholds == table.thresholds
+
+
+def test_registry_auto_has_no_hardcoded_row_constant():
+    """The acceptance pin: the registered "auto" policy carries a
+    calibration table (resolved lazily), not a min_rows constant."""
+    auto = get_backend("auto")
+    assert not hasattr(auto, "min_rows")
+    assert set(auto.table.thresholds) == set(cal.PRIMITIVES)

@@ -311,6 +311,175 @@ def test_new_requests_replan_on_array_and_raise_on_chunks():
         stream.collect()
 
 
+# -------------------------------------------------- donated append hot path
+
+
+@pytest.mark.parametrize("placement", ["array", "sharded"])
+def test_append_donates_carried_state(placement):
+    """.append folds through the engines' DONATED jitted updates: the old
+    carried PartialState's buffers are consumed in place (steady-state
+    ingest allocates nothing per chunk) — and the results still match."""
+    x = _series(n=1200, seed=8)
+    frame = _make_frame(placement, x)
+    _defer_all(frame)
+    frame.collect()
+    old_leaves = jax.tree_util.tree_leaves(frame._states)
+    frame.append(_series(n=128, seed=9))
+    assert all(leaf.is_deleted() for leaf in old_leaves)
+    _assert_matches(
+        frame.collect(), _eager(jnp.concatenate([x, _series(n=128, seed=9)]))
+    )
+
+
+@pytest.mark.parametrize("placement", ["array", "sharded"])
+def test_append_makes_no_device_to_host_copy(placement):
+    """The append ingest path is sync-free: no device→host transfer happens
+    while folding a chunk (the transfer guard raises on any) — including the
+    sharded placement's scatter into the device store."""
+    x = _series(n=1200, seed=10)
+    frame = _make_frame(placement, x)
+    _defer_all(frame)
+    frame.collect()
+    chunk = _series(n=128, seed=11)  # device-resident arrival
+    with jax.transfer_guard_device_to_host("disallow"):
+        for _ in range(3):
+            frame.append(chunk)
+    _assert_matches(
+        frame.collect(), _eager(jnp.concatenate([x, chunk, chunk, chunk]))
+    )
+
+
+def test_session_ingest_makes_no_device_to_host_copy():
+    """Multi-tenant ingest (FrameSession → RollingStatsService) stays
+    sync-free for host-side user ids in both growing and eviction mode —
+    the id validation and the eviction cursor live on the host."""
+    ids = np.asarray([0, 2], np.int32)
+    chunks = jax.random.normal(jax.random.PRNGKey(12), (2, 16, D))
+    for kwargs in ({}, {"window": 64, "num_buckets": 4}):
+        sess = FrameSession(d=D, num_users=3, **kwargs)
+        sess.autocovariance(4)
+        sess.ingest(ids, chunks)  # first ingest compiles the plan
+        with jax.transfer_guard_device_to_host("disallow"):
+            for _ in range(3):
+                sess.ingest(ids, chunks)
+        got = sess.query(0)["autocovariance"]
+        assert np.all(np.isfinite(np.asarray(got)))
+        # float-typed ids keep working (the old jnp validation coerced them)
+        sess.ingest(np.asarray([1.0]), chunks[:1])
+
+
+def test_collect_results_survive_donated_append():
+    """Regression: a generic member's finalize must hand out copies, never
+    the carried stat's own buffers — the donated append would delete a
+    result the caller is still holding ('Array has been deleted')."""
+    x = _series(n=800, seed=20)
+    w = 4
+
+    def ck(y, mask):
+        wins = jax.vmap(
+            lambda s: jax.lax.dynamic_slice_in_dim(y, s, w, axis=0)
+        )(jnp.arange(mask.shape[0]))
+        per = jnp.sum(wins[:, 0] * wins[:, -1], axis=-1)
+        return jnp.sum(jnp.where(mask, per, 0.0))
+
+    frame = SeriesFrame.from_array(x)
+    frame.map_reduce(ck, h_right=w - 1, name="g")
+    res = frame.collect()
+    before = float(res["g"])
+    frame.append(_series(n=64, seed=21))
+    assert float(np.asarray(res["g"])) == before  # still readable, unchanged
+    assert float(frame.collect()["g"]) != before
+
+
+def test_multi_group_sharded_append_after_donation():
+    """Regression: multi-group sharded plans build per-group states whose
+    leaves must be INDEPENDENT buffers — the donated append consumes group
+    states one by one, so a leaf shared across groups would be
+    read-after-delete (crashed with 'Array has been deleted')."""
+    x = _series(n=1500, seed=18)
+    w = 9
+
+    def ck(y, mask):  # non-offset-aware strided kernel → its own group
+        wins = jax.vmap(
+            lambda s: jax.lax.dynamic_slice_in_dim(y, s, w, axis=0)
+        )(jnp.arange(mask.shape[0]))
+        per = jnp.sum(wins[:, 0] * wins[:, -1], axis=-1)
+        return jnp.sum(jnp.where(mask, per, 0.0))
+
+    frame = SeriesFrame.from_sharded(x, block_size=BLOCK)
+    frame.autocovariance(4)
+    frame.map_reduce(ck, h_right=w - 1, stride=3, name="g")
+    assert frame.num_traversals == 2
+    frame.collect()
+    extra = _series(n=64, seed=19)
+    frame.append(extra)
+    frame.append(extra)
+    got = frame.collect()
+    full = np.asarray(jnp.concatenate([x, extra, extra]))
+    np.testing.assert_allclose(
+        got["autocovariance"],
+        autocovariance(jnp.asarray(full), 4, backend="jnp"),
+        rtol=1e-4, atol=1e-4,
+    )
+    want = sum(
+        float(np.dot(full[s], full[s + w - 1]))
+        for s in range(0, full.shape[0] - w + 1, 3)
+    )
+    np.testing.assert_allclose(float(got["g"]), want, rtol=1e-4)
+
+
+def test_sharded_append_scatters_into_store():
+    """Sharded-placement appends land IN the device store (no host-side
+    replay list), so a replan after appends re-reads a complete series."""
+    x = _series(n=1500, seed=13)
+    extra = [_series(n=97, seed=14), _series(n=256, seed=15)]
+    frame = SeriesFrame.from_sharded(x, block_size=BLOCK)
+    frame.autocovariance(8)
+    frame.collect()
+    for chunk in extra:
+        frame.append(chunk)
+    full = jnp.concatenate([x] + extra)
+    assert frame._pending == []
+    assert frame._store.spec.n == full.shape[0]
+    np.testing.assert_allclose(
+        frame.collect()["autocovariance"],
+        autocovariance(full, 8, backend="jnp"),
+        rtol=1e-5, atol=1e-4,
+    )
+    # store contents ≡ a fresh placement of the concatenated series
+    np.testing.assert_allclose(
+        np.asarray(frame._store.to_series()), np.asarray(full), atol=1e-6
+    )
+    # a replan (new request after appends) reads the scattered store
+    frame.moments(16)
+    got = frame.collect()
+    me = moment_engine(16, D, backend="jnp")
+    want = streaming_window_moments(me, me.from_chunk(full))
+    np.testing.assert_allclose(got["moments"]["mean"], want["mean"], rtol=1e-5)
+    np.testing.assert_allclose(got["moments"]["var"], want["var"], rtol=1e-4)
+
+
+def test_store_append_rows_equals_replacement():
+    """TimeSeriesStore.append_rows ≡ from_series on the concatenated data,
+    across halo widths (incl. h_right > block_size) and growth boundaries."""
+    x = _series(n=333, seed=16)
+    extra = _series(n=415, seed=17)
+    for B, hr in [(64, 7), (32, 50), (128, 0)]:
+        st = TimeSeriesStore.from_series(x, block_size=B, h_left=0, h_right=hr)
+        for lo in range(0, extra.shape[0], 111):
+            st.append_rows(extra[lo : lo + 111])
+        ref = TimeSeriesStore.from_series(
+            jnp.concatenate([x, extra]), block_size=B, h_left=0, h_right=hr
+        )
+        assert st.spec == ref.spec
+        # capacity may be over-allocated (geometric growth); the live view
+        # must match a fresh placement exactly
+        np.testing.assert_array_equal(
+            np.asarray(st.padded_blocks_single_host()), np.asarray(ref.blocks)
+        )
+        assert st.blocks.shape[0] >= ref.blocks.shape[0]
+
+
 # ------------------------------------------------------------ generic members
 
 
