@@ -1,0 +1,153 @@
+"""Async serving gateway under a ≥1000-tenant workload (PR 6).
+
+Drives `repro.serving.gateway.StatsGateway` with 1024 simulated users all
+submitting concurrently through the asyncio front door, and answers:
+
+  * what does ONE coalescing tick cost when every tenant ingests a chunk
+    (1024 concurrent clients → one donated scatter program);
+  * what does ONE tick cost when every tenant queries (one gather/⊕-fold
+    plus one jit-cached vmapped fused finalize);
+  * the same for a mixed tick (everyone ingests AND queries);
+  * the client-observed p50/p99 submit→resolve latencies the gateway's
+    own metrics surface reports under that load.
+
+Emits ``BENCH_gateway.json`` at the repo root (via `benchmarks.run`) so
+the serving-layer perf trajectory populates per commit —
+`benchmarks.check_regression` diffs it against the blessed baseline.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+
+from repro.core.frame import FrameSession
+from repro.serving.gateway import StatsGateway
+
+from .common import row, write_bench_json
+
+N_USERS = 1024          # ≥1000 simulated tenants, all active per tick
+D = 4
+CHUNK = 64              # samples per ingest chunk
+H, MOM_W = 8, 32        # deferred statistics: autocovariance(H), moments(W)
+TICKS = 9               # timed ticks per phase (median reported)
+
+
+def _session() -> FrameSession:
+    sess = FrameSession(d=D, num_users=N_USERS, backend="jnp")
+    sess.autocovariance(H)
+    sess.moments(MOM_W)
+    return sess
+
+
+async def _drive() -> tuple:
+    gw = StatsGateway(_session())
+    rng = np.random.RandomState(0)
+    chunks = rng.randn(N_USERS, CHUNK, D).astype(np.float32)
+
+    async def ingest_tick(offset: float) -> float:
+        futs = [gw.submit_ingest(u, chunks[u] + offset) for u in range(N_USERS)]
+        t0 = time.perf_counter()
+        await gw.tick()
+        dt = time.perf_counter() - t0
+        await asyncio.gather(*futs)
+        return dt
+
+    async def query_tick() -> float:
+        futs = [gw.submit_query(u) for u in range(N_USERS)]
+        t0 = time.perf_counter()
+        await gw.tick()
+        dt = time.perf_counter() - t0
+        await asyncio.gather(*futs)
+        return dt
+
+    async def mixed_tick(offset: float) -> float:
+        ifuts = [gw.submit_ingest(u, chunks[u] + offset) for u in range(N_USERS)]
+        qfuts = [gw.submit_query(u) for u in range(N_USERS)]
+        t0 = time.perf_counter()
+        await gw.tick()
+        dt = time.perf_counter() - t0
+        await asyncio.gather(*ifuts, *qfuts)
+        return dt
+
+    # warm-up: traces the scatter + finalize programs once; drop those
+    # compile-dominated samples from the latency windows so the reported
+    # percentiles are steady-state serving, not first-trace waits
+    await ingest_tick(0.0)
+    await query_tick()
+    gw._lat_ingest.clear()
+    gw._lat_query.clear()
+
+    ing = [await ingest_tick(1.0 + i) for i in range(TICKS)]
+    qry = [await query_tick() for _ in range(TICKS)]
+    mixed = [await mixed_tick(100.0 + i) for i in range(TICKS)]
+    metrics = gw.metrics()
+    await gw.stop()
+    return ing, qry, mixed, metrics
+
+
+def run() -> None:
+    ing, qry, mixed, metrics = asyncio.run(_drive())
+    results = []
+
+    def bench(name: str, us: float, derived: str) -> None:
+        results.append({"name": name, "us_per_call": us, "derived": derived})
+        row(f"gateway_{name}", us, derived)
+
+    # min over the timed ticks: the per-tick work is identical, so min is
+    # the real cost and the spread is GC / scheduler noise — gating the
+    # median flaked ~1.5× run-to-run on shared hardware
+    us_ing = min(ing) * 1e6
+    bench(
+        "ingest_tick", us_ing,
+        f"users={N_USERS};chunk={CHUNK};programs=1;"
+        f"users_per_s={N_USERS / (us_ing / 1e6):.0f}",
+    )
+    us_qry = min(qry) * 1e6
+    bench(
+        "query_tick", us_qry,
+        f"users={N_USERS};programs=1;"
+        f"queries_per_s={N_USERS / (us_qry / 1e6):.0f}",
+    )
+    us_mixed = min(mixed) * 1e6
+    bench(
+        "mixed_tick", us_mixed,
+        f"users={N_USERS};chunk={CHUNK};programs=2;"
+        f"requests_per_s={2 * N_USERS / (us_mixed / 1e6):.0f}",
+    )
+    # client-observed submit→resolve latencies (include the admission /
+    # python fan-in overhead the tick timers above exclude).  Reported —
+    # CSV rows + payload — but not gated results entries: percentiles of
+    # a Python-side distribution where one stalled tick shifts ~1k
+    # samples are too noisy for a 1.5× regression gate.
+    latency = {}
+    for kind in ("ingest", "query"):
+        p50, p99 = metrics[kind]["p50_us"], metrics[kind]["p99_us"]
+        latency[kind] = {"p50_us": p50, "p99_us": p99}
+        row(f"gateway_{kind}_latency_p50", p50,
+            f"users={N_USERS};client-observed;ungated")
+        row(f"gateway_{kind}_latency_p99", p99,
+            f"users={N_USERS};client-observed;ungated")
+
+    assert metrics["ingest"]["programs"] == TICKS * 2 + 1  # coalescing held
+    assert metrics["query"]["programs"] == TICKS * 2 + 1
+
+    write_bench_json(
+        "BENCH_gateway.json",
+        {
+            "workload": {
+                "users": N_USERS, "d": D, "chunk": CHUNK,
+                "max_lag": H, "moments_window": MOM_W,
+                "timed_ticks_per_phase": TICKS,
+            },
+            "batch_occupancy": metrics["batch_occupancy"],
+            "client_latency_us": latency,
+            "straggler_ticks": metrics["straggler_ticks"],
+            "results": results,
+        },
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -2,10 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmark contract).
 ``bench_backends`` / ``bench_spectral`` / ``bench_fused`` /
-``bench_frame`` / ``bench_streaming`` additionally emit
-``BENCH_{backends,spectral,fused,frame,streaming}.json`` at the repo root
-so the kernel-backend, spectral-primitive, fused-plan, session-API, and
-streaming-ingest perf trajectories populate per commit;
+``bench_frame`` / ``bench_streaming`` / ``bench_gateway`` additionally
+emit ``BENCH_{backends,spectral,fused,frame,streaming,gateway}.json`` at
+the repo root so the kernel-backend, spectral-primitive, fused-plan,
+session-API, streaming-ingest, and serving-gateway perf trajectories
+populate per commit;
 ``python -m benchmarks.check_regression`` diffs them against the committed
 baselines and fails on >1.5× slowdowns (re-bless with
 ``--update-baselines`` after an intentional trade-off).
@@ -22,6 +23,7 @@ MODULES = [
     "bench_fused",          # fused N-statistic plans → BENCH_fused.json
     "bench_frame",          # SeriesFrame session API → BENCH_frame.json
     "bench_streaming",      # streaming monoid → BENCH_streaming.json
+    "bench_gateway",        # async serving gateway → BENCH_gateway.json
     "bench_overlap_scaling",  # paper Fig. 4
     "bench_mle",            # paper §5 / §7.2 Z-estimators
     "bench_spatial",        # paper §6 banded high-d

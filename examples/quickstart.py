@@ -115,6 +115,25 @@ def main():
     for prim, thr in shown.items():
         print(f"  {prim:<22s} -> pallas at {thr} rows")
 
+    # 9. Serving: the same math behind a concurrency front door.  A
+    #    `FrameSession` holds per-tenant partials as ONE stacked pytree;
+    #    `repro.serving.gateway.StatsGateway` serves it to concurrent
+    #    asyncio clients — each tick coalesces every admitted ingest into
+    #    one donated scatter and every query into one vmapped fused
+    #    finalize, with token-bucket backpressure, p50/p99 metrics, and
+    #    periodic snapshots (a killed gateway restarts from the last
+    #    snapshot serving identical answers, zero re-ingest):
+    #
+    #        from repro.serving import GatewayConfig, StatsGateway
+    #        session = FrameSession(d=d, num_users=10_000)
+    #        session.autocovariance(6); session.moments(4096)
+    #        gw = StatsGateway(session, GatewayConfig(checkpoint_dir=...))
+    #        gw.start()                         # background coalescing ticks
+    #        await gw.ingest(tenant, chunk)
+    #        stats = await gw.query(tenant)
+    #
+    print("serving front door: PYTHONPATH=src python examples/gateway_demo.py")
+
 
 if __name__ == "__main__":
     main()

@@ -1,1 +1,7 @@
-from .manager import CheckpointManager, save_pytree, restore_pytree
+from .manager import (
+    CheckpointManager,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+    sweep_tmp_dirs,
+)

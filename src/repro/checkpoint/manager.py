@@ -1,8 +1,12 @@
 """Fault-tolerant checkpointing (no orbax in this environment).
 
 Guarantees:
-  * atomicity — write to ``<dir>/tmp.<step>`` then os.rename (POSIX-atomic);
-    a crash mid-save never corrupts the latest checkpoint;
+  * atomicity — write to a unique ``<dir>/tmp.<step>.*`` dir, then swap it
+    into place with renames only (never delete-then-rename): at every
+    instant a complete copy of the step exists on disk, and a crash
+    mid-save never corrupts — or loses — an existing checkpoint.  Manager
+    start sweeps crash debris (`sweep_tmp_dirs`), recovering any finished
+    save that died between the renames;
   * async — saves run on a daemon thread off the training critical path
     (the step only pays for the host transfer of its arrays);
   * retention — keep the newest K checkpoints;
@@ -20,6 +24,7 @@ import json
 import os
 import queue
 import shutil
+import tempfile
 import threading
 import time
 from typing import Any, Dict, Optional
@@ -40,18 +45,65 @@ def _flatten(tree: Any) -> Dict[str, np.ndarray]:
 def save_pytree(tree: Any, directory: str, step: int) -> str:
     """Synchronous atomic save.  Returns the final checkpoint path."""
     os.makedirs(directory, exist_ok=True)
-    tmp = os.path.join(directory, f"tmp.{step}")
+    # Unique tmp name: two writers of the same step never collide, and a
+    # crash mid-write leaves an identifiable orphan for sweep_tmp_dirs.
+    tmp = tempfile.mkdtemp(prefix=f"tmp.{step}.", dir=directory)
     final = os.path.join(directory, f"step_{step:010d}")
-    os.makedirs(tmp, exist_ok=True)
     flat = _flatten(tree)
     np.savez(os.path.join(tmp, "arrays.npz"), **flat)
     treedef = jax.tree.structure(tree)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump({"step": step, "treedef": str(treedef), "keys": sorted(flat)}, f)
+    # Swap, never delete-then-rename: the old `shutil.rmtree(final)` +
+    # `os.rename` pair lost the existing checkpoint for this step if the
+    # process died between the two calls.  Move the old dir aside under a
+    # unique trash name first — at every instant there is a complete copy
+    # of the step on disk (the new tmp dir is fully written by now, and
+    # sweep_tmp_dirs recovers a complete orphan whose final is missing).
+    trash = None
     if os.path.exists(final):
-        shutil.rmtree(final)
+        trash = tempfile.mkdtemp(prefix=f"trash.{step}.", dir=directory)
+        os.rmdir(trash)
+        os.rename(final, trash)
     os.rename(tmp, final)
+    if trash is not None:
+        shutil.rmtree(trash, ignore_errors=True)
     return final
+
+
+def sweep_tmp_dirs(directory: str) -> list:
+    """Clean the crash window's debris: ``tmp.*`` / ``trash.*`` dirs.
+
+    A save that died mid-write leaks its unique tmp dir forever (they used
+    to accumulate and eat disk across restarts).  A complete tmp dir whose
+    ``step_*`` target is missing is a finished save that crashed between
+    the two renames — recover it into place instead of discarding the only
+    surviving copy of that step.  Returns the recovered checkpoint paths.
+    """
+    if not os.path.isdir(directory):
+        return []
+    recovered = []
+    for name in sorted(os.listdir(directory)):
+        if not (name.startswith("tmp.") or name.startswith("trash.")):
+            continue
+        path = os.path.join(directory, name)
+        if not os.path.isdir(path):
+            continue
+        step = None
+        if name.startswith("tmp."):
+            try:
+                with open(os.path.join(path, "manifest.json")) as f:
+                    step = int(json.load(f)["step"])
+            except (OSError, ValueError, KeyError, json.JSONDecodeError):
+                step = None  # incomplete write: plain debris
+        if step is not None:
+            final = os.path.join(directory, f"step_{step:010d}")
+            if not os.path.exists(final):
+                os.rename(path, final)
+                recovered.append(final)
+                continue
+        shutil.rmtree(path, ignore_errors=True)
+    return recovered
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -82,7 +134,21 @@ def restore_pytree(
     for p, leaf in flat_paths:
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
         arr = data[key]
-        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        if tuple(arr.shape) != tuple(jnp.shape(leaf)):
+            # dtype is coerced below, but a silent shape change would only
+            # blow up (or worse, broadcast) at first use, far from here
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(arr.shape)} but "
+                f"the restore template expects {tuple(jnp.shape(leaf))} "
+                f"(step {step} under {directory})"
+            )
+        if isinstance(leaf, np.ndarray):
+            # host-side template leaf (e.g. a serving cursor): restore
+            # host-side — device_put'ing it would both x64-truncate and
+            # force a pointless transfer
+            leaves.append(np.asarray(arr, dtype=leaf.dtype))
+        else:
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
     restored = jax.tree.unflatten(jax.tree.structure(template), leaves)
     if shardings is not None:
         restored = jax.tree.map(
@@ -102,6 +168,9 @@ class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
+        # a previous process that crashed mid-save left tmp/trash debris
+        # (and possibly a complete-but-unrenamed checkpoint) behind
+        self.recovered = sweep_tmp_dirs(directory)
         self._q: "queue.Queue" = queue.Queue()
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
@@ -143,9 +212,14 @@ class CheckpointManager:
             raise self._errors[0]
 
     def close(self) -> None:
-        self.flush()
-        self._q.put(None)
-        self._q.join()
+        # the sentinel must reach the worker even when flush() raises a
+        # deferred save error — otherwise the daemon thread leaks
+        try:
+            self.flush()
+        finally:
+            self._q.put(None)
+            self._q.join()
+            self._worker.join(timeout=5.0)
 
     def latest_step(self) -> Optional[int]:
         return latest_step(self.directory)

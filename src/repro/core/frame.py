@@ -744,6 +744,14 @@ class FrameSession(_DeferredRequests):
             )
             for g in self._plan.groups
         ]
+        # jit caches one trace per requested batch size, so a steady read
+        # load (the gateway's per-tick coalesced query) re-traces nothing:
+        # the whole multi-user read is the services' gather/⊕-fold programs
+        # plus this ONE vmapped fused-finalize program.
+        self._finalize_batch = jax.jit(
+            jax.vmap(lambda states: self._plan.finalize(tuple(states),
+                                                        cache=False))
+        )
 
     # -- write path ----------------------------------------------------------
     def ingest(
@@ -772,13 +780,43 @@ class FrameSession(_DeferredRequests):
 
     def query_batch(self, user_ids) -> dict:
         """Vmapped multi-user read: one gather + one compiled ⊕-fold per
-        plan group, then the fused finalize vmapped over users — results
+        plan group, then ONE jit-cached vmapped fused finalize — results
         have a leading ``len(user_ids)`` axis."""
         self._ensure_plan()
-        merged = [svc.partials_batch(user_ids) for svc in self._services]
-        return jax.vmap(
-            lambda *states: self._plan.finalize(tuple(states), cache=False)
-        )(*merged)
+        merged = tuple(svc.partials_batch(user_ids) for svc in self._services)
+        return self._finalize_batch(merged)
+
+    # -- durability ----------------------------------------------------------
+    def export_state(self) -> dict:
+        """Host snapshot of everything the session serves from: one entry
+        per plan group, each the stacked lane pytree + eviction cursor of
+        its `RollingStatsService` (host copies — safe across later donating
+        ingests).  The snapshot round-trips through
+        `repro.checkpoint.manager.save_pytree` / ``restore_pytree`` with
+        this same dict as the restore template; :meth:`import_state` on a
+        freshly built session with the same requests/config then serves
+        answers identical to the exporter's, with zero re-ingest.  This is
+        the durability hook `repro.serving.gateway.StatsGateway` snapshots
+        through."""
+        self._ensure_plan()
+        return {
+            f"group_{i}": svc.export_state()
+            for i, svc in enumerate(self._services)
+        }
+
+    def import_state(self, state: dict) -> None:
+        """Install an :meth:`export_state` snapshot (same requests, same
+        num_users/num_shards/window/backend config)."""
+        self._ensure_plan()
+        keys = {f"group_{i}" for i in range(len(self._services))}
+        if set(state) != keys:
+            raise ValueError(
+                f"snapshot has groups {sorted(state)} but this session's "
+                f"plan compiled {sorted(keys)} — the deferred requests must "
+                "match the exporter's"
+            )
+        for i, svc in enumerate(self._services):
+            svc.import_state(state[f"group_{i}"])
 
     def lengths(self) -> jax.Array:
         """(num_users,) samples ingested per user (total, incl. evicted)."""

@@ -110,7 +110,12 @@ class FaultTolerantLoop:
         self.monitor = StragglerMonitor(threshold=straggler_threshold)
         self._last_state: Any = None
         self._last_step: int = -1
-        self._t_prev = time.monotonic()
+        self._last_saved_step: Optional[int] = None
+        # Step timing starts at the first after_step: anchoring it here
+        # would bill construction + restore wall time (checkpoint reads,
+        # device_put, first-step compile waits...) to step 0 and poison
+        # the straggler median for the whole window.
+        self._t_prev: Optional[float] = None
         self.preempted = False
         if install_signal_handler:
             signal.signal(signal.SIGTERM, self._on_preempt)
@@ -128,11 +133,13 @@ class FaultTolerantLoop:
     # -- per-step ---------------------------------------------------------
     def after_step(self, step: int, state: Any) -> None:
         now = time.monotonic()
-        self.monitor.record(step, now - self._t_prev)
+        if self._t_prev is not None:
+            self.monitor.record(step, now - self._t_prev)
         self._t_prev = now
         self._last_state, self._last_step = state, step
         if self.every and (step + 1) % self.every == 0:
             self.manager.save(state, step)
+            self._last_saved_step = step
         if self.preempted:
             self.checkpoint_now()
             raise SystemExit(f"preempted at step {step}; checkpoint flushed")
@@ -142,8 +149,12 @@ class FaultTolerantLoop:
         self.preempted = True
 
     def checkpoint_now(self) -> None:
-        if self._last_state is not None:
+        # skip the re-save when the periodic path already wrote this step —
+        # the duplicate serialized the same state twice on every preemption
+        # that landed on a checkpoint boundary
+        if self._last_state is not None and self._last_step != self._last_saved_step:
             self.manager.save(self._last_state, self._last_step)
+            self._last_saved_step = self._last_step
         self.manager.flush()
 
     def close(self) -> None:

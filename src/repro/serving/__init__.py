@@ -1,2 +1,10 @@
 from .engine import ServeEngine, GenerationResult
+from .gateway import (
+    GatewayConfig,
+    GatewayRejected,
+    QueueFull,
+    RateClass,
+    RateLimited,
+    StatsGateway,
+)
 from .rolling import RollingStatsService

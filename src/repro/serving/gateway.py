@@ -1,0 +1,515 @@
+"""Async serving gateway over `repro.core.frame.FrameSession`.
+
+The paper's thesis — weak-memory statistics are mergeable partials — is
+exactly what makes them *servable*: per-tenant state is a fixed-size
+stacked pytree, ingest is a scatter-⊕, queries are a gather-⊕-finalize.
+What was missing is a concurrency front door.  This module is it:
+
+  * clients call ``await gateway.ingest(tenant, chunk)`` and
+    ``await gateway.query(tenant)`` concurrently, from any number of
+    asyncio tasks;
+  * the gateway **coalesces per tick**: every admitted ingest in a tick is
+    stacked into one arrival batch and absorbed by ONE donated
+    scatter-ingest program, every admitted query rides ONE gather/⊕-fold
+    plus ONE jit-cached vmapped fused finalize — the hot loop stays a
+    single compiled device program per tick (per equal-chunk-length run /
+    batch size) regardless of how many clients are connected.  Same-tenant
+    ingests in one tick are ordered: the later ones carry over to the next
+    tick, so the scatter never sees a duplicate id;
+  * **admission control**: bounded queues (reject, don't buffer unbounded)
+    and per-tenant token-bucket rate classes refilled per tick — an
+    over-rate tenant is rejected at submit with :class:`RateLimited`
+    without stalling anyone else;
+  * **metrics**: p50/p99 ingest/query latency, queue depths, per-program
+    batch occupancy, rejected-request counters, tick-time straggler flags;
+  * **durability**: every ``snapshot_every`` ticks the stacked session
+    state (host copies — safe across donating ingests) is saved through
+    `repro.checkpoint.manager.CheckpointManager`, and a restarted gateway
+    resumes via `repro.runtime.fault.FaultTolerantLoop.restore_or`: a
+    killed process comes back serving identical answers with zero
+    re-ingest of history.
+
+The gateway is transport-agnostic: `examples/gateway_demo.py` drives it
+in-process; an HTTP/gRPC front end would call the same ``submit_*``
+surface from its handlers.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import math
+import time
+from typing import Any, Deque, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..core.frame import FrameSession
+
+__all__ = [
+    "GatewayConfig",
+    "GatewayRejected",
+    "QueueFull",
+    "RateClass",
+    "RateLimited",
+    "StatsGateway",
+]
+
+
+class GatewayRejected(RuntimeError):
+    """Base class for admission-control rejections (backpressure)."""
+
+
+class QueueFull(GatewayRejected):
+    """The bounded request queue is at capacity — shed load upstream."""
+
+
+class RateLimited(GatewayRejected):
+    """The tenant's rate class has no tokens left this tick."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RateClass:
+    """Token-bucket admission limits, refilled once per tick.
+
+    ``inf`` rates disable the limit.  ``burst`` caps the bucket (defaults
+    to 2× the per-tick rate, min 1), so an idle tenant can catch up a
+    little but can never dump an unbounded backlog into one tick.
+    """
+
+    name: str = "default"
+    ingest_per_tick: float = math.inf
+    query_per_tick: float = math.inf
+    burst: Optional[float] = None
+
+    def bucket_cap(self, rate: float) -> float:
+        if self.burst is not None:
+            return self.burst
+        if math.isinf(rate):
+            return math.inf
+        return max(2.0 * rate, 1.0)
+
+
+@dataclasses.dataclass
+class GatewayConfig:
+    tick_interval: float = 0.005           # serve_forever pacing (seconds)
+    max_pending_ingest: int = 4096         # bounded queues: reject beyond
+    max_pending_query: int = 4096
+    snapshot_every: int = 0                # ticks between snapshots (0=off)
+    checkpoint_dir: Optional[str] = None   # durability off when None
+    keep_checkpoints: int = 3
+    rate_classes: Dict[str, RateClass] = dataclasses.field(
+        default_factory=lambda: {"default": RateClass()}
+    )
+    default_class: str = "default"
+    latency_window: int = 16384            # latency samples kept per kind
+    straggler_threshold: float = 4.0       # tick-time straggler flagging
+
+
+def _event_loop() -> asyncio.AbstractEventLoop:
+    try:
+        return asyncio.get_running_loop()
+    except RuntimeError:  # submit from sync setup code, pre-loop
+        return asyncio.get_event_loop_policy().get_event_loop()
+
+
+@dataclasses.dataclass
+class _Pending:
+    tenant: int
+    future: asyncio.Future
+    t_submit: float
+    chunk: Optional[np.ndarray] = None     # ingest only
+
+
+class _TokenBuckets:
+    """Per-tenant token buckets with lazy per-tick refill."""
+
+    def __init__(self, rate_of, cap_of):
+        self._rate_of = rate_of            # tenant -> tokens per tick
+        self._cap_of = cap_of              # tenant -> bucket cap
+        self._state: Dict[int, tuple] = {}  # tenant -> (tokens, tick)
+
+    def admit(self, tenant: int, tick: int) -> bool:
+        rate = self._rate_of(tenant)
+        if math.isinf(rate):
+            return True
+        tokens, last = self._state.get(tenant, (self._cap_of(tenant), tick))
+        tokens = min(self._cap_of(tenant), tokens + rate * (tick - last))
+        if tokens < 1.0:
+            self._state[tenant] = (tokens, tick)
+            return False
+        self._state[tenant] = (tokens - 1.0, tick)
+        return True
+
+
+class StatsGateway:
+    """Asyncio request engine serving one multi-tenant `FrameSession`.
+
+    Args:
+      session: the FrameSession to serve.  Its deferred requests must be
+        declared before the gateway is constructed (the durability restore
+        compiles the plan).
+      config: see :class:`GatewayConfig`.
+
+    Drive it either with :meth:`serve_forever` (background ticking at
+    ``tick_interval``) or by awaiting :meth:`tick` directly (deterministic
+    — what the tests and benchmark do).
+    """
+
+    def __init__(self, session: FrameSession, config: Optional[GatewayConfig] = None):
+        self.session = session
+        self.config = config or GatewayConfig()
+        cfg = self.config
+        if cfg.default_class not in cfg.rate_classes:
+            raise ValueError(
+                f"default_class {cfg.default_class!r} is not one of the "
+                f"configured rate classes {sorted(cfg.rate_classes)}"
+            )
+        self._tenant_class: Dict[int, str] = {}
+        self._ingest_buckets = _TokenBuckets(
+            lambda t: self._class_of(t).ingest_per_tick,
+            lambda t: self._class_of(t).bucket_cap(
+                self._class_of(t).ingest_per_tick),
+        )
+        self._query_buckets = _TokenBuckets(
+            lambda t: self._class_of(t).query_per_tick,
+            lambda t: self._class_of(t).bucket_cap(
+                self._class_of(t).query_per_tick),
+        )
+        self._ingest_q: Deque[_Pending] = collections.deque()
+        self._query_q: Deque[_Pending] = collections.deque()
+        self._tick_lock = asyncio.Lock()
+        self._serve_task: Optional[asyncio.Task] = None
+        self._closed = False
+
+        # -- metrics ---------------------------------------------------------
+        self._lat_ingest: Deque[float] = collections.deque(
+            maxlen=cfg.latency_window)
+        self._lat_query: Deque[float] = collections.deque(
+            maxlen=cfg.latency_window)
+        self._occ_ingest: Deque[int] = collections.deque(maxlen=4096)
+        self._occ_query: Deque[int] = collections.deque(maxlen=4096)
+        self.counters = collections.Counter()
+
+        # -- durability ------------------------------------------------------
+        self._loop_rt = None
+        self._tick = 0
+        self._dirty = False
+        if cfg.checkpoint_dir is not None:
+            from ..runtime.fault import FaultTolerantLoop
+
+            # every=0: the gateway owns the snapshot cadence (a fresh host
+            # export must be taken at exactly the saving tick); the loop
+            # contributes restore-resume, the async manager, and the
+            # straggler monitor.
+            self._loop_rt = FaultTolerantLoop(
+                cfg.checkpoint_dir,
+                every=0,
+                keep=cfg.keep_checkpoints,
+                straggler_threshold=cfg.straggler_threshold,
+            )
+            template = session.export_state()
+            state, start_tick = self._loop_rt.restore_or(template)
+            if start_tick > 0:
+                session.import_state(state)
+                self.counters["restored_from_snapshot"] += 1
+            self._tick = start_tick
+            self.monitor = self._loop_rt.monitor
+        else:
+            from ..runtime.fault import StragglerMonitor
+
+            self.monitor = StragglerMonitor(threshold=cfg.straggler_threshold)
+
+    # ------------------------------------------------------------ admission
+    def _class_of(self, tenant: int) -> RateClass:
+        name = self._tenant_class.get(tenant, self.config.default_class)
+        return self.config.rate_classes[name]
+
+    def set_tenant_class(self, tenant: int, class_name: str) -> None:
+        if class_name not in self.config.rate_classes:
+            raise ValueError(
+                f"unknown rate class {class_name!r}; configured: "
+                f"{sorted(self.config.rate_classes)}"
+            )
+        self._tenant_class[int(tenant)] = class_name
+
+    def _check_tenant(self, tenant: int) -> int:
+        tenant = int(tenant)
+        if not 0 <= tenant < self.session.num_users:
+            raise ValueError(
+                f"tenant {tenant} out of range [0, {self.session.num_users})"
+            )
+        return tenant
+
+    def submit_ingest(self, tenant: int, chunk) -> asyncio.Future:
+        """Admit one ingest request; resolves after the absorbing tick.
+
+        Raises :class:`QueueFull` / :class:`RateLimited` immediately when
+        admission fails (the rejection is the backpressure signal).
+        """
+        if self._closed:
+            raise RuntimeError("gateway is closed")
+        tenant = self._check_tenant(tenant)
+        chunk = np.asarray(chunk)
+        if chunk.ndim == 1:
+            chunk = chunk[:, None]
+        if chunk.ndim != 2 or chunk.shape[1] != self.session.d:
+            raise ValueError(
+                f"chunk must be (c, {self.session.d}), got {chunk.shape}"
+            )
+        if len(self._ingest_q) >= self.config.max_pending_ingest:
+            self.counters["rejected_ingest_queue_full"] += 1
+            raise QueueFull(
+                f"ingest queue at capacity ({self.config.max_pending_ingest})"
+            )
+        if not self._ingest_buckets.admit(tenant, self._tick):
+            self.counters["rejected_ingest_rate"] += 1
+            raise RateLimited(
+                f"tenant {tenant} over its "
+                f"{self._tenant_class.get(tenant, self.config.default_class)!r}"
+                " ingest rate"
+            )
+        fut = _event_loop().create_future()
+        self._ingest_q.append(
+            _Pending(tenant, fut, time.perf_counter(), chunk=chunk)
+        )
+        return fut
+
+    def submit_query(self, tenant: int) -> asyncio.Future:
+        """Admit one query request; resolves to ``{request_name: result}``
+        (this tenant's slice of the tick's batched read)."""
+        if self._closed:
+            raise RuntimeError("gateway is closed")
+        tenant = self._check_tenant(tenant)
+        if len(self._query_q) >= self.config.max_pending_query:
+            self.counters["rejected_query_queue_full"] += 1
+            raise QueueFull(
+                f"query queue at capacity ({self.config.max_pending_query})"
+            )
+        if not self._query_buckets.admit(tenant, self._tick):
+            self.counters["rejected_query_rate"] += 1
+            raise RateLimited(
+                f"tenant {tenant} over its "
+                f"{self._tenant_class.get(tenant, self.config.default_class)!r}"
+                " query rate"
+            )
+        fut = _event_loop().create_future()
+        self._query_q.append(_Pending(tenant, fut, time.perf_counter()))
+        return fut
+
+    async def ingest(self, tenant: int, chunk) -> int:
+        """Coroutine front door: admitted, then resolved at the next tick.
+        Returns the tick index that absorbed the chunk."""
+        return await self.submit_ingest(tenant, chunk)
+
+    async def query(self, tenant: int) -> dict:
+        """Coroutine front door: this tenant's deferred statistics as of
+        the resolving tick."""
+        return await self.submit_query(tenant)
+
+    # ------------------------------------------------------------- the tick
+    async def tick(self) -> dict:
+        """Run one coalescing round: drain the queues, execute the batched
+        device programs, resolve futures, maybe snapshot.  Returns per-tick
+        stats (mostly for the benchmark's narrator)."""
+        async with self._tick_lock:
+            t_start = time.perf_counter()
+            n_ing = self._run_ingests()
+            n_qry = self._run_queries()
+            tick = self._tick
+            self._tick += 1
+            self._maybe_snapshot(tick)
+            dt = time.perf_counter() - t_start
+            if n_ing or n_qry:
+                self.monitor.record(tick, dt)
+            self.counters["ticks"] += 1
+        # hand control back so awaiting clients observe their futures
+        await asyncio.sleep(0)
+        return {"tick": tick, "ingests": n_ing, "queries": n_qry,
+                "seconds": dt}
+
+    def _run_ingests(self) -> int:
+        """Coalesce the admitted ingest backlog into the fewest possible
+        scatter programs: one per run of equal chunk lengths, duplicate
+        tenants deferred to the next tick (a scatter must see distinct
+        ids, and a tenant's chunks must land in arrival order)."""
+        pending = list(self._ingest_q)
+        self._ingest_q.clear()
+        carry: list = []
+        seen: set = set()
+        groups: Dict[int, list] = {}
+        for req in pending:
+            if req.tenant in seen:
+                carry.append(req)       # next tick: ordering + distinctness
+                continue
+            seen.add(req.tenant)
+            groups.setdefault(req.chunk.shape[0], []).append(req)
+        self._ingest_q.extend(carry)
+        done = 0
+        for length, reqs in sorted(groups.items()):
+            if length == 0:
+                for r in reqs:          # empty chunk: a no-op, resolve now
+                    self._resolve(r, self._tick, self._lat_ingest)
+                continue
+            ids = np.asarray([r.tenant for r in reqs], np.int32)
+            batch = np.stack([r.chunk for r in reqs])
+            try:
+                self.session.ingest(ids, batch)
+            except Exception as e:
+                for r in reqs:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+                self.counters["failed_ingest"] += len(reqs)
+                continue
+            self.counters["programs_ingest"] += 1
+            self._occ_ingest.append(len(reqs))
+            self._dirty = True
+            for r in reqs:
+                self._resolve(r, self._tick, self._lat_ingest)
+            done += len(reqs)
+        return done
+
+    def _run_queries(self) -> int:
+        """Coalesce the admitted query backlog into ONE batched read:
+        distinct tenants gathered once, every waiter handed its slice."""
+        pending = list(self._query_q)
+        self._query_q.clear()
+        if not pending:
+            return 0
+        order: Dict[int, int] = {}
+        for req in pending:
+            order.setdefault(req.tenant, len(order))
+        ids = np.fromiter(order.keys(), np.int32, len(order))
+        try:
+            results = self.session.query_batch(ids)
+        except Exception as e:
+            for r in pending:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            self.counters["failed_query"] += len(pending)
+            return 0
+        self.counters["programs_finalize"] += 1
+        self._occ_query.append(len(order))
+        # ONE device→host transfer for the whole batch; per-waiter slicing
+        # is then numpy views, not thousands of tiny device index dispatches
+        # (results are leaving the device either way — this is the wire)
+        host = jax.device_get(results)
+        for req in pending:
+            pos = order[req.tenant]
+            self._resolve(
+                req,
+                jax.tree.map(lambda l: l[pos], host),
+                self._lat_query,
+            )
+        return len(pending)
+
+    def _resolve(self, req: _Pending, value: Any, lat: Deque[float]) -> None:
+        if not req.future.done():       # client may have given up (cancel)
+            req.future.set_result(value)
+        lat.append(time.perf_counter() - req.t_submit)
+
+    # ----------------------------------------------------------- durability
+    def _maybe_snapshot(self, tick: int) -> None:
+        cfg = self.config
+        if (
+            self._loop_rt is None
+            or not cfg.snapshot_every
+            or not self._dirty
+            or (tick + 1) % cfg.snapshot_every != 0
+        ):
+            return
+        self._snapshot(tick)
+
+    def _snapshot(self, tick: int) -> None:
+        # export_state hands out HOST copies, so the async writer is immune
+        # to the next tick's donating scatter deleting the live buffers
+        self._loop_rt.manager.save(self.session.export_state(), tick)
+        self._dirty = False
+        self.counters["snapshots"] += 1
+
+    # -------------------------------------------------------------- driving
+    async def serve_forever(self) -> None:
+        """Tick at ``config.tick_interval`` until :meth:`stop` is called."""
+        try:
+            while not self._closed:
+                await self.tick()
+                await asyncio.sleep(self.config.tick_interval)
+        except asyncio.CancelledError:
+            pass
+
+    def start(self) -> asyncio.Task:
+        """Launch :meth:`serve_forever` as a background task."""
+        if self._serve_task is None or self._serve_task.done():
+            self._serve_task = _event_loop().create_task(self.serve_forever())
+        return self._serve_task
+
+    async def stop(self, final_snapshot: bool = True) -> None:
+        """Drain one last tick, snapshot if dirty, release the writer."""
+        if self._closed:
+            return
+        # drain: carried-over same-tenant duplicates may need extra ticks
+        await self.tick()
+        while self._ingest_q or self._query_q:
+            await self.tick()
+        self._closed = True
+        if self._serve_task is not None:
+            self._serve_task.cancel()
+            try:
+                await self._serve_task
+            except asyncio.CancelledError:
+                pass
+        for q in (self._ingest_q, self._query_q):
+            for req in q:
+                if not req.future.done():
+                    req.future.set_exception(
+                        GatewayRejected("gateway stopped"))
+            q.clear()
+        if self._loop_rt is not None:
+            if final_snapshot and self._dirty:
+                self._snapshot(self._tick)
+            self._loop_rt.close()
+
+    # -------------------------------------------------------------- metrics
+    @staticmethod
+    def _pct(samples, q: float) -> float:
+        if not samples:
+            return 0.0
+        return float(np.percentile(np.asarray(samples), q)) * 1e6  # µs
+
+    def metrics(self) -> dict:
+        """The serving surface's health in one dict (latencies in µs)."""
+        c = self.counters
+        return {
+            "ticks": c["ticks"],
+            "tick": self._tick,
+            "ingest": {
+                "count": len(self._lat_ingest),
+                "p50_us": self._pct(self._lat_ingest, 50),
+                "p99_us": self._pct(self._lat_ingest, 99),
+                "rejected_rate": c["rejected_ingest_rate"],
+                "rejected_queue_full": c["rejected_ingest_queue_full"],
+                "programs": c["programs_ingest"],
+            },
+            "query": {
+                "count": len(self._lat_query),
+                "p50_us": self._pct(self._lat_query, 50),
+                "p99_us": self._pct(self._lat_query, 99),
+                "rejected_rate": c["rejected_query_rate"],
+                "rejected_queue_full": c["rejected_query_queue_full"],
+                "programs": c["programs_finalize"],
+            },
+            "queue_depth": {
+                "ingest": len(self._ingest_q),
+                "query": len(self._query_q),
+            },
+            "batch_occupancy": {
+                "ingest_mean": float(np.mean(self._occ_ingest))
+                if self._occ_ingest else 0.0,
+                "query_mean": float(np.mean(self._occ_query))
+                if self._occ_query else 0.0,
+            },
+            "straggler_ticks": list(self.monitor.flagged),
+            "snapshots": c["snapshots"],
+            "restored_from_snapshot": c["restored_from_snapshot"],
+        }

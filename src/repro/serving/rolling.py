@@ -202,6 +202,53 @@ class RollingStatsService:
         """The compute backend every ingest lane's updates run through."""
         return self.engine.backend
 
+    # -- durability ---------------------------------------------------------
+    def export_state(self) -> dict:
+        """Host snapshot of the full serving state: the stacked lane pytree
+        plus the eviction cursor.  Leaves are HOST copies (``device_get``),
+        so the snapshot survives the next ingest donating the live lane
+        buffers — safe to hand to an async checkpoint writer
+        (`repro.checkpoint.manager.CheckpointManager.save`)."""
+        return {
+            "lanes": jax.device_get(self._lanes),
+            "counts": np.array(self._counts),
+        }
+
+    def import_state(self, state: dict) -> None:
+        """Install a snapshot produced by :meth:`export_state` on a service
+        built with the same engine/num_users/num_shards/window config —
+        after this, queries answer exactly as they did at snapshot time
+        without re-ingesting any history."""
+        lanes = state["lanes"]
+        want = jax.tree.structure(self._lanes)
+        got = jax.tree.structure(lanes)
+        if want != got:
+            raise ValueError(
+                f"snapshot lane structure {got} does not match this "
+                f"service's {want} — was it exported from a service with a "
+                f"different plan or engine?"
+            )
+        mismatched = [
+            (a.shape, b.shape)
+            for a, b in zip(jax.tree.leaves(self._lanes), jax.tree.leaves(lanes))
+            if tuple(a.shape) != tuple(b.shape)
+        ]
+        if mismatched:
+            raise ValueError(
+                f"snapshot lane shapes {[m[1] for m in mismatched]} do not "
+                f"match this service's {[m[0] for m in mismatched]} — "
+                "num_users / num_shards / window must equal the exporter's"
+            )
+        self._lanes = jax.tree.map(
+            lambda cur, new: jnp.asarray(new, cur.dtype), self._lanes, lanes
+        )
+        counts = np.asarray(state["counts"], np.int64)
+        if counts.shape != self._counts.shape:
+            raise ValueError(
+                f"snapshot counts shape {counts.shape} != {self._counts.shape}"
+            )
+        self._counts = counts.copy()
+
     # -- write path --------------------------------------------------------
     def ingest(
         self,
@@ -240,9 +287,11 @@ class RollingStatsService:
             raise ValueError("user_ids must be distinct within one ingest batch")
         if ids.shape[0] and not (0 <= ids.min() and ids.max() < self.num_users):
             raise ValueError(f"user_ids must lie in [0, {self.num_users})")
-        if not 0 <= shard < self._num_lanes or (
-            self.window is not None and shard != 0
-        ):
+        # num_shards is the caller-facing lane count in BOTH modes: the
+        # eviction ring pins it to 1, and its internal bucket lanes are not
+        # addressable (the old check tested _num_lanes — the ring size — so
+        # the message promised a range the check didn't enforce).
+        if not 0 <= shard < self.num_shards:
             raise ValueError(f"shard {shard} out of range [0, {self.num_shards})")
         user_ids = jnp.asarray(ids, jnp.int32)
         chunks = jnp.asarray(chunks)
@@ -282,7 +331,10 @@ class RollingStatsService:
                 jnp.asarray(shard, jnp.int32),
                 user_ids,
                 chunks,
-                jnp.asarray(t0),
+                # pin the dtype: a bare asarray leaves it caller-dependent,
+                # so mixed int32/int64 t0 arrivals compiled (and cached)
+                # duplicate donated scatter programs for the same shapes
+                jnp.asarray(t0, jnp.int32),
             )
         if self.window is not None:
             self._counts[ids] += chunks.shape[1]

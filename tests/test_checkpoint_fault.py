@@ -12,6 +12,7 @@ from repro.checkpoint.manager import (
     latest_step,
     restore_pytree,
     save_pytree,
+    sweep_tmp_dirs,
 )
 from repro.runtime.fault import FaultTolerantLoop, StragglerMonitor, plan_remesh
 
@@ -99,6 +100,139 @@ def test_plan_remesh():
     assert p.world <= 7 and p.model in (4, 2, 1)
     with pytest.raises(ValueError):
         plan_remesh(0)
+
+
+def test_manager_sweeps_stale_tmp_dirs_on_start(tmp_path):
+    """A crash mid-write used to leak its tmp dir forever; manager start
+    sweeps the debris (incomplete tmp + trash dirs)."""
+    save_pytree(_tree(), str(tmp_path), 1)
+    for name in ("tmp.7.abcd1234", "trash.1.deadbeef"):
+        d = tmp_path / name
+        d.mkdir()
+        (d / "arrays.npz").write_bytes(b"partial garbage")
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.close()
+    left = sorted(n for n in os.listdir(tmp_path))
+    assert left == ["step_0000000001"]
+    # the surviving checkpoint still restores
+    restore_pytree(_tree(), str(tmp_path))
+
+
+def test_crash_mid_write_preserves_previous_checkpoint(tmp_path, monkeypatch):
+    """A crash while serializing a re-save must leave the existing
+    checkpoint for that step intact (the old rmtree-then-rename pair
+    deleted it before the new one was in place)."""
+    t_old = _tree(0)
+    save_pytree(t_old, str(tmp_path), 5)
+
+    def boom(*a, **k):
+        raise OSError("disk died mid-save")
+
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(OSError):
+        save_pytree(_tree(1), str(tmp_path), 5)
+    monkeypatch.undo()
+    back = restore_pytree(jax.tree.map(jnp.zeros_like, t_old), str(tmp_path), 5)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(a, b), t_old, back
+    )
+
+
+def test_crash_between_renames_is_recovered_on_sweep(tmp_path, monkeypatch):
+    """The narrowest crash window: the old final was moved aside but the
+    finished new save was not yet renamed into place.  The start-up sweep
+    recognizes the complete orphan and recovers it — the step is never
+    lost."""
+    save_pytree(_tree(0), str(tmp_path), 2)
+    t_new = _tree(1)
+    real_rename = os.rename
+    calls = {"n": 0}
+
+    def flaky_rename(src, dst):
+        # 1st rename: final -> trash; 2nd: tmp -> final (the crash point)
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise OSError("killed between the renames")
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(os, "rename", flaky_rename)
+    with pytest.raises(OSError):
+        save_pytree(t_new, str(tmp_path), 2)
+    monkeypatch.undo()
+    assert latest_step(str(tmp_path)) is None  # the step is invisible...
+    recovered = sweep_tmp_dirs(str(tmp_path))  # ...until the sweep
+    assert len(recovered) == 1 and recovered[0].endswith("step_0000000002")
+    back = restore_pytree(jax.tree.map(jnp.zeros_like, t_new), str(tmp_path))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(a, b), t_new, back
+    )
+    assert not any(
+        n.startswith(("tmp.", "trash.")) for n in os.listdir(tmp_path)
+    )
+
+
+def test_close_does_not_leak_worker_after_save_error(tmp_path, monkeypatch):
+    """close() must enqueue the shutdown sentinel even when flush() raises
+    a deferred save error — the daemon worker used to leak."""
+    import repro.checkpoint.manager as mgr_mod
+
+    mgr = CheckpointManager(str(tmp_path))
+
+    def boom(tree, directory, step):
+        raise RuntimeError("save exploded")
+
+    monkeypatch.setattr(mgr_mod, "save_pytree", boom)
+    mgr.save(_tree(), 0)
+    with pytest.raises(RuntimeError, match="save exploded"):
+        mgr.close()
+    mgr._worker.join(timeout=5.0)
+    assert not mgr._worker.is_alive()
+
+
+def test_restore_shape_mismatch_names_key_and_shapes(tmp_path):
+    """An elastic restore onto a template with a different leaf shape must
+    fail loudly at restore time, naming the key and both shapes — not
+    surface as an opaque error at first use."""
+    save_pytree(_tree(), str(tmp_path), 0)
+    template = _tree()
+    template["layers"]["w"] = jnp.zeros((4, 4))
+    with pytest.raises(ValueError) as ei:
+        restore_pytree(template, str(tmp_path))
+    msg = str(ei.value)
+    assert "layers/w" in msg and "(8, 4)" in msg and "(4, 4)" in msg
+
+
+def test_first_step_time_excludes_construction_and_restore(tmp_path):
+    """The straggler median must not be poisoned by billing construction /
+    restore wall time to the first step."""
+    loop = FaultTolerantLoop(str(tmp_path), every=0)
+    time.sleep(0.25)  # "restore / compile" happening before step 0
+    state = {"x": jnp.zeros(2)}
+    loop.after_step(0, state)
+    assert loop.monitor.times == []  # no inter-step interval exists yet
+    loop.after_step(1, state)
+    assert len(loop.monitor.times) == 1 and loop.monitor.times[0] < 0.2
+    loop.close()
+
+
+def test_checkpoint_now_skips_step_already_saved(tmp_path):
+    """A preemption landing on a periodic-checkpoint boundary used to
+    serialize the same step twice."""
+    loop = FaultTolerantLoop(str(tmp_path), every=2)
+    state = {"x": jnp.zeros(2)}
+    loop.after_step(0, state)
+    loop.after_step(1, state)  # periodic save of step 1
+    loop.checkpoint_now()      # must NOT re-save step 1
+    loop.manager.flush()
+    assert loop.manager.saved_steps == [1]
+    loop.after_step(2, state)  # not on the boundary
+    loop.checkpoint_now()      # step 2 unsaved -> saves
+    loop.manager.flush()
+    assert loop.manager.saved_steps == [1, 2]
+    loop.checkpoint_now()      # idempotent: still nothing new
+    loop.manager.flush()
+    assert loop.manager.saved_steps == [1, 2]
+    loop.close()
 
 
 def test_restart_determinism_with_pipeline(tmp_path):

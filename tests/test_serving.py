@@ -56,6 +56,42 @@ def test_generate_rejects_overflow():
         eng.generate(prompts, max_new=8)
 
 
+def test_rolling_ingest_mixed_dtype_t0_compiles_one_program():
+    """Mixed int32/int64 ``t0`` arrivals must share ONE donated scatter
+    program: the old bare ``jnp.asarray(t0)`` left the dtype
+    caller-dependent, so every dtype mix compiled (and cached) a duplicate
+    of the same-shaped hot-loop program."""
+    from repro.core.estimators.stats import lag_sum_engine
+    from repro.serving.rolling import RollingStatsService
+
+    svc = RollingStatsService(lag_sum_engine(2, 1), 4, num_shards=2)
+    ids = jnp.asarray([0, 1])
+    chunks = jnp.ones((2, 8, 1))
+    svc.ingest(ids, chunks, shard=0)  # t0=None default path
+    svc.ingest(ids, chunks, shard=1, t0=np.asarray([8, 8], np.int64))
+    svc.ingest(ids, chunks, shard=1, t0=np.asarray([16, 16], np.int32))
+    svc.ingest(ids, chunks, shard=1, t0=[24, 24])  # python ints
+    assert svc._scatter_update._cache_size() == 1
+
+
+def test_rolling_shard_range_error_reports_real_range():
+    """The shard-range error used to check ``_num_lanes`` (the eviction
+    ring size) while reporting ``[0, num_shards)`` — the caller-facing
+    lane count is what is enforced, in both modes."""
+    from repro.core.estimators.stats import lag_sum_engine
+    from repro.serving.rolling import RollingStatsService
+
+    svc = RollingStatsService(lag_sum_engine(2, 1), 4, num_shards=2)
+    with pytest.raises(ValueError, match=r"\[0, 2\)"):
+        svc.ingest(jnp.asarray([0]), jnp.ones((1, 4, 1)), shard=2)
+    ring = RollingStatsService(
+        lag_sum_engine(0, 1), 4, window=16, num_buckets=4
+    )
+    # the ring's 4 internal buckets are NOT addressable ingest lanes
+    with pytest.raises(ValueError, match=r"\[0, 1\)"):
+        ring.ingest(jnp.asarray([0]), jnp.ones((1, 4, 1)), shard=2)
+
+
 def test_generate_quantized_engine():
     """int8 ServeEngine produces valid generations (structure + finiteness)."""
     r = ARCHS["qwen3-0.6b"].reduced()
