@@ -1,0 +1,119 @@
+"""Fused-plan megakernel — one staging pass vs the per-family launch path.
+
+The PR 7 acceptance question: does collapsing a 3-family plan chunk update
+(lagged sums + multi-window moments + Welch segment power) into ONE
+``fused_plan_update`` call cost anything over the legacy path that walks
+the chunk once per family (``fused_lagged_moments`` + the Welch member's
+own candidate gather + FFT)?  On CPU both paths lower to jnp — the fused
+composition must be no slower; on TPU the fused path is the one that
+halves HBM traffic (each tile staged into VMEM once, all families fed).
+
+Also times the interpret-mode Pallas megakernel on a small chunk — a
+validation vehicle (~100× slow), recorded for trajectory only, excluded
+from the regression gate by the MIN_US floor sizing.
+
+Emits ``BENCH_megakernel.json`` at the repo root;
+`benchmarks.check_regression` diffs it against the committed baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import PallasBackend, get_backend
+from repro.core.plan import (
+    StatPlan,
+    autocovariance_request,
+    moments_request,
+    welch_request,
+)
+
+from .common import row, time_call, write_bench_json
+
+N, D, H, MOM_W = 262_144, 8, 16, 64
+NPERSEG, OVERLAP = 256, 128
+
+REQUESTS = [
+    autocovariance_request(H),
+    moments_request(MOM_W),
+    welch_request(nperseg=NPERSEG, overlap=OVERLAP),
+]
+
+
+def _three_family_plan(backend, use_megakernel):
+    plan = StatPlan(REQUESTS, d=D, backend=backend)
+    (group,) = plan.groups
+    group._use_megakernel = use_megakernel and group._use_megakernel
+    return plan, group
+
+
+def run() -> None:
+    results = []
+
+    def bench(name, fn, *args, derived=""):
+        us = time_call(fn, *args)
+        results.append({"name": name, "us_per_call": us, "derived": derived})
+        row(f"megakernel_{name}", us, derived)
+        return us
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N, D))
+    shape = f"N={N};d={D};H={H};w={MOM_W};nperseg={NPERSEG}"
+
+    # -- fused single-call chunk update vs the per-family launch path -------
+    be = get_backend("jnp")
+    plan_fused, g_fused = _three_family_plan(be, use_megakernel=True)
+    plan_legacy, g_legacy = _three_family_plan(be, use_megakernel=False)
+    assert g_fused._use_megakernel and not g_legacy._use_megakernel
+
+    fused_fn = jax.jit(lambda xx: plan_fused.update(plan_fused.init(), xx))
+    legacy_fn = jax.jit(lambda xx: plan_legacy.update(plan_legacy.init(), xx))
+    us_fused = bench("chunk_update_fused", fused_fn, x, derived=shape)
+    us_legacy = bench("chunk_update_per_family", legacy_fn, x, derived=shape)
+    ratio = us_legacy / us_fused
+    row("megakernel_fused_vs_per_family", 0.0, f"per_family/fused={ratio:.2f}x")
+
+    # full evaluate-and-finalize, both paths (the user-visible latency)
+    fused_fin = jax.jit(lambda xx: plan_fused.finalize(plan_fused.from_chunk(xx)))
+    legacy_fin = jax.jit(
+        lambda xx: plan_legacy.finalize(plan_legacy.from_chunk(xx))
+    )
+    bench("finalize_fused", fused_fin, x, derived=shape)
+    bench("finalize_per_family", legacy_fin, x, derived=shape)
+
+    # -- interpret-mode Pallas megakernel (validation vehicle, small chunk) --
+    n_small = 4_096
+    xs = x[: n_small + MOM_W]
+    mask = jnp.ones((n_small,), jnp.bool_)
+    z0 = jnp.asarray(0, jnp.int32)
+    pal = PallasBackend(interpret=True)
+    taper = jnp.hanning(NPERSEG)
+    bench(
+        "pallas_interpret_small",
+        lambda: pal.fused_plan_update(
+            xs, mask, z0, H, (MOM_W,), (NPERSEG,), (NPERSEG - OVERLAP,), (taper,)
+        ),
+        derived=f"N={n_small};interpret=True",
+    )
+
+    write_bench_json(
+        "BENCH_megakernel.json",
+        {
+            "shapes": {
+                "plan": {
+                    "n": N,
+                    "d": D,
+                    "max_lag": H,
+                    "moments_window": MOM_W,
+                    "nperseg": NPERSEG,
+                    "overlap": OVERLAP,
+                },
+            },
+            "speedup_fused_vs_per_family": ratio,
+            "results": results,
+        },
+    )
+
+
+if __name__ == "__main__":
+    run()

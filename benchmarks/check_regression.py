@@ -40,6 +40,7 @@ BENCH_FILES = [
     "BENCH_backends.json",
     "BENCH_spectral.json",
     "BENCH_fused.json",
+    "BENCH_megakernel.json",
     "BENCH_frame.json",
     "BENCH_streaming.json",
     "BENCH_gateway.json",

@@ -21,6 +21,7 @@ MODULES = [
     "bench_backends",       # compute-registry shootout → BENCH_backends.json
     "bench_spectral",       # spectral primitive + fused Welch → BENCH_spectral.json
     "bench_fused",          # fused N-statistic plans → BENCH_fused.json
+    "bench_megakernel",     # fused-plan megakernel → BENCH_megakernel.json
     "bench_frame",          # SeriesFrame session API → BENCH_frame.json
     "bench_streaming",      # streaming monoid → BENCH_streaming.json
     "bench_gateway",        # async serving gateway → BENCH_gateway.json

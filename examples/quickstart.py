@@ -95,7 +95,7 @@ def main():
     print("5-step forecast (first dim):", [f"{float(v):.3f}" for v in preds[:, 0]])
 
     # 8. Where the math ran: the default "auto" backend dispatches each of
-    #    the six primitives through MEASURED per-primitive crossovers
+    #    the eight primitives through MEASURED per-primitive crossovers
     #    (repro.core.calibrate), not a hard-coded size constant.  On TPU the
     #    first dispatch microbenchmarks and caches the thresholds; anywhere
     #    you can also calibrate explicitly — one pass, persisted, picked up
@@ -133,6 +133,36 @@ def main():
     #        stats = await gw.query(tenant)
     #
     print("serving front door: PYTHONPATH=src python examples/gateway_demo.py")
+
+    # 10. The megakernel and the tuned tile table.  When a plan carries ≥2
+    #     primitive families (lagged sums / rolling moments / Welch members),
+    #     its chunk update collapses into ONE ``fused_plan_update`` backend
+    #     call — on the Pallas backend a single persistent kernel launch
+    #     that stages each (block_t, d) tile into VMEM once and feeds ALL
+    #     families from the resident block (the frame above did this at
+    #     collect()).  Tile sizes are not hard-coded: every kernel entry
+    #     point resolves its block_t / block_s / block_rows through the
+    #     calibrated table, and
+    #
+    #         from repro.core.calibrate import calibrate
+    #         calibrate(tune_blocks=True)     # crossovers AND tile search,
+    #                                         # persisted to the same cache
+    #
+    #     searches the candidate grid per primitive on THIS machine and
+    #     persists the winners next to the dispatch thresholds — one
+    #     calibration artifact, picked up by every later process.  Inspect /
+    #     re-measure / install from the shell:
+    #
+    #         PYTHONPATH=src python -m repro.core.calibrate --show
+    #         PYTHONPATH=src python -m repro.core.calibrate --tune
+    #         PYTHONPATH=src python -m repro.core.calibrate --bless table.json
+    #
+    #     Memory-bound deployments can additionally narrow the HBM↔VMEM
+    #     stream with ``fused_engine(..., stage_dtype="bfloat16")`` — the
+    #     series is staged in bf16, every accumulation stays f32 (measured
+    #     mode: validate against the default on your data first).
+    tuned = table.blocks or "(none tuned — kernels use built-in defaults)"
+    print(f"megakernel engaged for ≥2-family plans; tuned tile configs: {tuned}")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,22 @@ estimator in the repo reduces to a handful of primitive contractions, and a
                                          the same resident tile, so a plan
                                          tracking rolling moments at K
                                          horizons still costs one traversal
+  ``segment_csd(segs, taper)``           per-segment complex cross-spectral
+                                         products rfft_i·conj(rfft_j) — the
+                                         Whittle/coherence core; on Pallas
+                                         four real contractions of the
+                                         resident segment, recombined to
+                                         complex64 outside the kernel
+  ``fused_plan_update(y, mask, z0, …)``  the fused-plan MEGAKERNEL: masked
+                                         lagged sums + K moment windows +
+                                         M Welch segment-power accumulators
+                                         from ONE grid walk — on Pallas
+                                         each chunk tile is staged into
+                                         VMEM once and feeds every member
+                                         family (one launch, one HBM read,
+                                         down from one per family); on jnp
+                                         a composition of the primitives
+                                         above (the parity oracle)
 
 Backends in the registry:
 
@@ -39,10 +55,13 @@ Backends in the registry:
                 `repro.kernels.segment_dft`) — the TPU re-instantiation of
                 the paper's §12 GPU shared-memory scheme.  Runs in interpret
                 mode off-TPU so CPU tests exercise the identical tiling.
-                All six primitives have a real kernel: the spectral one
-                evaluates the fixed-L real DFT as tiled matmuls against
-                precomputed twiddle/window matrices, so a fused plan with a
-                Welch member no longer ejects to jnp.
+                Every primitive has a real kernel: the spectral ones
+                evaluate the fixed-L real DFT as tiled matmuls against
+                precomputed twiddle/window matrices, and
+                ``fused_plan_update`` is a persistent MEGAKERNEL serving a
+                whole fused plan from one grid walk.  Tile sizes resolve
+                through the calibrated block table
+                (``calibrate(tune_blocks=True)``) unless pinned explicitly.
   ``"auto"``    per-call policy (the default): each primitive routes to
                 Pallas once its problem size crosses a **measured**,
                 per-primitive threshold (`repro.core.calibrate`).  The
@@ -56,7 +75,7 @@ Backends in the registry:
 
 Registering a new backend (a GPU Triton port, a CPU-vectorized build, …):
 
-    class TritonBackend: ...    # implement the six primitives
+    class TritonBackend: ...    # implement the primitive contractions
     register_backend("triton", TritonBackend())
     gamma = autocovariance(x, 8, backend="triton")
 
@@ -140,6 +159,40 @@ class Backend(Protocol):
         ``window`` is an int (``mom`` is (2, d)) or a tuple of distinct
         windows (``mom`` is (len(window), 2, d), row k for ``window[k]``);
         either way the series is walked once.
+        """
+        ...
+
+    def segment_csd(
+        self, segments: jax.Array, taper: jax.Array, detrend: bool = True
+    ) -> jax.Array:
+        """(S, W, d) segments → (S, W//2+1, d, d) complex64 per-segment
+        cross-spectral products rfft_i · conj(rfft_j) (Hermitian in i, j)."""
+        ...
+
+    def fused_plan_update(
+        self,
+        y_padded: jax.Array,
+        start_mask: jax.Array,
+        z0: jax.Array,
+        max_lag: int,
+        windows: tuple = (),
+        seg_lens: tuple = (),
+        seg_steps: tuple = (),
+        tapers: tuple = (),
+        detrend: bool = True,
+        stage_dtype: "str | None" = None,
+    ) -> tuple:
+        """EVERY fused-plan member family from one traversal of the chunk.
+
+        Returns ``(lag, mom, psds, n_segs)``: ``lag`` is
+        ``masked_lagged_sums(y_padded, start_mask, max_lag)``; ``mom`` is
+        the (K, 2, d) multi-window moment stat of ``fused_lagged_moments``
+        (None when ``windows`` is empty); ``psds[j]`` is the (W_j//2+1, d)
+        sum of detrended, tapered |rfft|² over every Welch segment of
+        member j — segments start at local rows ``c`` with ``(z0 + c) %
+        seg_steps[j] == 0``, ``c < L`` and ``start_mask[c]`` — and
+        ``n_segs[j]`` counts them.  ``stage_dtype`` (e.g. "bfloat16")
+        narrows the series staging; accumulation stays f32.
         """
         ...
 
@@ -285,26 +338,103 @@ class JnpBackend:
         mom = jnp.stack(moms)
         return lag, (mom[0] if single else mom)
 
+    def segment_csd(
+        self, segments: jax.Array, taper: jax.Array, detrend: bool = True
+    ) -> jax.Array:
+        segments = segments.astype(jnp.float32)
+        taper = taper.astype(jnp.float32)
+
+        def one(seg):
+            if detrend:
+                seg = seg - seg.mean(axis=0)
+            f = jnp.fft.rfft(seg * taper[:, None], axis=0)  # (F, d)
+            return jnp.einsum("fi,fj->fij", f, jnp.conj(f))
+
+        return jax.vmap(one)(segments)
+
+    def fused_plan_update(
+        self,
+        y_padded: jax.Array,
+        start_mask: jax.Array,
+        z0: jax.Array,
+        max_lag: int,
+        windows: tuple = (),
+        seg_lens: tuple = (),
+        seg_steps: tuple = (),
+        tapers: tuple = (),
+        detrend: bool = True,
+        stage_dtype: "str | None" = None,
+    ) -> tuple:
+        """Composition oracle: the megakernel's contract restated as calls
+        to the existing primitives (lag/moments via ``fused_lagged_moments``,
+        spectra via the Welch candidate gather + ``segment_fft_power``).
+        ``stage_dtype`` rounds the series through the staging dtype first,
+        mirroring the Pallas kernel's narrowed HBM↔VMEM stream bit-for-bit.
+        """
+        windows = tuple(windows)
+        y_padded = _as_2d(y_padded)
+        if stage_dtype is not None:
+            y_padded = y_padded.astype(jnp.dtype(stage_dtype))
+        y_padded = y_padded.astype(jnp.float32)
+        L = start_mask.shape[0]
+        w_max = max(windows) if windows else 1
+        l_max = max(seg_lens) if seg_lens else 1
+        need = L + max(max_lag, w_max - 1, l_max - 1)
+        if y_padded.shape[0] < need:
+            y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
+
+        if windows:
+            lag, mom = self.fused_lagged_moments(
+                y_padded, start_mask, max_lag, windows
+            )
+        else:
+            lag = self.masked_lagged_sums(y_padded, start_mask, max_lag)
+            mom = None
+
+        z0 = jnp.asarray(z0, jnp.int32)
+        psds, n_segs = [], []
+        for Lseg, step, taper in zip(seg_lens, seg_steps, tapers):
+            K = L // step + 1  # static bound on aligned starts in [z0, z0+L)
+            base = (-z0) % step
+            cand = base + jnp.arange(K) * step
+            valid = (cand < L) & start_mask[jnp.clip(cand, 0, L - 1)]
+            wins = jax.vmap(
+                lambda s: jax.lax.dynamic_slice_in_dim(y_padded, s, Lseg, axis=0)
+            )(jnp.clip(cand, 0, L - 1))
+            power = self.segment_fft_power(wins, taper, detrend)
+            psds.append(
+                jnp.sum(jnp.where(valid[:, None, None], power, 0.0), axis=0)
+            )
+            n_segs.append(jnp.sum(valid.astype(jnp.float32)))
+        return lag, mom, tuple(psds), tuple(n_segs)
+
 
 class PallasBackend:
     """Explicit VMEM tile kernels (the paper's §12 scheme on TPU).
 
     Args:
-      block_t: core tile length for the windowed-contraction kernels.
+      block_t: core tile length for the windowed-contraction kernels and
+        the fused-plan megakernel.
       block_rows: row tile for the banded matvec.
-      block_s: segments staged per grid step in the segment-DFT kernel.
+      block_s: segments staged per grid step in the segment-DFT kernels.
       interpret: force Pallas interpret mode.  ``None`` (default) resolves
         per call: compiled on TPU, interpret everywhere else — so the same
         backend object validates on CPU and serves on TPU.
+
+    Every block argument defaults to ``None`` — the ops entry points then
+    resolve the tile size through the calibrated per-platform block table
+    (`repro.kernels.tiling.resolve_block`; written by
+    ``calibrate(tune_blocks=True)``), falling back to the built-in
+    defaults.  Pass an int to pin a size explicitly (tests, the tuner).
     """
 
     name = "pallas"
 
     def __init__(
         self,
-        block_t: int = 512,
-        block_rows: int = 256,
-        block_s: int = 8,
+        block_t: Optional[int] = None,
+        block_rows: Optional[int] = None,
+        block_s: Optional[int] = None,
         interpret: Optional[bool] = None,
     ):
         self.block_t = block_t
@@ -383,6 +513,49 @@ class PallasBackend:
             interpret=self._interp(),
         )
 
+    def segment_csd(
+        self, segments: jax.Array, taper: jax.Array, detrend: bool = True
+    ) -> jax.Array:
+        from ..kernels.segment_dft import ops as sd
+
+        return sd.segment_csd(
+            segments,
+            taper,
+            detrend,
+            block_s=self.block_s,
+            interpret=self._interp(),
+        )
+
+    def fused_plan_update(
+        self,
+        y_padded: jax.Array,
+        start_mask: jax.Array,
+        z0: jax.Array,
+        max_lag: int,
+        windows: tuple = (),
+        seg_lens: tuple = (),
+        seg_steps: tuple = (),
+        tapers: tuple = (),
+        detrend: bool = True,
+        stage_dtype: "str | None" = None,
+    ) -> tuple:
+        from ..kernels.fused_plan import ops as fp
+
+        return fp.fused_plan_update(
+            y_padded,
+            start_mask,
+            z0,
+            max_lag,
+            windows,
+            seg_lens,
+            seg_steps,
+            tapers,
+            detrend,
+            stage_dtype=stage_dtype,
+            block_t=self.block_t,
+            interpret=self._interp(),
+        )
+
 
 class AutoBackend:
     """Per-call dispatch by *measured* crossover, not a hard-coded constant.
@@ -425,8 +598,16 @@ class AutoBackend:
         return self._table
 
     def set_table(self, table) -> None:
-        """Swap the crossover table (e.g. a fresh ``calibrate()`` result)."""
+        """Swap the crossover table (e.g. a fresh ``calibrate()`` result).
+
+        Also installs it as the process-wide active table so the kernels'
+        tile-size resolution (`repro.kernels.tiling.resolve_block`) sees the
+        same calibration artifact the dispatch policy uses.
+        """
         self._table = table
+        from .calibrate import set_active_table
+
+        set_active_table(table)
 
     def _pick(self, primitive: str, size: int) -> Backend:
         if size >= self.table.crossover(primitive):
@@ -471,6 +652,46 @@ class AutoBackend:
         return self._pick(
             "fused_lagged_moments", start_mask.shape[0]
         ).fused_lagged_moments(y_padded, start_mask, max_lag, window)
+
+    def segment_csd(
+        self, segments: jax.Array, taper: jax.Array, detrend: bool = True
+    ) -> jax.Array:
+        staged = segments.shape[0] * segments.shape[1]
+        return self._pick("segment_csd", staged).segment_csd(
+            segments, taper, detrend
+        )
+
+    def fused_plan_update(
+        self,
+        y_padded: jax.Array,
+        start_mask: jax.Array,
+        z0: jax.Array,
+        max_lag: int,
+        windows: tuple = (),
+        seg_lens: tuple = (),
+        seg_steps: tuple = (),
+        tapers: tuple = (),
+        detrend: bool = True,
+        stage_dtype: "str | None" = None,
+    ) -> tuple:
+        # A cached table measured before this primitive existed simply has
+        # no entry — CalibrationTable.crossover falls back to the built-in
+        # platform default (never a KeyError), so stale caches degrade to
+        # the reasoned policy instead of crashing the fused-plan hot path.
+        return self._pick(
+            "fused_plan_update", start_mask.shape[0]
+        ).fused_plan_update(
+            y_padded,
+            start_mask,
+            z0,
+            max_lag,
+            windows,
+            seg_lens,
+            seg_steps,
+            tapers,
+            detrend,
+            stage_dtype=stage_dtype,
+        )
 
 
 _REGISTRY: Dict[str, Backend] = {

@@ -26,6 +26,22 @@ it with measurement:
 
 The built-in defaults are a *fallback*, not policy: any measured table,
 cached or injected (``AutoBackend(table=...)``), overrides them.
+
+Since the megakernel PR the table carries a second product next to the
+crossovers: **tuned tile configurations**.  :func:`tune_blocks` searches the
+per-primitive block-size space (``block_t`` for the windowed contractions
+and the fused-plan megakernel, ``block_s`` for the segment-DFT family,
+``block_rows`` for the banded matvec) on the Pallas backend and records the
+winner in ``CalibrationTable.blocks``; every ``kernels/*`` ops entry point
+resolves its tile size through :func:`active_blocks` (via
+`repro.kernels.tiling.resolve_block`) instead of a hard-coded literal.
+``calibrate(tune_blocks=True)`` runs both passes and persists one table.
+
+Run it from the shell::
+
+    python -m repro.core.calibrate --show          # resolved table
+    python -m repro.core.calibrate --tune          # measure crossovers + blocks
+    python -m repro.core.calibrate --bless t.json  # install a table file
 """
 from __future__ import annotations
 
@@ -41,6 +57,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "PRIMITIVES",
+    "TUNABLE_BLOCKS",
     "CalibrationTable",
     "block_all",
     "default_table",
@@ -48,17 +65,24 @@ __all__ = [
     "load_table",
     "save_table",
     "resolve_table",
+    "active_table",
+    "active_blocks",
+    "set_active_table",
     "calibrate",
+    "tune_blocks",
+    "main",
 ]
 
-# The six registered primitive contractions (`repro.core.backend.Backend`).
+# The registered primitive contractions (`repro.core.backend.Backend`).
 PRIMITIVES: Tuple[str, ...] = (
     "lagged_sums",
     "masked_lagged_sums",
     "windowed_moments",
     "segment_fft_power",
+    "segment_csd",
     "banded_matvec",
     "fused_lagged_moments",
+    "fused_plan_update",
 )
 
 # Built-in fallback crossovers when no measured table exists.  On TPU these
@@ -71,28 +95,73 @@ _TPU_DEFAULTS: Dict[str, float] = {
     "masked_lagged_sums": 4096.0,
     "windowed_moments": 4096.0,
     "fused_lagged_moments": 4096.0,
+    "fused_plan_update": 4096.0,
     "banded_matvec": 4096.0,
     "segment_fft_power": 32768.0,
+    "segment_csd": 32768.0,
 }
+
+# Which tile parameter each primitive exposes to the block tuner, and the
+# candidate grids :func:`tune_blocks` searches.
+TUNABLE_BLOCKS: Dict[str, Tuple[str, ...]] = {
+    "lagged_sums": ("block_t",),
+    "masked_lagged_sums": ("block_t",),
+    "windowed_moments": ("block_t",),
+    "fused_lagged_moments": ("block_t",),
+    "fused_plan_update": ("block_t",),
+    "segment_fft_power": ("block_s",),
+    "segment_csd": ("block_s",),
+    "banded_matvec": ("block_rows",),
+}
+BLOCK_CANDIDATES: Dict[str, Tuple[int, ...]] = {
+    "block_t": (128, 256, 512, 1024),
+    "block_s": (2, 4, 8, 16),
+    "block_rows": (128, 256, 512),
+}
+
+
+def _builtin_thresholds(platform: str) -> Dict[str, float]:
+    if platform == "tpu":
+        return dict(_TPU_DEFAULTS)
+    return {p: math.inf for p in PRIMITIVES}
 
 
 @dataclasses.dataclass
 class CalibrationTable:
-    """Per-primitive crossover thresholds for one platform.
+    """Per-primitive crossover thresholds + tuned tile configs, one platform.
 
     ``thresholds[name]`` is the problem size (rows for the windowed
     contractions, banded dimension for the matvec, total staged samples
     S·L for the segment DFT) at which the ``"auto"`` policy starts routing
     that primitive to the Pallas backend; ``math.inf`` means never.
+    ``blocks[name]`` is the tuned tile configuration for that primitive's
+    kernel (``{"block_t": 256}``, …) — written by :func:`tune_blocks`, read
+    by every ``kernels/*`` ops entry point through
+    `repro.kernels.tiling.resolve_block`.
     ``source`` records provenance: "default", "measured", or "cache".
     """
 
     platform: str
     thresholds: Dict[str, float]
     source: str = "default"
+    blocks: Dict[str, Dict[str, int]] = dataclasses.field(default_factory=dict)
 
     def crossover(self, primitive: str) -> float:
-        return float(self.thresholds.get(primitive, math.inf))
+        """Dispatch threshold for ``primitive``.
+
+        A primitive absent from the table — e.g. a cached measurement that
+        predates the primitive's registration — falls back to the BUILT-IN
+        default for this table's platform, never to a KeyError and never
+        to a blanket "always pallas": a stale cache degrades to the
+        reasoned default, exactly what an uncalibrated machine gets.
+        """
+        if primitive in self.thresholds:
+            return float(self.thresholds[primitive])
+        return float(_builtin_thresholds(self.platform).get(primitive, math.inf))
+
+    def block_config(self, primitive: str) -> Dict[str, int]:
+        """Tuned tile config for ``primitive`` ({} when never tuned)."""
+        return dict(self.blocks.get(primitive, {}))
 
     def to_json(self) -> dict:
         return {
@@ -101,6 +170,10 @@ class CalibrationTable:
             "thresholds": {
                 k: (None if math.isinf(v) else v)
                 for k, v in self.thresholds.items()
+            },
+            "blocks": {
+                k: {p: int(v) for p, v in cfg.items()}
+                for k, cfg in self.blocks.items()
             },
             "source": self.source,
         }
@@ -111,21 +184,24 @@ class CalibrationTable:
             k: (math.inf if v is None else float(v))
             for k, v in payload.get("thresholds", {}).items()
         }
+        blocks = {
+            k: {p: int(v) for p, v in cfg.items()}
+            for k, cfg in payload.get("blocks", {}).items()
+        }
         return cls(
             platform=payload.get("platform", "unknown"),
             thresholds=thresholds,
             source=payload.get("source", "cache"),
+            blocks=blocks,
         )
 
 
 def default_table(platform: Optional[str] = None) -> CalibrationTable:
     """The built-in fallback table for ``platform`` (default: current)."""
     platform = platform or jax.default_backend()
-    if platform == "tpu":
-        thresholds = dict(_TPU_DEFAULTS)
-    else:
-        thresholds = {p: math.inf for p in PRIMITIVES}
-    return CalibrationTable(platform, thresholds, source="default")
+    return CalibrationTable(
+        platform, _builtin_thresholds(platform), source="default"
+    )
 
 
 def cache_path(platform: Optional[str] = None) -> str:
@@ -188,12 +264,60 @@ def resolve_table(
     platform = platform or jax.default_backend()
     cached = load_table(platform)
     if cached is not None:
+        set_active_table(cached)
         return cached
     if autocalibrate is None:
         autocalibrate = _autocalibrate_default(platform)
     if autocalibrate:
         return calibrate(save=True)
-    return default_table(platform)
+    table = default_table(platform)
+    set_active_table(table)
+    return table
+
+
+# The table tile-size resolution reads (`repro.kernels.tiling.resolve_block`
+# → :func:`active_blocks`).  Split from the AutoBackend's lazy ``table``
+# because block resolution must NEVER trigger a measurement pass: the
+# measurement itself calls the kernels, which resolve their blocks — a
+# recursive calibration would never terminate.  ``_ACTIVE`` is set by
+# explicit installs (resolve_table / calibrate / tune_blocks /
+# ``AutoBackend.set_table``); until one happens, reads fall through to the
+# persisted cache (memoized on the file's mtime) or the defaults.
+_ACTIVE: Optional[CalibrationTable] = None
+_READ_CACHE: Optional[tuple] = None  # ((path, mtime), table)
+
+
+def set_active_table(table: Optional[CalibrationTable]) -> None:
+    """Install ``table`` as the process-wide tile/threshold source (None
+    resets to lazy read-through — tests use this for isolation)."""
+    global _ACTIVE
+    _ACTIVE = table
+
+
+def active_table() -> CalibrationTable:
+    """The table block resolution dispatches with, WITHOUT ever measuring:
+    the explicitly installed table > the persisted platform cache > the
+    built-in defaults."""
+    if _ACTIVE is not None:
+        return _ACTIVE
+    global _READ_CACHE
+    path = cache_path()
+    try:
+        mtime = os.stat(path).st_mtime_ns
+    except OSError:
+        mtime = None
+    key = (path, mtime)
+    if _READ_CACHE is not None and _READ_CACHE[0] == key:
+        return _READ_CACHE[1]
+    table = load_table() or default_table()
+    _READ_CACHE = (key, table)
+    return table
+
+
+def active_blocks(primitive: str) -> Dict[str, int]:
+    """Tuned tile config for ``primitive`` from the active table ({} when
+    never tuned — `repro.kernels.tiling` then applies its defaults)."""
+    return active_table().block_config(primitive)
 
 
 # ---------------------------------------------------------------- measurement
@@ -246,6 +370,7 @@ def _workloads(
     diags = jax.random.normal(ks[3], (n, 2 * b + 1))
     v = x[:, 0]
 
+    z0 = jnp.asarray(0, jnp.int32)
     return {
         "lagged_sums": lambda be: (lambda: be.lagged_sums(x, H)),
         "masked_lagged_sums": lambda be: (
@@ -255,9 +380,16 @@ def _workloads(
         "segment_fft_power": lambda be: (
             lambda: be.segment_fft_power(segs, taper)
         ),
+        "segment_csd": lambda be: (lambda: be.segment_csd(segs, taper)),
         "banded_matvec": lambda be: (lambda: be.banded_matvec(diags, v)),
         "fused_lagged_moments": lambda be: (
             lambda: be.fused_lagged_moments(y, mask, H, w)
+        ),
+        # the megakernel: a 3-family plan chunk update (lag + moments + DFT)
+        "fused_plan_update": lambda be: (
+            lambda: be.fused_plan_update(
+                y, mask, z0, H, (w,), (L,), (max(L // 2, 1),), (taper,)
+            )
         ),
     }
 
@@ -275,6 +407,7 @@ def calibrate(
     save: bool = True,
     path: Optional[str] = None,
     verbose: bool = False,
+    tune_blocks: bool = False,
 ) -> CalibrationTable:
     """Measure per-primitive backend crossovers on THIS machine.
 
@@ -290,6 +423,11 @@ def calibrate(
     processes skip the measurement.  Inject into a live policy with
     ``get_backend("auto").set_table(table)`` (a fresh process picks the
     cache up automatically).
+
+    ``tune_blocks=True`` additionally runs the tile-size search
+    (:func:`tune_blocks`) and records the winning per-primitive block
+    configs in the same table — one calibration artifact carrying both the
+    dispatch policy and the kernel geometry.
     """
     from .backend import get_backend
 
@@ -325,6 +463,20 @@ def calibrate(
         thresholds[prim] = thr
 
     table = CalibrationTable(platform, thresholds, source="measured")
+    if tune_blocks:
+        _tune_blocks_into(
+            table,
+            n=sizes[-1],
+            d=d,
+            max_lag=max_lag,
+            window=window,
+            nperseg=nperseg,
+            bandwidth=bandwidth,
+            iters=iters,
+            warmup=warmup,
+            verbose=verbose,
+        )
+    set_active_table(table)
     if save:
         # The measured table is the product; the cache is an optimization.
         # ``calibrate`` can run implicitly at the auto backend's first
@@ -340,3 +492,178 @@ def calibrate(
                 f"({e}); the measured table is used for this process only"
             )
     return table
+
+
+def _tune_blocks_into(
+    table: CalibrationTable,
+    n: int,
+    d: int = 8,
+    max_lag: int = 8,
+    window: int = 64,
+    nperseg: int = 256,
+    bandwidth: int = 8,
+    iters: int = 3,
+    warmup: int = 1,
+    verbose: bool = False,
+) -> None:
+    """Search :data:`BLOCK_CANDIDATES` per tunable primitive on the Pallas
+    backend and record each winner in ``table.blocks`` (in place).
+
+    The search times the SAME workload closures the crossover pass uses, one
+    fresh ``PallasBackend`` per candidate so the tile size under test is the
+    explicit override — the resolution chain (override > table > default)
+    guarantees the measurement cannot read the very table it is writing.
+    """
+    from .backend import PallasBackend
+
+    loads = _workloads(n, d, max_lag, window, nperseg, bandwidth)
+    for prim, params in TUNABLE_BLOCKS.items():
+        cfg: Dict[str, int] = {}
+        for param in params:
+            best_c, best_t = None, math.inf
+            for cand in BLOCK_CANDIDATES[param]:
+                be = PallasBackend(**{param: cand})
+                t = _time(loads[prim](be), iters, warmup)
+                if verbose:
+                    print(
+                        f"tune {prim:<22s} {param}={cand:<6d} "
+                        f"{t * 1e6:10.1f}us"
+                    )
+                if t < best_t:
+                    best_c, best_t = cand, t
+            if best_c is not None:
+                cfg[param] = int(best_c)
+        if cfg:
+            table.blocks[prim] = cfg
+
+
+def tune_blocks(
+    n: int = 32768,
+    iters: int = 3,
+    warmup: int = 1,
+    save: bool = True,
+    path: Optional[str] = None,
+    verbose: bool = False,
+) -> CalibrationTable:
+    """Tile-size autotuning on top of the currently active table.
+
+    Starts from :func:`active_table` (never triggers a crossover
+    measurement), searches :data:`BLOCK_CANDIDATES` for every primitive in
+    :data:`TUNABLE_BLOCKS`, merges the winners into ``table.blocks``,
+    installs the result as the active table and (with ``save=True``)
+    persists it to the platform cache.  ``calibrate(tune_blocks=True)`` is
+    the one-shot that measures crossovers AND tunes blocks together.
+    """
+    base = active_table()
+    table = CalibrationTable(
+        platform=base.platform,
+        thresholds=dict(base.thresholds),
+        source=base.source,
+        blocks={k: dict(v) for k, v in base.blocks.items()},
+    )
+    _tune_blocks_into(
+        table, n=n, iters=iters, warmup=warmup, verbose=verbose
+    )
+    set_active_table(table)
+    if save:
+        try:
+            save_table(table, path)
+        except OSError as e:
+            import warnings
+
+            warnings.warn(
+                f"block tuning succeeded but the cache could not be written "
+                f"({e}); the tuned table is used for this process only"
+            )
+    return table
+
+
+# ------------------------------------------------------------------------ CLI
+def _print_table(table: CalibrationTable) -> None:
+    print(f"platform: {table.platform}   source: {table.source}")
+    print("crossover thresholds (rows; inf = always jnp):")
+    for prim in PRIMITIVES:
+        thr = table.crossover(prim)
+        star = "" if prim in table.thresholds else "  (built-in default)"
+        print(f"  {prim:<22s} {thr!r:>10}{star}")
+    print("tuned tile configs (empty = kernels use built-in defaults):")
+    if not table.blocks:
+        print("  (none)")
+    for prim, cfg in sorted(table.blocks.items()):
+        pretty = ", ".join(f"{k}={v}" for k, v in sorted(cfg.items()))
+        print(f"  {prim:<22s} {pretty}")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """``python -m repro.core.calibrate`` — inspect / measure / install the
+    calibration table.
+
+    ``--show``         print the resolved active table (default action)
+    ``--tune``         measure crossovers AND tune tile sizes, persist
+    ``--tune-blocks``  tile-size search only, on top of the active table
+    ``--bless PATH``   install a table JSON file as this platform's cache
+    """
+    import argparse
+
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.core.calibrate",
+        description="Measure, inspect, or install the backend calibration "
+        "table (crossover thresholds + tuned tile configs).",
+    )
+    parser.add_argument(
+        "--show", action="store_true",
+        help="print the resolved active table (default when no action given)",
+    )
+    parser.add_argument(
+        "--tune", action="store_true",
+        help="measure backend crossovers and tune tile sizes, then persist "
+        "to the platform cache",
+    )
+    parser.add_argument(
+        "--tune-blocks", action="store_true",
+        help="run only the tile-size search on top of the active table",
+    )
+    parser.add_argument(
+        "--bless", metavar="PATH", default=None,
+        help="validate the table JSON at PATH and install it as this "
+        "platform's cache file",
+    )
+    parser.add_argument(
+        "--no-save", action="store_true",
+        help="with --tune/--tune-blocks: measure but do not write the cache",
+    )
+    parser.add_argument("-v", "--verbose", action="store_true")
+    args = parser.parse_args(argv)
+
+    if args.bless:
+        with open(args.bless) as f:
+            table = CalibrationTable.from_json(json.load(f))
+        platform = jax.default_backend()
+        if table.platform != platform:
+            print(
+                f"refusing to bless: table platform {table.platform!r} != "
+                f"current platform {platform!r}",
+            )
+            return 1
+        dest = save_table(table)
+        set_active_table(table)
+        print(f"blessed {args.bless} -> {dest}")
+        _print_table(table)
+        return 0
+
+    if args.tune:
+        table = calibrate(
+            save=not args.no_save, verbose=args.verbose, tune_blocks=True
+        )
+    elif args.tune_blocks:
+        table = tune_blocks(save=not args.no_save, verbose=args.verbose)
+    else:
+        table = active_table()
+    _print_table(table)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -10,10 +10,11 @@ Univariate PSDs per dimension plus optional cross-spectral density matrix
 (needed for frequency-domain Whittle likelihoods of VARMA models).
 
 The per-segment periodogram is the backend registry's
-``segment_fft_power`` primitive (`repro.core.backend`): every backend
-currently routes it through XLA's rfft (there is no Pallas FFT), but the
-``backend=`` argument keeps the spectral API uniform with the lag-domain
-estimators and ready for a future accelerator FFT.
+``segment_fft_power`` primitive and the cross-spectral matrix the
+``segment_csd`` primitive (`repro.core.backend`): jnp evaluates them with
+XLA's rfft; the Pallas backend evaluates the fixed-L DFT as tiled matmuls
+against precomputed taper-folded twiddle matrices — so both the PSD and
+the CSD stay on the VMEM tile path when calibration says it wins.
 """
 from __future__ import annotations
 
@@ -96,22 +97,24 @@ def welch_csd(
     nperseg: int = 256,
     overlap: Optional[int] = None,
     fs: float = 1.0,
+    backend: BackendSpec = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Cross-spectral density matrix: (nfreq, d, d) complex (two-sided scale
-    per pair, Hermitian in (i, j)).  Complex cross-products are not a
-    backend primitive (yet) — this stays on the plain jnp path."""
+    per pair, Hermitian in (i, j)).
+
+    Routed through the registry's ``segment_csd`` primitive — on the Pallas
+    backend the complex cross-products are four real contractions of each
+    resident segment (re/im twiddle matmuls + a channel outer product), so
+    cross-spectral members no longer eject to the plain jnp path.
+    """
     if x.ndim == 1:
         x = x[:, None]
     overlap = nperseg // 2 if overlap is None else overlap
     segs, _ = _segments(x, nperseg, overlap)
     w = hann_window(nperseg)
     scale = 1.0 / (fs * jnp.sum(w**2))
-
-    def kernel(seg):
-        f = jnp.fft.rfft((seg - seg.mean(axis=0)) * w[:, None], axis=0)  # (nf, d)
-        return jnp.einsum("fi,fj->fij", f, jnp.conj(f)) * scale
-
-    csd = jnp.mean(jax.vmap(kernel)(segs), axis=0)
+    csd = get_backend(backend).segment_csd(segs, w)  # (S, nfreq, d, d)
+    csd = jnp.mean(csd, axis=0) * scale
     freqs = jnp.fft.rfftfreq(nperseg, d=1.0 / fs)
     return freqs, csd
 

@@ -34,10 +34,18 @@ to independent estimator calls.
 Shared components: every lag-family member (autocovariance, Yule-Walker,
 ARMA) reads slices of ONE ``(H_max+1, d, d)`` lagged-sum entry, so adding
 a Yule-Walker fit to a plan that already tracks autocovariance is free.
-Lagged sums and windowed moments are emitted together by the backend's
-``fused_lagged_moments`` primitive — on the Pallas backend one VMEM
-staging of each tile feeds both the MXU lag contractions and the VPU
-moment accumulation (one HBM read instead of two).
+Whenever at least two primitive FAMILIES are members (lag sums, windowed
+moments, Welch segments), the whole chunk update collapses into one
+``fused_plan_update`` call — the persistent megakernel
+(`repro.kernels.fused_plan`): the grid walks the chunk once, each tile is
+staged into VMEM once, and every family is fed from the same resident
+block (one kernel launch and one HBM read, down from one per family).
+The call is offset-aware — the chunk's global index ``z0`` rides into the
+kernel's stride-alignment tables, so mixed Welch strides and
+`FrameSession`/gateway scatter-ingest ride the same launch.  Plans with a
+single family keep the narrower primitives (``fused_lagged_moments`` /
+``masked_lagged_sums``).  The optional ``stage_dtype="bfloat16"`` plan
+flag narrows the megakernel's HBM↔VMEM staging (accumulation stays f32).
 
 When is fusion legal?
 ---------------------
@@ -175,6 +183,17 @@ def _tail_ones(carry: int) -> jax.Array:
     return jnp.ones((carry,), jnp.bool_)
 
 
+@dataclasses.dataclass(frozen=True)
+class _WelchInfo:
+    """What the megakernel path needs to serve one Welch member."""
+
+    name: str
+    nperseg: int
+    step: int
+    scale: jax.Array
+    taper: jax.Array
+
+
 class _PlanGroup:
     """One fused traversal: members compiled onto a shared StreamingEngine.
 
@@ -183,12 +202,20 @@ class _PlanGroup:
     the engine's alignment mask instead of in-kernel offsets)."""
 
     def __init__(
-        self, requests: Sequence[StatRequest], names, d: int, backend, stride: int = 1
+        self,
+        requests: Sequence[StatRequest],
+        names,
+        d: int,
+        backend,
+        stride: int = 1,
+        stage_dtype: Optional[str] = None,
     ):
         self.backend = backend
         self.d = d
         self.stride = stride
+        self.stage_dtype = stage_dtype
         self.members: list[_Member] = []
+        self._welch_info: list[_WelchInfo] = []
 
         lag_specs = []      # (name, request) needing the shared lagged entry
         moment_windows = {}  # window -> key
@@ -257,6 +284,21 @@ class _PlanGroup:
         )
         self.moment_windows = dict(sorted(moment_windows.items()))
         self._traverse_extra = traverse_extra
+        welch_names = {info.name for info in self._welch_info}
+        self._non_welch_extra = [
+            m for m in traverse_extra if m.name not in welch_names
+        ]
+        # The megakernel engages when ≥2 primitive families share the
+        # traversal AND the backend implements the seventh primitive
+        # (third-party backends without it keep the per-family path).
+        families = (
+            int(self.has_lagged)
+            + int(bool(self.moment_windows))
+            + int(bool(self._welch_info))
+        )
+        self._use_megakernel = families >= 2 and hasattr(
+            backend, "fused_plan_update"
+        )
 
         self.engine = StreamingEngine(
             d=d,
@@ -272,6 +314,37 @@ class _PlanGroup:
     def _fused_chunk_kernel(self, y: jax.Array, mask: jax.Array, z0: jax.Array):
         be = self.backend
         out = {}
+        if self._use_megakernel:
+            # ONE backend call — on Pallas one persistent kernel launch —
+            # serves the shared lagged entry, every moment window, AND every
+            # Welch member: each chunk tile is staged into VMEM once and
+            # feeds all member families (offset-aware: z0 enters the
+            # segment stride alignment).
+            ws = tuple(self.moment_windows)
+            lag, mom, psds, n_segs = be.fused_plan_update(
+                y,
+                mask,
+                z0,
+                self.max_lag,
+                ws,
+                tuple(i.nperseg for i in self._welch_info),
+                tuple(i.step for i in self._welch_info),
+                tuple(i.taper for i in self._welch_info),
+                stage_dtype=self.stage_dtype,
+            )
+            if self.has_lagged:
+                out["lagged"] = lag
+            if ws:
+                count = jnp.sum(mask.astype(jnp.float32))
+                out["moments"] = {
+                    key: {"sums": mom[k], "count": count}
+                    for k, (w, key) in enumerate(self.moment_windows.items())
+                }
+            for info, psd, n_seg in zip(self._welch_info, psds, n_segs):
+                out[info.name] = {"psd": psd * info.scale, "n_seg": n_seg}
+            for member in self._non_welch_extra:
+                out[member.name] = member.traverse(y, mask, z0)
+            return out
         if self.moment_windows:
             # ONE fused call serves the shared lagged entry AND every moment
             # window: the multi-window primitive accumulates all K windows
@@ -373,6 +446,9 @@ class _PlanGroup:
         w = hann_window(nperseg)
         scale = 1.0 / (fs * jnp.sum(w**2))
         ck = welch_chunk_kernel(nperseg, step, scale, self.backend)
+        # the megakernel path serves this member from the shared launch;
+        # the standalone chunk kernel remains the finalizer's tail path.
+        self._welch_info.append(_WelchInfo(name, nperseg, step, scale, w))
 
         def fin(state: PartialState):
             entry = state.stat[name]
@@ -455,14 +531,26 @@ class StatPlan:
     the independent estimator calls to float round-off.
     """
 
-    def __init__(self, requests: Sequence[StatRequest], d: int, backend: BackendSpec = None):
+    def __init__(
+        self,
+        requests: Sequence[StatRequest],
+        d: int,
+        backend: BackendSpec = None,
+        stage_dtype: Optional[str] = None,
+    ):
         if not requests:
             raise ValueError("a plan needs at least one request")
         self.backend = get_backend(backend)
         self.d = d
+        self.stage_dtype = stage_dtype
         self.groups = [
             _PlanGroup(
-                [r for r, _ in grp], [n for _, n in grp], d, self.backend, stride
+                [r for r, _ in grp],
+                [n for _, n in grp],
+                d,
+                self.backend,
+                stride,
+                stage_dtype=stage_dtype,
             )
             for stride, grp in _group_requests(requests)
         ]
@@ -552,11 +640,16 @@ class StatPlan:
 
 
 def fused_engine(
-    requests: Sequence[StatRequest], d: int, backend: BackendSpec = None
+    requests: Sequence[StatRequest],
+    d: int,
+    backend: BackendSpec = None,
+    stage_dtype: Optional[str] = None,
 ) -> StatPlan:
     """Compile estimator requests into a fused :class:`StatPlan` (the
-    product-monoid engine behind :func:`analyze`)."""
-    return StatPlan(requests, d, backend)
+    product-monoid engine behind :func:`analyze`).  ``stage_dtype``
+    (e.g. ``"bfloat16"``) narrows the megakernel's series staging while
+    keeping f32 accumulation."""
+    return StatPlan(requests, d, backend, stage_dtype=stage_dtype)
 
 
 def analyze(

@@ -85,26 +85,44 @@ _banded_matvec_vjp.defvjp(_banded_matvec_fwd, _banded_matvec_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _banded_matvec_jit(
+    diags: jax.Array,
+    x: jax.Array,
+    *,
+    block_rows: int,
+    interpret: bool,
+) -> jax.Array:
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    y = _banded_matvec_vjp(diags, x, block_rows, interpret)
+    return y[:, 0] if squeeze else y
+
+
 def banded_matvec(
     diags: jax.Array,
     x: jax.Array,
     *,
-    block_rows: int = 256,
+    block_rows: "int | None" = None,
     interpret: bool = False,
 ) -> jax.Array:
     """y = A x with b-banded A in diagonal storage.  Differentiable (custom
     VJP; both cotangents stay banded-local — see the module docstring).
+
+    ``block_rows=None`` resolves through the calibrated block table
+    (`repro.kernels.tiling.resolve_block`), outside the jit boundary.
 
     Args:
       diags: (d, 2b+1);  x: (d,) or (d, nrhs).
 
     Returns y with x's trailing shape, float32.
     """
-    squeeze = x.ndim == 1
-    if squeeze:
-        x = x[:, None]
-    y = _banded_matvec_vjp(diags, x, block_rows, interpret)
-    return y[:, 0] if squeeze else y
+    from ..tiling import resolve_block
+
+    block_rows = resolve_block("banded_matvec", "block_rows", block_rows)
+    return _banded_matvec_jit(
+        diags, x, block_rows=block_rows, interpret=interpret
+    )
 
 
 def banded_matvec_reference(diags: jax.Array, x: jax.Array) -> jax.Array:

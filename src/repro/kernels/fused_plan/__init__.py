@@ -1,0 +1,8 @@
+"""Persistent fused-plan megakernel: one grid walk serves a whole StatPlan.
+
+See `repro.kernels.fused_plan.kernel` for the device code and
+`repro.kernels.fused_plan.ops` for the public jit'd entry point
+(`repro.core.backend.PallasBackend.fused_plan_update` routes here).
+"""
+from .ops import fused_plan_update  # noqa: F401
+from .ref import fused_plan_update_ref  # noqa: F401

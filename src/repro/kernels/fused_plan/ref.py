@@ -1,0 +1,83 @@
+"""Naive jnp oracle for the fused-plan megakernel.
+
+Restates the megakernel's contract with the most direct jnp expressions
+available — per-lag einsums, per-window cumulative sums, per-segment rfft —
+with no tiling, no offset tables, and no shared code with the kernel
+beyond the argument convention.  tests/test_megakernel.py pins both the
+Pallas megakernel and the backend-level jnp composition against this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_plan_update_ref(
+    y_padded: jax.Array,
+    start_mask: jax.Array,
+    z0,
+    max_lag: int,
+    windows: tuple = (),
+    seg_lens: tuple = (),
+    seg_steps: tuple = (),
+    tapers: tuple = (),
+    detrend: bool = True,
+) -> tuple:
+    """(lag, mom | None, psds, n_segs) by direct evaluation.
+
+    Same contract as the backend primitive: ``lag[h] = Σ_{s: mask} y_s
+    y_{s+h}ᵀ``; ``mom[k] = Σ_{s: mask} Σ_{j<windows[k]} [y_{s+j},
+    y²_{s+j}]``; for Welch member j, ``psds[j]`` sums the detrended,
+    tapered |rfft|² of every segment whose global start ``z0 + c`` is a
+    multiple of ``seg_steps[j]`` with ``c < L`` and ``start_mask[c]``, and
+    ``n_segs[j]`` counts them.
+    """
+    if y_padded.ndim == 1:
+        y_padded = y_padded[:, None]
+    y = y_padded.astype(jnp.float32)
+    L = start_mask.shape[0]
+    w_max = max(windows) if windows else 1
+    l_max = max(seg_lens) if seg_lens else 1
+    need = L + max(max_lag, w_max - 1, l_max - 1)
+    if y.shape[0] < need:
+        y = jnp.pad(y, ((0, need - y.shape[0]), (0, 0)))
+    m = start_mask.astype(jnp.float32)
+
+    head = jnp.where(start_mask[:, None], y[:L], 0.0)
+    lag = jnp.stack(
+        [jnp.einsum("ti,tj->ij", head, y[h : L + h]) for h in range(max_lag + 1)]
+    )
+
+    mom = None
+    if windows:
+        rows = []
+        for w in windows:
+            s1 = jnp.stack([jnp.sum(y[s : s + w], axis=0) for s in range(L)])
+            s2 = jnp.stack(
+                [jnp.sum(y[s : s + w] ** 2, axis=0) for s in range(L)]
+            )
+            rows.append(
+                jnp.stack(
+                    [jnp.sum(m[:, None] * s1, axis=0), jnp.sum(m[:, None] * s2, axis=0)]
+                )
+            )
+        mom = jnp.stack(rows)
+
+    z0 = jnp.asarray(z0, jnp.int32)
+    psds, n_segs = [], []
+    for Lseg, step, taper in zip(seg_lens, seg_steps, tapers):
+        taper = taper.astype(jnp.float32)
+        psd = jnp.zeros((Lseg // 2 + 1, y.shape[1]), jnp.float32)
+        n = jnp.asarray(0.0, jnp.float32)
+        for c in range(L):
+            aligned = (z0 + c) % step == 0
+            ok = jnp.logical_and(aligned, start_mask[c]).astype(jnp.float32)
+            seg = y[c : c + Lseg]
+            if detrend:
+                seg = seg - jnp.mean(seg, axis=0, keepdims=True)
+            f = jnp.fft.rfft(seg * taper[:, None], axis=0)
+            psd = psd + ok * jnp.abs(f) ** 2
+            n = n + ok
+        psds.append(psd)
+        n_segs.append(n)
+    return lag, mom, tuple(psds), tuple(n_segs)

@@ -58,6 +58,75 @@ def _dft_power_kernel(
         out_ref[j] = re * re + im * im
 
 
+def _csd_kernel(
+    seg_ref, cos_ref, sin_ref, re_ref, im_ref, *, detrend: bool, block_s: int
+):
+    cosm = cos_ref[...]  # (L, F) taper-folded twiddles
+    sinm = sin_ref[...]
+    for j in range(block_s):
+        y = seg_ref[j].astype(jnp.float32)  # (L, d)
+        if detrend:
+            y = y - jnp.mean(y, axis=0, keepdims=True)
+        re = jax.lax.dot_general(
+            cosm, y, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (F, d)
+        im = jax.lax.dot_general(
+            sinm, y, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        # f_i conj(f_j) with f = re + i·im, emitted as two real planes
+        # (Pallas has no complex dtypes); ops.py recombines re + i·im.
+        re_ref[j] = re[:, :, None] * re[:, None, :] + im[:, :, None] * im[:, None, :]
+        im_ref[j] = im[:, :, None] * re[:, None, :] - re[:, :, None] * im[:, None, :]
+
+
+def segment_csd_pallas(
+    segments: jax.Array,
+    cos_mat: jax.Array,
+    sin_mat: jax.Array,
+    *,
+    detrend: bool = True,
+    block_s: int = 8,
+    interpret: bool = False,
+) -> tuple:
+    """Per-segment cross-spectral products of a zero-padded segment stack.
+
+    Same tiling scheme as :func:`segment_dft_power_pallas`; per segment the
+    two twiddle contractions are followed by a VPU batched outer product
+    over the channel axis.  Returns (re, im), both (S_padded, F, d, d)
+    float32 — the real and imaginary planes of ``rfft_i · conj(rfft_j)``.
+    """
+    s_pad, L, d = segments.shape
+    F = cos_mat.shape[1]
+    if cos_mat.shape != (L, F) or sin_mat.shape != (L, F):
+        raise ValueError(
+            f"twiddle matrices must be ({L}, {F}), got {cos_mat.shape}/{sin_mat.shape}"
+        )
+    if s_pad % block_s != 0:
+        raise ValueError(
+            f"padded segment count {s_pad} must be a multiple of block_s={block_s}"
+        )
+    grid = (s_pad // block_s,)
+
+    return pl.pallas_call(
+        functools.partial(_csd_kernel, detrend=detrend, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s, L, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((L, F), lambda i: (0, 0)),  # resident twiddles
+            pl.BlockSpec((L, F), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, F, d, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((block_s, F, d, d), lambda i: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_pad, F, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((s_pad, F, d, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(segments, cos_mat, sin_mat)
+
+
 def segment_dft_power_pallas(
     segments: jax.Array,
     cos_mat: jax.Array,

@@ -1,31 +1,74 @@
-"""Public jit'd wrapper for the segment-DFT power kernel.
+"""Public jit'd wrappers for the segment-DFT kernels.
 
 Handles: segment-count padding to a ``block_s`` multiple (with all-zero
 segments, sliced off after the call), twiddle-matrix construction, f32
-promotion, and the interpret switch for CPU validation.  This is the Pallas
-half of the compute-backend registry's ``segment_fft_power`` primitive
+promotion, complex recombination for the CSD form, and the interpret
+switch for CPU validation.  These are the Pallas half of the compute
+registry's ``segment_fft_power`` / ``segment_csd`` primitives
 (`repro.core.backend.PallasBackend`); prefer routing through the registry.
+
+``block_s`` resolves through the calibrated block table
+(`repro.kernels.tiling.resolve_block`) OUTSIDE the jit boundary — a newly
+installed table changes the next call's geometry instead of being baked
+into a stale trace; pass ``block_s=`` explicitly to override.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .kernel import segment_dft_power_pallas
-from .ref import dft_power_matrices, segment_dft_power_ref
+from ..tiling import resolve_block
+from .kernel import segment_csd_pallas, segment_dft_power_pallas
+from .ref import dft_power_matrices, segment_csd_ref, segment_dft_power_ref
+
+
+def _pad_segments(segments: jax.Array, block_s: int):
+    s = segments.shape[0]
+    block_s = max(1, min(block_s, max(s, 1)))
+    s_pad = -(-max(s, 1) // block_s) * block_s
+    segs = jnp.pad(
+        segments.astype(jnp.float32), ((0, s_pad - s), (0, 0), (0, 0))
+    )
+    return segs, block_s
+
+
+def _check_segments(segments: jax.Array, taper: jax.Array):
+    if segments.ndim != 3:
+        raise ValueError(f"segments must be (S, L, d), got {segments.shape}")
+    L = segments.shape[1]
+    if taper.shape != (L,):
+        raise ValueError(f"taper must be ({L},), got {taper.shape}")
 
 
 @functools.partial(
     jax.jit, static_argnames=("detrend", "block_s", "interpret")
 )
+def _segment_fft_power_jit(
+    segments: jax.Array,
+    taper: jax.Array,
+    *,
+    detrend: bool,
+    block_s: int,
+    interpret: bool,
+) -> jax.Array:
+    s, L, d = segments.shape
+    C, Sn = dft_power_matrices(L, taper)
+    segs, block_s = _pad_segments(segments, block_s)
+    out = segment_dft_power_pallas(
+        segs, C, Sn, detrend=detrend, block_s=block_s, interpret=interpret
+    )
+    return out[:s]
+
+
 def segment_fft_power(
     segments: jax.Array,
     taper: jax.Array,
     detrend: bool = True,
     *,
-    block_s: int = 8,
+    block_s: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Per-segment one-sided power |rfft((seg − mean)·taper)|², via Pallas.
@@ -39,24 +82,64 @@ def segment_fft_power(
     Args:
       segments: (S, L, d), any float dtype (f32 accumulation).
       taper: (L,) window function (e.g. Hann).
+      block_s: segments per grid step; None resolves through the calibrated
+        block table, else the built-in default.
 
     Returns (S, L//2+1, d) float32.
     """
-    if segments.ndim != 3:
-        raise ValueError(f"segments must be (S, L, d), got {segments.shape}")
-    s, L, d = segments.shape
-    if taper.shape != (L,):
-        raise ValueError(f"taper must be ({L},), got {taper.shape}")
-    C, Sn = dft_power_matrices(L, taper)
-    block_s = max(1, min(block_s, max(s, 1)))
-    s_pad = -(-max(s, 1) // block_s) * block_s
-    segs = jnp.pad(
-        segments.astype(jnp.float32), ((0, s_pad - s), (0, 0), (0, 0))
+    _check_segments(segments, taper)
+    block_s = resolve_block("segment_fft_power", "block_s", block_s)
+    return _segment_fft_power_jit(
+        segments, taper, detrend=detrend, block_s=block_s, interpret=interpret
     )
-    out = segment_dft_power_pallas(
+
+
+@functools.partial(
+    jax.jit, static_argnames=("detrend", "block_s", "interpret")
+)
+def _segment_csd_jit(
+    segments: jax.Array,
+    taper: jax.Array,
+    *,
+    detrend: bool,
+    block_s: int,
+    interpret: bool,
+) -> jax.Array:
+    s, L, d = segments.shape
+    C, Sn = dft_power_matrices(L, taper)
+    segs, block_s = _pad_segments(segments, block_s)
+    re, im = segment_csd_pallas(
         segs, C, Sn, detrend=detrend, block_s=block_s, interpret=interpret
     )
-    return out[:s]
+    return jax.lax.complex(re[:s], im[:s])
+
+
+def segment_csd(
+    segments: jax.Array,
+    taper: jax.Array,
+    detrend: bool = True,
+    *,
+    block_s: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-segment cross-spectral products ``rfft_i · conj(rfft_j)``.
+
+    The complex cross-spectra enter the kernel as four REAL contractions of
+    the same resident segment (re/im twiddle matmuls, then a channel outer
+    product); the complex dtype only materializes on the way out — Pallas
+    carries no complex arrays.
+
+    Args:
+      segments: (S, L, d), any float dtype (f32 accumulation).
+      taper: (L,) window function.
+
+    Returns (S, L//2+1, d, d) complex64, Hermitian in (i, j).
+    """
+    _check_segments(segments, taper)
+    block_s = resolve_block("segment_csd", "block_s", block_s)
+    return _segment_csd_jit(
+        segments, taper, detrend=detrend, block_s=block_s, interpret=interpret
+    )
 
 
 def segment_fft_power_reference(
@@ -64,3 +147,10 @@ def segment_fft_power_reference(
 ) -> jax.Array:
     """Matmul-form oracle re-export used by tests/benchmarks."""
     return segment_dft_power_ref(segments, taper, detrend)
+
+
+def segment_csd_reference(
+    segments: jax.Array, taper: jax.Array, detrend: bool = True
+) -> jax.Array:
+    """rfft-form oracle re-export used by tests/benchmarks."""
+    return segment_csd_ref(segments, taper, detrend)

@@ -44,3 +44,15 @@ def segment_dft_power_ref(
     re = jnp.einsum("std,tf->sfd", y, C)
     im = jnp.einsum("std,tf->sfd", y, S)
     return re * re + im * im
+
+
+def segment_csd_ref(
+    segments: jax.Array, taper: jax.Array, detrend: bool = True
+) -> jax.Array:
+    """rfft-form oracle: (S, L, d) segments → (S, L//2+1, d, d) complex64
+    per-segment cross-spectral products ``rfft_i · conj(rfft_j)``."""
+    y = segments.astype(jnp.float32)
+    if detrend:
+        y = y - jnp.mean(y, axis=1, keepdims=True)
+    f = jnp.fft.rfft(y * taper.astype(jnp.float32)[None, :, None], axis=1)
+    return jnp.einsum("sfi,sfj->sfij", f, jnp.conj(f))

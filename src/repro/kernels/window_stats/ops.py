@@ -1,19 +1,28 @@
 """Public jit'd wrappers for the window_stats kernels.
 
-Handles: zero-padding to a tile multiple PLUS one guaranteed all-zero halo
-tile (the kernels' boundary contract), dtype promotion (f32 accumulation),
+Handles: zero-padding to a tile multiple (plus one all-zero halo tile
+whenever the kernel reaches past its start row — halo-free calls skip it,
+see `repro.kernels.tiling.pad_tiles`), dtype promotion (f32 accumulation),
 normalization into autocovariances, and the interpret switch for CPU
 validation.  These wrappers are the Pallas half of the compute-backend
 registry (`repro.core.backend.PallasBackend`); prefer routing through the
 registry unless you need the raw kernels.
+
+Tile sizes resolve through the calibrated block table
+(`repro.kernels.tiling.resolve_block`) OUTSIDE the jit boundary — a newly
+installed table (``calibrate(tune_blocks=True)``) changes the next call's
+geometry instead of being baked into a stale trace; pass ``block_t=``
+explicitly to override.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..tiling import clamp_block_t, pad_tiles, resolve_block
 from .kernel import (
     cross_window_stats_pallas,
     fused_lag_moments_pallas,
@@ -22,39 +31,15 @@ from .kernel import (
 from .ref import normalize_windows, window_stats_ref
 
 
-def _clamp_block_t(block_t: int, n: int, min_tile: int) -> int:
-    """Positive, contract-satisfying tile size for ANY series length.
-
-    The tile never exceeds the (rounded-up) series length, never drops below
-    the kernel's per-tile window requirement (``min_tile``: max_lag for the
-    lag kernel, window for the moments kernel), and is at least 1 — so the
-    grid ``n_pad // block_t`` is always ≥ 1, including tiny series with
-    n < max_lag and the degenerate n == 0.
-    """
-    return max(min(block_t, max(n, 1)), min_tile, 1)
-
-
-def _pad_tiles(x: jax.Array, block_t: int) -> jax.Array:
-    """Zero-pad (n, d) to a multiple of block_t plus one all-zero halo tile."""
-    n = x.shape[0]
-    n_pad = -(-max(n, 1) // block_t) * block_t + block_t
-    return jnp.pad(x.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
-
-
 @functools.partial(jax.jit, static_argnames=("max_lag", "block_t", "interpret"))
-def cross_lagged_sums(
+def _cross_lagged_sums_jit(
     a: jax.Array,
     b: jax.Array,
     max_lag: int,
     *,
-    block_t: int = 512,
-    interpret: bool = False,
+    block_t: int,
+    interpret: bool,
 ) -> jax.Array:
-    """S(h) = Σ_k a_k b_{k+h}ᵀ for h = 0..max_lag, via the Pallas kernel.
-
-    ``a`` may be shorter than ``b`` (it is zero-extended on the right); both
-    are computed in f32 accumulation whatever the input dtype.
-    """
     if a.ndim == 1:
         a = a[:, None]
     if b.ndim == 1:
@@ -62,22 +47,41 @@ def cross_lagged_sums(
     if a.shape[0] < b.shape[0]:
         a = jnp.pad(a, ((0, b.shape[0] - a.shape[0]), (0, 0)))
     n = b.shape[0]
-    block_t = _clamp_block_t(block_t, n, max_lag)
+    block_t = clamp_block_t(block_t, n, max_lag)
+    halo = 1 if max_lag > 0 else 0
     return cross_window_stats_pallas(
-        _pad_tiles(a, block_t),
-        _pad_tiles(b, block_t),
+        pad_tiles(a, block_t, halo=halo),
+        pad_tiles(b, block_t, halo=halo),
         max_lag,
         block_t=block_t,
         interpret=interpret,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("max_lag", "block_t", "interpret"))
+def cross_lagged_sums(
+    a: jax.Array,
+    b: jax.Array,
+    max_lag: int,
+    *,
+    block_t: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """S(h) = Σ_k a_k b_{k+h}ᵀ for h = 0..max_lag, via the Pallas kernel.
+
+    ``a`` may be shorter than ``b`` (it is zero-extended on the right); both
+    are computed in f32 accumulation whatever the input dtype.
+    """
+    block_t = resolve_block("lagged_sums", "block_t", block_t)
+    return _cross_lagged_sums_jit(
+        a, b, max_lag, block_t=block_t, interpret=interpret
+    )
+
+
 def lagged_sums(
     x: jax.Array,
     max_lag: int,
     *,
-    block_t: int = 512,
+    block_t: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     """S(h) = Σ_k X_k X_{k+h}ᵀ for h = 0..max_lag, via the Pallas kernel.
@@ -85,16 +89,39 @@ def lagged_sums(
     Args:
       x: (n, d) series, any float dtype (computed in f32 accumulation).
     """
-    return cross_lagged_sums(x, x, max_lag, block_t=block_t, interpret=interpret)
+    block_t = resolve_block("lagged_sums", "block_t", block_t)
+    return _cross_lagged_sums_jit(
+        x, x, max_lag, block_t=block_t, interpret=interpret
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("max_lag", "block_t", "interpret"))
+def _masked_lagged_sums_jit(
+    y_padded: jax.Array,
+    start_mask: jax.Array,
+    max_lag: int,
+    *,
+    block_t: int,
+    interpret: bool,
+) -> jax.Array:
+    if y_padded.ndim == 1:
+        y_padded = y_padded[:, None]
+    L = start_mask.shape[0]
+    need = L + max_lag
+    if y_padded.shape[0] < need:
+        y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
+    head = jnp.where(start_mask[:, None], y_padded[:L].astype(jnp.float32), 0.0)
+    return _cross_lagged_sums_jit(
+        head, y_padded, max_lag, block_t=block_t, interpret=interpret
+    )
+
+
 def masked_lagged_sums(
     y_padded: jax.Array,
     start_mask: jax.Array,
     max_lag: int,
     *,
-    block_t: int = 512,
+    block_t: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     """S(h) = Σ_{s: start_mask[s]} y_s y_{s+h}ᵀ — the ChunkKernel contract.
@@ -108,53 +135,102 @@ def masked_lagged_sums(
         start (zero-extended if shorter than L + max_lag).
       start_mask: (L,) bool.
     """
-    if y_padded.ndim == 1:
-        y_padded = y_padded[:, None]
-    L = start_mask.shape[0]
-    need = L + max_lag
-    if y_padded.shape[0] < need:
-        y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
-    head = jnp.where(start_mask[:, None], y_padded[:L].astype(jnp.float32), 0.0)
-    return cross_lagged_sums(
-        head, y_padded, max_lag, block_t=block_t, interpret=interpret
+    block_t = resolve_block("masked_lagged_sums", "block_t", block_t)
+    return _masked_lagged_sums_jit(
+        y_padded, start_mask, max_lag, block_t=block_t, interpret=interpret
     )
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_t", "interpret"))
+def _windowed_moments_jit(
+    x: jax.Array,
+    window: int,
+    *,
+    block_t: int,
+    interpret: bool,
+) -> jax.Array:
+    if x.ndim == 1:
+        x = x[:, None]
+    n = x.shape[0]
+    n_win = n - window + 1
+    block_t = clamp_block_t(block_t, n, window)
+    halo = 1 if window > 1 else 0
+    out = window_moments_pallas(
+        pad_tiles(x, block_t, halo=halo),
+        window,
+        block_t=block_t,
+        interpret=interpret,
+    )
+    return jnp.moveaxis(out[:, :n_win], 0, 1)
+
+
 def windowed_moments(
     x: jax.Array,
     window: int,
     *,
-    block_t: int = 512,
+    block_t: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Sliding-window moment sums: (n_win, 2, d) of [Σ x, Σ x²] per window.
 
     Windows are the n - window + 1 full width-``window`` slices of x.
     """
-    if x.ndim == 1:
-        x = x[:, None]
     n = x.shape[0]
-    n_win = n - window + 1
-    if n_win < 1:
+    if n - window + 1 < 1:
         raise ValueError(f"series of length {n} has no full window of width {window}")
-    block_t = _clamp_block_t(block_t, n, window)
-    out = window_moments_pallas(
-        _pad_tiles(x, block_t), window, block_t=block_t, interpret=interpret
+    block_t = resolve_block("windowed_moments", "block_t", block_t)
+    return _windowed_moments_jit(
+        x, window, block_t=block_t, interpret=interpret
     )
-    return jnp.moveaxis(out[:, :n_win], 0, 1)
 
 
 @functools.partial(
     jax.jit, static_argnames=("max_lag", "window", "block_t", "interpret")
 )
+def _fused_lagged_moments_jit(
+    y_padded: jax.Array,
+    start_mask: jax.Array,
+    max_lag: int,
+    window: tuple,
+    *,
+    block_t: int,
+    interpret: bool,
+) -> tuple:
+    windows, single = normalize_windows(window)
+    if y_padded.ndim == 1:
+        y_padded = y_padded[:, None]
+    L = start_mask.shape[0]
+    reach = max(max_lag, max(windows) - 1)
+    need = L + reach
+    if y_padded.shape[0] < need:
+        y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
+    y = y_padded.astype(jnp.float32)
+    head = jnp.where(start_mask[:, None], y[:L], 0.0)
+    head = jnp.pad(head, ((0, y.shape[0] - L), (0, 0)))
+    m = jnp.pad(start_mask.astype(jnp.float32)[:, None], ((0, y.shape[0] - L), (0, 0)))
+
+    n = y.shape[0]
+    block_t = clamp_block_t(block_t, n, max(reach, 1))
+    halo = 1 if reach > 0 else 0
+    lag, mom = fused_lag_moments_pallas(
+        pad_tiles(head, block_t, halo=halo),
+        pad_tiles(y, block_t, halo=halo),
+        pad_tiles(m, block_t, halo=halo),
+        max_lag,
+        windows,
+        block_t=block_t,
+        interpret=interpret,
+    )
+    return lag, (mom[0] if single else mom)
+
+
 def fused_lagged_moments(
     y_padded: jax.Array,
     start_mask: jax.Array,
     max_lag: int,
     window: "int | tuple",
     *,
-    block_t: int = 512,
+    block_t: Optional[int] = None,
     interpret: bool = False,
 ) -> tuple:
     """Masked lagged sums AND masked windowed-moment sums, one HBM read.
@@ -177,41 +253,18 @@ def fused_lagged_moments(
       mom: (2, d) for an int window, (K, 2, d) for a tuple —
         Σ_{s: mask} Σ_{j<w} [y_{s+j}, y²_{s+j}] per window w.
     """
-    windows, single = normalize_windows(window)
-    if y_padded.ndim == 1:
-        y_padded = y_padded[:, None]
-    L = start_mask.shape[0]
-    reach = max(max_lag, max(windows) - 1)
-    need = L + reach
-    if y_padded.shape[0] < need:
-        y_padded = jnp.pad(y_padded, ((0, need - y_padded.shape[0]), (0, 0)))
-    y = y_padded.astype(jnp.float32)
-    head = jnp.where(start_mask[:, None], y[:L], 0.0)
-    head = jnp.pad(head, ((0, y.shape[0] - L), (0, 0)))
-    m = jnp.pad(start_mask.astype(jnp.float32)[:, None], ((0, y.shape[0] - L), (0, 0)))
-
-    n = y.shape[0]
-    block_t = _clamp_block_t(block_t, n, max(reach, 1))
-    lag, mom = fused_lag_moments_pallas(
-        _pad_tiles(head, block_t),
-        _pad_tiles(y, block_t),
-        _pad_tiles(m, block_t),
-        max_lag,
-        windows,
-        block_t=block_t,
-        interpret=interpret,
+    window = window if isinstance(window, int) else tuple(window)
+    block_t = resolve_block("fused_lagged_moments", "block_t", block_t)
+    return _fused_lagged_moments_jit(
+        y_padded, start_mask, max_lag, window, block_t=block_t, interpret=interpret
     )
-    return lag, (mom[0] if single else mom)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("max_lag", "block_t", "interpret", "normalization")
-)
 def autocovariance(
     x: jax.Array,
     max_lag: int,
     *,
-    block_t: int = 512,
+    block_t: Optional[int] = None,
     interpret: bool = False,
     normalization: str = "paper",
 ) -> jax.Array:

@@ -206,6 +206,40 @@ def test_segment_fft_power_parity(S, L, d, detrend):
     )
 
 
+@pytest.mark.parametrize("detrend", [True, False])
+@pytest.mark.parametrize("S,L,d", [(5, 64, 2), (3, 17, 1), (9, 16, 3), (1, 32, 2)])
+def test_segment_csd_parity(S, L, d, detrend):
+    """Complex cross-spectra from four real contractions: the Pallas
+    ``segment_csd`` (re/im twiddle matmuls + channel outer products,
+    recombined off-kernel) ≡ the jnp rfft oracle, Hermitian per (i, j),
+    with the diagonal equal to ``segment_fft_power``."""
+    segs = jax.random.normal(jax.random.PRNGKey(11), (S, L, d))
+    taper = jnp.hanning(L)
+    ref = JNP.segment_csd(segs, taper, detrend)
+    out = PALLAS.segment_csd(segs, taper, detrend)
+    assert out.shape == ref.shape == (S, L // 2 + 1, d, d)
+    assert jnp.iscomplexobj(out)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-4 * L)
+    # Hermitian in the channel pair, diagonal == the PSD primitive
+    np.testing.assert_allclose(
+        np.asarray(out), np.conj(np.swapaxes(np.asarray(out), 2, 3)),
+        atol=1e-5 * L,
+    )
+    power = PALLAS.segment_fft_power(segs, taper, detrend)
+    diag = np.real(np.asarray(out)[:, :, np.arange(d), np.arange(d)])
+    np.testing.assert_allclose(diag, power, rtol=1e-3, atol=1e-4 * L)
+
+
+def test_welch_csd_cross_backend():
+    from repro.core.estimators.spectral import welch_csd
+
+    x = _series(2048, 3, seed=21)
+    fj, cj = welch_csd(x, nperseg=64, backend="jnp")
+    fp, cp = welch_csd(x, nperseg=64, backend="pallas")
+    np.testing.assert_allclose(fj, fp)
+    np.testing.assert_allclose(cj, cp, rtol=2e-3, atol=1e-5)
+
+
 def test_segment_fft_power_large_L_twiddle_precision():
     """The twiddle phase index t·f overflows f32 past L ≈ 4k; the exact
     mod-L integer reduction keeps the matmul DFT tight at the sizes the

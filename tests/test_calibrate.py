@@ -24,6 +24,14 @@ from repro.core.backend import (
 pytestmark = pytest.mark.backend
 
 
+@pytest.fixture(autouse=True)
+def _isolate_active_table():
+    """Tests install tables process-wide (calibrate / tune_blocks /
+    set_active_table); reset to lazy read-through afterwards."""
+    yield
+    cal.set_active_table(None)
+
+
 def _table(thresholds, platform=None, source="test"):
     return cal.CalibrationTable(
         platform or jax.default_backend(), dict(thresholds), source
@@ -62,8 +70,10 @@ def _drive_all_primitives(be):
     be.masked_lagged_sums(y, mask, 4)
     be.windowed_moments(x, 8)
     be.segment_fft_power(segs, taper)
+    be.segment_csd(segs, taper)
     be.banded_matvec(diags, x[:, 0])
     be.fused_lagged_moments(y, mask, 4, 8)
+    be.fused_plan_update(y, mask, 0, 4, (8,), (16,), (8,), (taper,))
 
 
 def test_default_table_off_accelerator_never_picks_pallas():
@@ -148,3 +158,121 @@ def test_registry_auto_has_no_hardcoded_row_constant():
     auto = get_backend("auto")
     assert not hasattr(auto, "min_rows")
     assert set(auto.table.thresholds) == set(cal.PRIMITIVES)
+
+# ------------------------------------------------- PR 7: blocks + stale cache
+
+
+def test_stale_cache_missing_primitive_falls_back_to_builtin():
+    """Satellite-6 pin: a cached table that predates ``fused_plan_update``
+    (or any newly registered primitive) must degrade to the BUILT-IN
+    default for the table's platform — never a KeyError, never a blanket
+    "always pallas"."""
+    old = {p: 0.0 for p in cal.PRIMITIVES if p != "fused_plan_update"}
+    stale_cpu = _table(old, platform="cpu", source="cache")
+    assert math.isinf(stale_cpu.crossover("fused_plan_update"))
+    stale_tpu = _table(old, platform="tpu", source="cache")
+    assert stale_tpu.crossover("fused_plan_update") == 4096.0
+    # dispatch through the auto policy: the missing primitive quietly runs
+    # on jnp (cpu built-in = inf), everything present still crosses over
+    rec = _Recording()
+    auto = AutoBackend(pallas_backend=rec, table=_table(old, platform="cpu"))
+    _drive_all_primitives(auto)
+    assert "fused_plan_update" not in rec.calls
+    assert "lagged_sums" in rec.calls
+
+
+def test_blocks_json_roundtrip_and_resolution(tmp_path, monkeypatch):
+    """Tuned tile configs survive the cache round-trip and steer
+    `repro.kernels.tiling.resolve_block` (override > table > default)."""
+    from repro.kernels.tiling import DEFAULT_BLOCKS, resolve_block
+
+    path = tmp_path / "calib.json"
+    monkeypatch.setenv("REPRO_CALIB_CACHE", str(path))
+    table = _table({p: math.inf for p in cal.PRIMITIVES}, source="measured")
+    table.blocks = {
+        "lagged_sums": {"block_t": 256},
+        "segment_fft_power": {"block_s": 2},
+    }
+    cal.save_table(table)
+    loaded = cal.load_table()
+    assert loaded.blocks == table.blocks
+    assert loaded.block_config("lagged_sums") == {"block_t": 256}
+    assert loaded.block_config("banded_matvec") == {}  # never tuned
+
+    cal.set_active_table(loaded)
+    assert cal.active_blocks("lagged_sums") == {"block_t": 256}
+    assert resolve_block("lagged_sums", "block_t", None) == 256
+    assert resolve_block("segment_fft_power", "block_s", None) == 2
+    # explicit override beats the table; untuned primitive gets the default
+    assert resolve_block("lagged_sums", "block_t", 64) == 64
+    assert (
+        resolve_block("banded_matvec", "block_rows", None)
+        == DEFAULT_BLOCKS["banded_matvec"]["block_rows"]
+    )
+    # reset → lazy read-through finds the same persisted blocks
+    cal.set_active_table(None)
+    assert cal.active_blocks("lagged_sums") == {"block_t": 256}
+
+
+def test_tune_blocks_records_all_tunable_primitives(tmp_path, monkeypatch):
+    path = tmp_path / "calib.json"
+    monkeypatch.setenv("REPRO_CALIB_CACHE", str(path))
+    monkeypatch.setattr(
+        cal, "BLOCK_CANDIDATES",
+        {"block_t": (32, 64), "block_s": (2, 4), "block_rows": (32,)},
+    )
+    table = cal.tune_blocks(n=48, iters=1, warmup=0, save=True)
+    assert set(table.blocks) == set(cal.TUNABLE_BLOCKS)
+    for prim, params in cal.TUNABLE_BLOCKS.items():
+        for param in params:
+            assert table.blocks[prim][param] in cal.BLOCK_CANDIDATES[param]
+    # persisted AND installed as the active table
+    assert cal.load_table().blocks == table.blocks
+    assert cal.active_table() is table
+
+
+def test_calibrate_tune_blocks_one_artifact(tmp_path, monkeypatch):
+    """``calibrate(tune_blocks=True)`` yields ONE table carrying both the
+    dispatch thresholds and the kernel geometry."""
+    path = tmp_path / "calib.json"
+    monkeypatch.setenv("REPRO_CALIB_CACHE", str(path))
+    monkeypatch.setattr(
+        cal, "BLOCK_CANDIDATES",
+        {"block_t": (32,), "block_s": (2,), "block_rows": (32,)},
+    )
+    table = cal.calibrate(
+        sizes=(32,), d=2, iters=1, warmup=0, save=True, tune_blocks=True
+    )
+    assert set(table.thresholds) == set(cal.PRIMITIVES)
+    assert set(table.blocks) == set(cal.TUNABLE_BLOCKS)
+    reloaded = cal.load_table()
+    assert reloaded.blocks == table.blocks
+
+
+def test_cli_show_and_bless(tmp_path, monkeypatch, capsys):
+    import json
+
+    path = tmp_path / "calib.json"
+    monkeypatch.setenv("REPRO_CALIB_CACHE", str(path))
+    assert cal.main(["--show"]) == 0
+    out = capsys.readouterr().out
+    assert "crossover thresholds" in out and "tuned tile configs" in out
+
+    def _payload(platform):
+        t = _table(
+            {p: 128.0 for p in cal.PRIMITIVES},
+            platform=platform,
+            source="measured",
+        )
+        t.blocks = {"lagged_sums": {"block_t": 128}}
+        return t.to_json()
+
+    # bless: wrong platform refused, right platform installed as the cache
+    alien = tmp_path / "alien.json"
+    alien.write_text(json.dumps(_payload("definitely-not-this-platform")))
+    assert cal.main(["--bless", str(alien)]) == 1
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_payload(jax.default_backend())))
+    assert cal.main(["--bless", str(good)]) == 0
+    assert path.exists()
+    assert cal.load_table().blocks == {"lagged_sums": {"block_t": 128}}

@@ -1,0 +1,200 @@
+"""Fused-plan megakernel suite (`repro.kernels.fused_plan`, PR 7).
+
+Pins the seventh backend primitive three ways:
+
+  * parity of the Pallas megakernel (interpret mode) AND the backend-level
+    jnp composition against the naive oracle (`fused_plan_update_ref`)
+    across the edge grid — chunks shorter than a tile, d = 1, odd segment
+    lengths, ``max_lag`` longer than the chunk, multi-window moment tuples;
+  * the launch-count acceptance pin: a 3-family plan's chunk update stages
+    the chunk through exactly ONE ``pallas_call`` — each tile enters VMEM
+    once and feeds lagged sums, every moment window, and the Welch member —
+    on both the interpret and the compiled trace;
+  * the measured-precision mode: ``stage_dtype="bfloat16"`` narrows the
+    HBM↔VMEM stream identically on both backends (bit-compatible rounding
+    of the staged series) while accumulating in f32.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import core
+
+from repro.core.backend import JnpBackend, PallasBackend
+from repro.core.plan import (
+    StatPlan,
+    autocovariance_request,
+    moments_request,
+    welch_request,
+)
+from repro.kernels.fused_plan import fused_plan_update, fused_plan_update_ref
+
+pytestmark = pytest.mark.backend
+
+
+def _args(n=96, d=2, max_lag=6, windows=(8,), seg_lens=(16,), seg_steps=(8,),
+          z0=0, seed=0, mask_holes=False):
+    reach = max([max_lag] + [w - 1 for w in windows] + [s - 1 for s in seg_lens])
+    y = jax.random.normal(jax.random.PRNGKey(seed), (n + reach, d))
+    mask = jnp.ones((n,), jnp.bool_)
+    if mask_holes:
+        mask = mask.at[n // 3 :: 5].set(False)
+    tapers = tuple(jnp.hanning(L) for L in seg_lens)
+    return (y, mask, z0, max_lag, windows, seg_lens, seg_steps, tapers)
+
+
+def _assert_tuple_close(got, want, rtol, atol=1e-4):
+    lag_g, mom_g, psds_g, nseg_g = got
+    lag_w, mom_w, psds_w, nseg_w = want
+    np.testing.assert_allclose(lag_g, lag_w, rtol=rtol, atol=atol)
+    assert (mom_g is None) == (mom_w is None)
+    if mom_w is not None:
+        np.testing.assert_allclose(mom_g, mom_w, rtol=rtol, atol=atol)
+    assert len(psds_g) == len(psds_w)
+    for pg, pw in zip(psds_g, psds_w):
+        np.testing.assert_allclose(pg, pw, rtol=10 * rtol, atol=10 * atol)
+    for ng, nw in zip(nseg_g, nseg_w):
+        np.testing.assert_allclose(ng, nw)
+
+
+EDGE_GRID = {
+    # n < block_t: the whole chunk fits in one (clamped) tile
+    "short_chunk": dict(n=40, block_t=512),
+    "d_one": dict(n=80, d=1, windows=(4, 12)),
+    "odd_seg_len": dict(n=90, seg_lens=(13,), seg_steps=(5,)),
+    "lag_exceeds_chunk": dict(n=24, max_lag=40, seg_lens=(), seg_steps=(),
+                              windows=(6,)),
+    "multi_window": dict(n=100, windows=(3, 8, 17), mask_holes=True),
+    "multi_welch": dict(n=128, seg_lens=(16, 24), seg_steps=(8, 12),
+                        z0=7, mask_holes=True),
+    "tiled_offset": dict(n=96, block_t=32, z0=11, mask_holes=True),
+    "no_moments": dict(n=64, windows=()),
+}
+
+
+@pytest.mark.parametrize("case", sorted(EDGE_GRID))
+def test_megakernel_edge_grid_parity(case):
+    kw = dict(EDGE_GRID[case])
+    block_t = kw.pop("block_t", 64)
+    args = _args(**kw)
+    want = fused_plan_update_ref(*args)
+    got_pallas = fused_plan_update(*args, block_t=block_t, interpret=True)
+    _assert_tuple_close(got_pallas, want, rtol=2e-3)
+    got_jnp = JnpBackend().fused_plan_update(*args)
+    _assert_tuple_close(got_jnp, want, rtol=2e-3)
+
+
+def test_backend_primitive_parity_jnp_vs_pallas():
+    args = _args(n=192, d=3, max_lag=9, windows=(5, 16), seg_lens=(32,),
+                 seg_steps=(16,), z0=13, mask_holes=True, seed=3)
+    got = PallasBackend(block_t=64, interpret=True).fused_plan_update(*args)
+    want = JnpBackend().fused_plan_update(*args)
+    _assert_tuple_close(got, want, rtol=2e-3)
+
+
+# ------------------------------------------------------- launch counting
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for sub in core.jaxprs_in_params(eqn.params):
+            n += _count_pallas_calls(sub)
+    return n
+
+
+@pytest.mark.parametrize("interpret", [True, False], ids=["interpret", "compiled"])
+def test_three_family_plan_is_one_kernel_launch(interpret):
+    """The acceptance pin: with lagged + moments + welch members live, the
+    plan's chunk update traces to exactly ONE ``pallas_call`` — one VMEM
+    staging of each tile feeds all three families.  The compiled variant
+    pins the same program geometry on the non-interpret lowering path."""
+    be = PallasBackend(block_t=64, interpret=interpret)
+    plan = StatPlan(
+        [
+            autocovariance_request(8),
+            moments_request(32),
+            welch_request(nperseg=64, overlap=32),
+        ],
+        d=2,
+        backend=be,
+    )
+    (group,) = plan.groups
+    assert group._use_megakernel
+
+    y = jax.random.normal(jax.random.PRNGKey(5), (256 + group.window - 1, 2))
+    mask = jnp.ones((256,), jnp.bool_)
+    jaxpr = jax.make_jaxpr(
+        lambda y, mask, z0: group._fused_chunk_kernel(y, mask, z0)
+    )(y, mask, jnp.asarray(0, jnp.int32))
+    assert _count_pallas_calls(jaxpr.jaxpr) == 1
+
+    if interpret:  # execute the interpret path: parity with the jnp plan
+        got = group._fused_chunk_kernel(y, mask, jnp.asarray(0, jnp.int32))
+        jnp_plan = StatPlan(
+            [
+                autocovariance_request(8),
+                moments_request(32),
+                welch_request(nperseg=64, overlap=32),
+            ],
+            d=2,
+            backend=JnpBackend(),
+        )
+        want = jnp_plan.groups[0]._fused_chunk_kernel(
+            y, mask, jnp.asarray(0, jnp.int32)
+        )
+        np.testing.assert_allclose(got["lagged"], want["lagged"], rtol=2e-3,
+                                   atol=1e-3)
+        np.testing.assert_allclose(got["welch"]["psd"], want["welch"]["psd"],
+                                   rtol=2e-2, atol=1e-3)
+        np.testing.assert_allclose(got["welch"]["n_seg"], want["welch"]["n_seg"])
+
+
+def test_single_family_plan_keeps_legacy_path():
+    """<2 families (or a backend without the primitive): no megakernel."""
+    be = PallasBackend(interpret=True)
+    plan = StatPlan([autocovariance_request(8)], d=2, backend=be)
+    assert not plan.groups[0]._use_megakernel
+
+    class _NoFused:
+        name = "nofused"
+
+        def __getattr__(self, item):
+            if item == "fused_plan_update":
+                raise AttributeError(item)
+            return getattr(JnpBackend(), item)
+
+    plan2 = StatPlan(
+        [autocovariance_request(8), moments_request(32)],
+        d=2,
+        backend=_NoFused(),
+    )
+    assert not plan2.groups[0]._use_megakernel
+    x = jax.random.normal(jax.random.PRNGKey(1), (400, 2))
+    out = plan2.finalize(plan2.from_chunk(x))
+    want = StatPlan(
+        [autocovariance_request(8), moments_request(32)], d=2, backend="jnp"
+    )
+    want_out = want.finalize(want.from_chunk(x))
+    np.testing.assert_allclose(
+        out["autocovariance"], want_out["autocovariance"], rtol=1e-5, atol=1e-5
+    )
+
+
+# ------------------------------------------------------- bf16 staging mode
+
+
+def test_bf16_staging_parity_and_accuracy():
+    args = _args(n=128, d=2, max_lag=5, windows=(8,), seg_lens=(16,),
+                 seg_steps=(8,), seed=7)
+    got = fused_plan_update(
+        *args, block_t=64, interpret=True, stage_dtype="bfloat16"
+    )
+    want = JnpBackend().fused_plan_update(*args, stage_dtype="bfloat16")
+    # both paths round the staged series through bf16 → tight agreement
+    _assert_tuple_close(got, want, rtol=2e-3)
+    # and the narrowed stream stays close to the f32 result
+    full = fused_plan_update(*args, block_t=64, interpret=True)
+    _assert_tuple_close(got, full, rtol=3e-2, atol=3e-2)
