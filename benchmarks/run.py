@@ -25,6 +25,7 @@ MODULES = [
     "bench_frame",          # SeriesFrame session API → BENCH_frame.json
     "bench_streaming",      # streaming monoid → BENCH_streaming.json
     "bench_gateway",        # async serving gateway → BENCH_gateway.json
+    "bench_chaos",          # fault-injection overhead + breaker recovery → BENCH_chaos.json
     "bench_overlap_scaling",  # paper Fig. 4
     "bench_mle",            # paper §5 / §7.2 Z-estimators
     "bench_spatial",        # paper §6 banded high-d

@@ -164,6 +164,41 @@ def main():
     tuned = table.blocks or "(none tuned — kernels use built-in defaults)"
     print(f"megakernel engaged for ≥2-family plans; tuned tile configs: {tuned}")
 
+    # 11. Operating under failure.  The serving stack assumes things break
+    #     and degrades instead of dying — every piece is deterministic and
+    #     rehearsable with the seedable fault injector
+    #     (`repro.runtime.chaos`):
+    #
+    #       * circuit breaker: wrap the compute in
+    #         ``CircuitBreakerBackend(primary=PallasBackend(),
+    #         fallback=JnpBackend())`` and a raising kernel is quarantined —
+    #         calls are served by the jnp oracle, the primary is probed
+    #         again after a call-counted cooldown, and every trip/recovery
+    #         shows up in ``breaker_metrics()`` and ``gw.health()``;
+    #       * verified checkpoints: every snapshot manifest carries per-leaf
+    #         crc32 checksums; restore verifies them and walks back past a
+    #         torn generation to the newest intact one (freshness is lost,
+    #         availability never); transient write failures retry with
+    #         backoff;
+    #       * tick deadline + degraded mode: set
+    #         ``GatewayConfig(tick_deadline=0.05)`` and a blown tick flips
+    #         ``gw.health()`` to "degraded" — lowest-priority queries are
+    #         shed with `Degraded` (distinct from `RateLimited`), snapshots
+    #         defer, and clean ticks recover to "ok";
+    #       * rehearse it before production does it to you:
+    #
+    #             from repro.runtime.chaos import FaultInjector, scoped
+    #             inj = FaultInjector(seed=0)
+    #             inj.fail("backend.fused_plan_update", calls=range(3, 6))
+    #             inj.corrupt("checkpoint.payload", calls={1})
+    #             inj.stall("gateway.tick", calls={4}, seconds=0.2)
+    #             with scoped(inj):
+    #                 ...   # drive the gateway; answers must not change
+    #
+    #     (tests/test_chaos.py drives exactly this schedule end-to-end and
+    #     pins that every non-rejected answer matches a fault-free run.)
+    print("chaos drill: PYTHONPATH=src python -m pytest tests/test_chaos.py -q")
+
 
 if __name__ == "__main__":
     main()

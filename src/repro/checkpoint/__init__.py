@@ -1,6 +1,9 @@
 from .manager import (
+    CheckpointCorrupt,
     CheckpointManager,
     latest_step,
+    list_steps,
+    restore_latest_intact,
     restore_pytree,
     save_pytree,
     sweep_tmp_dirs,

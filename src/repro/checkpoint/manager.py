@@ -7,16 +7,31 @@ Guarantees:
     mid-save never corrupts — or loses — an existing checkpoint.  Manager
     start sweeps crash debris (`sweep_tmp_dirs`), recovering any finished
     save that died between the renames;
-  * async — saves run on a daemon thread off the training critical path
-    (the step only pays for the host transfer of its arrays);
-  * retention — keep the newest K checkpoints;
+  * verification — the manifest carries a content checksum per leaf;
+    :func:`restore_pytree` verifies them on restore and raises the named
+    :class:`CheckpointCorrupt` on a torn or bit-flipped payload instead of
+    silently deserializing garbage into serving state;
+  * walk-back — retention keeps the newest K *generations*, and
+    :func:`restore_latest_intact` walks back from the newest generation
+    past any torn/corrupt one to the newest that verifies — a fault at the
+    worst possible moment costs freshness, never availability;
+  * async + retry — saves run on a daemon thread off the critical path
+    (the step only pays for the host transfer of its arrays), and a
+    transient write failure is retried with bounded backoff before it is
+    surfaced;
   * elasticity — :func:`restore_pytree` takes a target sharding tree, so a
     checkpoint written on one mesh restores onto ANY other mesh (shrunk /
     grown world after a failure): arrays land host-side then device_put
     against the new NamedShardings.
 
+Chaos hooks (`repro.runtime.chaos`): ``checkpoint.write`` fires at the top
+of every :func:`save_pytree` (a ``fail`` rule models a transient IO
+error); ``checkpoint.payload`` is checked after the arrays payload lands
+(a ``corrupt`` rule tears the on-disk bytes, exactly what the checksum
+verification and walk-back exist to survive).
+
 Format: one .npz per checkpoint (flattened pytree paths as keys) + a JSON
-manifest with step and tree structure.
+manifest with step, tree structure, and per-key crc32 checksums.
 """
 from __future__ import annotations
 
@@ -27,11 +42,24 @@ import shutil
 import tempfile
 import threading
 import time
-from typing import Any, Dict, Optional
+import zlib
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed content verification (torn write, bit rot)."""
+
+
+def _chaos():
+    # function-scope import: runtime/__init__ pulls fault.py, which imports
+    # THIS module — a top-level back-edge would deadlock that cycle
+    from ..runtime import chaos
+
+    return chaos
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
@@ -42,18 +70,42 @@ def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _checksum(arr: np.ndarray) -> int:
+    """Content crc32 over the raw leaf bytes (shape/dtype changes are caught
+    separately by the restore template check)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def save_pytree(tree: Any, directory: str, step: int) -> str:
     """Synchronous atomic save.  Returns the final checkpoint path."""
+    chaos = _chaos()
+    chaos.fire("checkpoint.write")  # injected transient IO failure point
     os.makedirs(directory, exist_ok=True)
     # Unique tmp name: two writers of the same step never collide, and a
     # crash mid-write leaves an identifiable orphan for sweep_tmp_dirs.
     tmp = tempfile.mkdtemp(prefix=f"tmp.{step}.", dir=directory)
     final = os.path.join(directory, f"step_{step:010d}")
     flat = _flatten(tree)
-    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    payload = os.path.join(tmp, "arrays.npz")
+    np.savez(payload, **flat)
+    if chaos.should_corrupt("checkpoint.payload"):
+        # tear the written payload in place: the manifest checksums below
+        # are computed from the INTACT arrays, so verification must refuse
+        # this generation and walk-back must skip it
+        with open(payload, "r+b") as f:
+            f.seek(max(os.path.getsize(payload) // 2, 0))
+            f.write(b"\x00CHAOS-TORN\x00")
     treedef = jax.tree.structure(tree)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump({"step": step, "treedef": str(treedef), "keys": sorted(flat)}, f)
+        json.dump(
+            {
+                "step": step,
+                "treedef": str(treedef),
+                "keys": sorted(flat),
+                "checksums": {k: _checksum(v) for k, v in flat.items()},
+            },
+            f,
+        )
     # Swap, never delete-then-rename: the old `shutil.rmtree(final)` +
     # `os.rename` pair lost the existing checkpoint for this step if the
     # process died between the two calls.  Move the old dir aside under a
@@ -115,25 +167,75 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _load_checksums(step_dir: str) -> Optional[Dict[str, int]]:
+    """The manifest's per-key checksums, or None for a pre-verification
+    checkpoint (older format: restores unverified rather than refusing)."""
+    try:
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError):
+        return None
+    sums = manifest.get("checksums")
+    if not isinstance(sums, dict):
+        return None
+    return {k: int(v) for k, v in sums.items()}
+
+
 def restore_pytree(
-    template: Any, directory: str, step: Optional[int] = None, shardings: Any = None
+    template: Any,
+    directory: str,
+    step: Optional[int] = None,
+    shardings: Any = None,
+    verify: bool = True,
 ) -> Any:
     """Restore into the structure of ``template``.
 
     ``shardings`` (optional pytree of NamedSharding) re-lays the arrays onto
     the *current* mesh — elastic restore across different world sizes.
+    ``verify`` (default on) checks each leaf against the manifest's content
+    checksum and raises :class:`CheckpointCorrupt` on a mismatch — a torn
+    or bit-flipped generation is refused loudly here, never deserialized
+    into serving state (checkpoints written before checksums existed carry
+    none and restore unverified).
     """
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
-    path = os.path.join(directory, f"step_{step:010d}", "arrays.npz")
-    data = np.load(path)
+    step_dir = os.path.join(directory, f"step_{step:010d}")
+    path = os.path.join(step_dir, "arrays.npz")
+    checksums = _load_checksums(step_dir) if verify else None
+    try:
+        data = np.load(path)
+    except Exception as e:  # truncated zip, missing file, ...
+        raise CheckpointCorrupt(
+            f"checkpoint step {step} under {directory} is unreadable: {e!r}"
+        ) from e
     flat_paths = jax.tree_util.tree_flatten_with_path(template)[0]
     leaves = []
     for p, leaf in flat_paths:
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
-        arr = data[key]
+        try:
+            arr = data[key]
+        except KeyError:
+            raise CheckpointCorrupt(
+                f"checkpoint step {step} under {directory} is missing leaf "
+                f"{key!r}"
+            ) from None
+        except Exception as e:  # zipfile.BadZipFile on a torn entry, ...
+            raise CheckpointCorrupt(
+                f"checkpoint leaf {key!r} of step {step} under {directory} "
+                f"is unreadable: {e!r}"
+            ) from e
+        if checksums is not None:
+            want = checksums.get(key)
+            got = _checksum(arr)
+            if want is not None and got != want:
+                raise CheckpointCorrupt(
+                    f"checkpoint leaf {key!r} of step {step} under "
+                    f"{directory} fails verification (crc32 {got} != "
+                    f"manifest {want}) — torn write or bit rot"
+                )
         if tuple(arr.shape) != tuple(jnp.shape(leaf)):
             # dtype is coerced below, but a silent shape change would only
             # blow up (or worse, broadcast) at first use, far from here
@@ -157,17 +259,71 @@ def restore_pytree(
     return restored
 
 
+def list_steps(directory: str) -> list:
+    """All on-disk generations under ``directory``, ascending."""
+    if not os.path.isdir(directory):
+        return []
+    return sorted(
+        int(n.split("_")[1])
+        for n in os.listdir(directory)
+        if n.startswith("step_")
+    )
+
+
+def restore_latest_intact(
+    template: Any, directory: str, shardings: Any = None
+) -> Tuple[Any, int, list]:
+    """Restore the newest generation that passes verification.
+
+    Walks the retained generations newest→oldest, skipping any that fail
+    content verification or are torn/unreadable (:class:`CheckpointCorrupt`)
+    — the corrupt-at-the-worst-moment failure mode costs freshness, never
+    availability.  Returns ``(state, step, skipped)`` where ``skipped``
+    lists the corrupt generations walked past (newest first).  Raises
+    ``FileNotFoundError`` when no generation exists at all, and
+    :class:`CheckpointCorrupt` when every retained generation is corrupt
+    (the caller decides whether a cold start is acceptable).
+    """
+    steps = list_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    skipped: list = []
+    for step in reversed(steps):
+        try:
+            state = restore_pytree(template, directory, step, shardings)
+            return state, step, skipped
+        except CheckpointCorrupt:
+            skipped.append(step)
+    raise CheckpointCorrupt(
+        f"every retained checkpoint generation under {directory} is corrupt "
+        f"(steps {skipped})"
+    )
+
+
 class CheckpointManager:
-    """Async checkpointing with retention + preemption flush.
+    """Async checkpointing with retention, write retry + preemption flush.
 
     save() enqueues a host-side snapshot and returns immediately; a daemon
-    thread serializes.  ``flush()`` (called by the preemption handler in
-    `repro.runtime.fault`) blocks until the queue drains.
+    thread serializes.  A failed write is retried ``retries`` times with
+    exponentially growing backoff (``backoff * 2**attempt`` seconds) before
+    the error is recorded — transient IO hiccups (full page cache, a
+    remounting network volume, an injected ``checkpoint.write`` fault)
+    don't silently cost the generation.  ``flush()`` (called by the
+    preemption handler in `repro.runtime.fault`) blocks until the queue
+    drains.
     """
 
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        retries: int = 2,
+        backoff: float = 0.05,
+    ):
         self.directory = directory
         self.keep = keep
+        self.retries = retries
+        self.backoff = backoff
         # a previous process that crashed mid-save left tmp/trash debris
         # (and possibly a complete-but-unrenamed checkpoint) behind
         self.recovered = sweep_tmp_dirs(directory)
@@ -175,7 +331,21 @@ class CheckpointManager:
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
         self.saved_steps: list[int] = []
+        self.retried_saves: int = 0
         self._errors: list[Exception] = []
+
+    def _save_with_retry(self, tree, step) -> None:
+        for attempt in range(self.retries + 1):
+            try:
+                save_pytree(tree, self.directory, step)
+                return
+            except Exception:
+                # a half-written unique tmp dir is left behind; the next
+                # attempt writes its own and sweep_tmp_dirs clears debris
+                if attempt == self.retries:
+                    raise
+                self.retried_saves += 1
+                time.sleep(self.backoff * (2 ** attempt))
 
     def _run(self):
         while True:
@@ -185,7 +355,7 @@ class CheckpointManager:
                 return
             tree, step = item
             try:
-                save_pytree(tree, self.directory, step)
+                self._save_with_retry(tree, step)
                 self.saved_steps.append(step)
                 self._gc()
             except Exception as e:  # pragma: no cover - surfaced via .errors

@@ -90,6 +90,7 @@ never an estimator rewrite.
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Protocol, Union, runtime_checkable
 
 import jax
@@ -100,6 +101,8 @@ __all__ = [
     "JnpBackend",
     "PallasBackend",
     "AutoBackend",
+    "CircuitBreakerBackend",
+    "PRIMITIVE_NAMES",
     "register_backend",
     "get_backend",
     "list_backends",
@@ -107,6 +110,20 @@ __all__ = [
 ]
 
 BackendSpec = Union[None, str, "Backend"]
+
+# The canonical primitive-contraction names of the Backend protocol below —
+# what the circuit breaker quarantines per-name and what
+# `repro.core.calibrate` measures per-name.
+PRIMITIVE_NAMES: tuple = (
+    "lagged_sums",
+    "masked_lagged_sums",
+    "windowed_moments",
+    "segment_fft_power",
+    "segment_csd",
+    "banded_matvec",
+    "fused_lagged_moments",
+    "fused_plan_update",
+)
 
 
 @runtime_checkable
@@ -692,6 +709,136 @@ class AutoBackend:
             detrend,
             stage_dtype=stage_dtype,
         )
+
+
+class CircuitBreakerBackend:
+    """Self-healing dispatch: quarantine a raising primitive, keep serving.
+
+    Wraps a ``primary`` backend (default: Pallas) and a ``fallback`` oracle
+    (default: jnp).  Each primitive carries its own breaker:
+
+      * **closed** (healthy): dispatch goes to the primary.  A primary
+        raise — a kernel build failure, an injected
+        ``backend.<primitive>`` fault (`repro.runtime.chaos`) — is caught,
+        the call is transparently served by the fallback, and after
+        ``trip_after`` consecutive failures the breaker **opens**;
+      * **open** (quarantined): the next ``cooldown_calls`` dispatches of
+        that primitive go straight to the fallback — the primary is not
+        even attempted, so a wedged kernel build can't stall serving;
+      * **half-open** (probing): once the cooldown is spent, one dispatch
+        probes the primary again.  Success closes the breaker (recovery);
+        failure re-opens it for another cooldown.
+
+    Every trip/recovery/fallback is recorded per primitive
+    (:meth:`breaker_metrics`) — `repro.serving.gateway.StatsGateway
+    .health` surfaces them when the served session runs on a breaker.
+
+    The cooldown is counted in *dispatch calls*, not wall time, so chaos
+    schedules replay deterministically.  Note primitive dispatch happens at
+    trace time: a jit program that compiled against the fallback keeps
+    using it for its shapes until re-traced — recovery applies to new
+    traces, which is exactly the safe direction (never resurrect a raising
+    kernel inside a cached program).
+    """
+
+    name = "breaker"
+
+    def __init__(
+        self,
+        primary: Optional[Backend] = None,
+        fallback: Optional[Backend] = None,
+        trip_after: int = 1,
+        cooldown_calls: int = 8,
+    ):
+        if trip_after < 1 or cooldown_calls < 1:
+            raise ValueError("trip_after and cooldown_calls must be >= 1")
+        self._primary = primary if primary is not None else PallasBackend()
+        self._fallback = fallback if fallback is not None else JnpBackend()
+        self.trip_after = trip_after
+        self.cooldown_calls = cooldown_calls
+        self._state: Dict[str, dict] = {}
+
+    def _st(self, primitive: str) -> dict:
+        st = self._state.get(primitive)
+        if st is None:
+            st = self._state[primitive] = {
+                "state": "closed",
+                "consecutive_failures": 0,
+                "cooldown_left": 0,
+                "trips": 0,
+                "recoveries": 0,
+                "probes": 0,
+                "primary_calls": 0,
+                "fallback_calls": 0,
+                "last_error": None,
+            }
+        return st
+
+    def _dispatch(self, primitive: str, *args, **kwargs):
+        from ..runtime import chaos
+
+        st = self._st(primitive)
+        if st["state"] == "open":
+            st["cooldown_left"] -= 1
+            if st["cooldown_left"] > 0:
+                st["fallback_calls"] += 1
+                return getattr(self._fallback, primitive)(*args, **kwargs)
+            st["state"] = "half-open"   # cooldown spent: this call probes
+            st["probes"] += 1
+        try:
+            chaos.fire(f"backend.{primitive}")
+            out = getattr(self._primary, primitive)(*args, **kwargs)
+        except Exception as e:
+            st["consecutive_failures"] += 1
+            st["last_error"] = repr(e)
+            if (
+                st["state"] == "half-open"
+                or st["consecutive_failures"] >= self.trip_after
+            ):
+                if st["state"] == "closed":
+                    st["trips"] += 1   # count closed→open transitions only
+                st["state"] = "open"
+                st["cooldown_left"] = self.cooldown_calls
+            st["fallback_calls"] += 1
+            return getattr(self._fallback, primitive)(*args, **kwargs)
+        if st["state"] == "half-open":
+            st["recoveries"] += 1
+        st["state"] = "closed"
+        st["consecutive_failures"] = 0
+        st["primary_calls"] += 1
+        return out
+
+    def __getattr__(self, name: str):
+        # one wrapper per primitive, lazily bound — a new primitive added
+        # to the protocol is covered without touching the breaker
+        if name in PRIMITIVE_NAMES:
+            fn = functools.partial(self._dispatch, name)
+            object.__setattr__(self, name, fn)  # cache for later lookups
+            return fn
+        raise AttributeError(
+            f"{type(self).__name__!s} object has no attribute {name!r}"
+        )
+
+    def breaker_metrics(self) -> dict:
+        """Per-primitive breaker state plus totals: trips, recoveries,
+        probes, primary/fallback call counts, last primary error."""
+        per = {k: dict(v) for k, v in sorted(self._state.items())}
+        return {
+            "primitives": per,
+            "trips": sum(v["trips"] for v in per.values()),
+            "recoveries": sum(v["recoveries"] for v in per.values()),
+            "fallback_calls": sum(v["fallback_calls"] for v in per.values()),
+            "open": sorted(
+                k for k, v in per.items() if v["state"] != "closed"
+            ),
+        }
+
+    def reset(self, primitive: Optional[str] = None) -> None:
+        """Operator override: forget breaker state (one primitive or all)."""
+        if primitive is None:
+            self._state.clear()
+        else:
+            self._state.pop(primitive, None)
 
 
 _REGISTRY: Dict[str, Backend] = {

@@ -50,6 +50,7 @@ import json
 import math
 import os
 import time
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -220,15 +221,26 @@ def cache_path(platform: Optional[str] = None) -> str:
 
 def load_table(platform: Optional[str] = None) -> Optional[CalibrationTable]:
     """The cached measured table for ``platform``, or None.  A cache written
-    on a different platform is ignored, never misapplied."""
+    on a different platform is ignored, never misapplied.  A corrupt cache
+    — truncated write, hand-edit gone wrong, valid JSON of the wrong shape
+    — degrades to the built-in defaults with a warning instead of taking
+    down every ``"auto"``-backend caller at first dispatch."""
     platform = platform or jax.default_backend()
     path = cache_path(platform)
     try:
         with open(path) as f:
             payload = json.load(f)
-    except (OSError, ValueError):
+        table = CalibrationTable.from_json(payload)
+    except OSError:
         return None
-    table = CalibrationTable.from_json(payload)
+    except (ValueError, TypeError, KeyError, AttributeError) as e:
+        warnings.warn(
+            f"ignoring corrupt calibration cache {path!r} "
+            f"({type(e).__name__}: {e}); using built-in defaults — "
+            f"delete the file or re-run calibration to silence this",
+            RuntimeWarning,
+        )
+        return None
     if table.platform != platform:
         return None
     table.source = "cache"
@@ -636,8 +648,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     args = parser.parse_args(argv)
 
     if args.bless:
-        with open(args.bless) as f:
-            table = CalibrationTable.from_json(json.load(f))
+        try:
+            with open(args.bless) as f:
+                table = CalibrationTable.from_json(json.load(f))
+        except OSError as e:
+            print(f"cannot read {args.bless}: {e}")
+            return 1
+        except (ValueError, TypeError, KeyError, AttributeError) as e:
+            print(
+                f"refusing to bless {args.bless}: not a valid calibration "
+                f"table ({type(e).__name__}: {e})"
+            )
+            return 1
         platform = jax.default_backend()
         if table.platform != platform:
             print(

@@ -1,1 +1,2 @@
+from .chaos import FaultInjector, InjectedFault
 from .fault import FaultTolerantLoop, StragglerMonitor, ElasticPlan, plan_remesh

@@ -63,10 +63,21 @@ def plan_remesh(
 
 
 class StragglerMonitor:
-    """EWMA + median step-time tracking with a slow-step callback."""
+    """EWMA + median step-time tracking with a slow-step callback.
+
+    A step is flagged once the history holds at least ``min(8, window)``
+    samples AND the step exceeds ``threshold ×`` the windowed median —
+    STRICTLY exceeds, so a step landing exactly on the threshold is not a
+    straggler.  (The warm-up used to be a flat 8, so a monitor configured
+    with ``window < 8`` could never flag anything.)
+    """
+
+    WARMUP = 8
 
     def __init__(self, threshold: float = 2.0, window: int = 64,
                  on_straggle: Optional[Callable[[int, float, float], None]] = None):
+        if window < 1:
+            raise ValueError("window must be >= 1")
         self.threshold = threshold
         self.window = window
         self.times: List[float] = []
@@ -77,7 +88,8 @@ class StragglerMonitor:
         self.times.append(seconds)
         hist = self.times[-self.window :]
         med = float(np.median(hist))
-        slow = len(hist) >= 8 and seconds > self.threshold * med
+        warmup = min(self.WARMUP, self.window)
+        slow = len(hist) >= warmup and seconds > self.threshold * med
         if slow:
             self.flagged.append(step)
             if self.on_straggle:
@@ -111,6 +123,7 @@ class FaultTolerantLoop:
         self._last_state: Any = None
         self._last_step: int = -1
         self._last_saved_step: Optional[int] = None
+        self.last_restore_skipped: List[int] = []
         # Step timing starts at the first after_step: anchoring it here
         # would bill construction + restore wall time (checkpoint reads,
         # device_put, first-step compile waits...) to step 0 and poison
@@ -122,12 +135,39 @@ class FaultTolerantLoop:
 
     # -- resume -----------------------------------------------------------
     def restore_or(self, init_state: Any, shardings: Any = None) -> Tuple[Any, int]:
-        from ..checkpoint.manager import restore_pytree
+        """Resume from the newest INTACT generation, or start fresh.
 
-        step = self.manager.latest_step()
-        if step is None:
+        Restores walk back past torn/corrupt generations
+        (`repro.checkpoint.manager.restore_latest_intact`); the ones
+        skipped are recorded in ``last_restore_skipped`` so the caller can
+        surface the freshness loss.  When every retained generation is
+        corrupt, resume-from-zero beats dying — the cold start is taken and
+        the skipped list says why.
+        """
+        from ..checkpoint.manager import CheckpointCorrupt, restore_latest_intact
+
+        self.last_restore_skipped: List[int] = []
+        try:
+            state, step, skipped = restore_latest_intact(
+                init_state, self.manager.directory, shardings
+            )
+        except FileNotFoundError:
             return init_state, 0
-        state = restore_pytree(init_state, self.manager.directory, step, shardings)
+        except CheckpointCorrupt as e:
+            from ..checkpoint.manager import list_steps
+
+            self.last_restore_skipped = list(
+                reversed(list_steps(self.manager.directory))
+            )
+            import warnings
+
+            warnings.warn(
+                f"every retained checkpoint generation is corrupt — "
+                f"starting fresh ({e})",
+                RuntimeWarning,
+            )
+            return init_state, 0
+        self.last_restore_skipped = skipped
         return state, step + 1
 
     # -- per-step ---------------------------------------------------------

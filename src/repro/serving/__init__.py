@@ -1,5 +1,6 @@
 from .engine import ServeEngine, GenerationResult
 from .gateway import (
+    Degraded,
     GatewayConfig,
     GatewayRejected,
     QueueFull,

@@ -27,7 +27,19 @@ What was missing is a concurrency front door.  This module is it:
     `repro.checkpoint.manager.CheckpointManager`, and a restarted gateway
     resumes via `repro.runtime.fault.FaultTolerantLoop.restore_or`: a
     killed process comes back serving identical answers with zero
-    re-ingest of history.
+    re-ingest of history;
+  * **degraded mode**: when ``tick_deadline`` is set, a tick that blows
+    its wall-clock budget (straggler device, injected stall — the
+    ``gateway.tick`` chaos site fires inside the timed window) flips the
+    gateway to ``degraded``: pending queries of the lowest-priority rate
+    class are shed with :class:`Degraded` (distinct from
+    :class:`RateLimited` — the client should back off, not retry-at-rate),
+    snapshots are deferred so the writer doesn't compound the overrun, and
+    after ``degraded_recovery`` consecutive in-budget ticks the gateway
+    returns to ``ok`` and takes the deferred snapshot.  :meth:`health`
+    reports ``ok`` / ``degraded`` / ``draining`` plus circuit-breaker trip
+    counts when the session's backend is a
+    `repro.core.backend.CircuitBreakerBackend`.
 
 The gateway is transport-agnostic: `examples/gateway_demo.py` drives it
 in-process; an HTTP/gRPC front end would call the same ``submit_*``
@@ -46,8 +58,10 @@ import jax
 import numpy as np
 
 from ..core.frame import FrameSession
+from ..runtime import chaos
 
 __all__ = [
+    "Degraded",
     "GatewayConfig",
     "GatewayRejected",
     "QueueFull",
@@ -69,6 +83,12 @@ class RateLimited(GatewayRejected):
     """The tenant's rate class has no tokens left this tick."""
 
 
+class Degraded(GatewayRejected):
+    """Shed because the gateway is over its tick deadline and dropping
+    lowest-priority queries to recover.  Distinct from :class:`RateLimited`:
+    the tenant did nothing wrong — back off instead of retrying at rate."""
+
+
 @dataclasses.dataclass(frozen=True)
 class RateClass:
     """Token-bucket admission limits, refilled once per tick.
@@ -76,12 +96,16 @@ class RateClass:
     ``inf`` rates disable the limit.  ``burst`` caps the bucket (defaults
     to 2× the per-tick rate, min 1), so an idle tenant can catch up a
     little but can never dump an unbounded backlog into one tick.
+    ``priority`` orders classes for degraded-mode shedding: when the
+    gateway is over its tick deadline, queries from the lowest-priority
+    class(es) are dropped first.
     """
 
     name: str = "default"
     ingest_per_tick: float = math.inf
     query_per_tick: float = math.inf
     burst: Optional[float] = None
+    priority: int = 0
 
     def bucket_cap(self, rate: float) -> float:
         if self.burst is not None:
@@ -105,6 +129,9 @@ class GatewayConfig:
     default_class: str = "default"
     latency_window: int = 16384            # latency samples kept per kind
     straggler_threshold: float = 4.0       # tick-time straggler flagging
+    tick_deadline: float = 0.0             # per-tick wall budget (s, 0=off)
+    degraded_recovery: int = 2             # in-budget ticks to leave degraded
+    bucket_idle_ticks: int = 512           # evict buckets idle this long (0=off)
 
 
 def _event_loop() -> asyncio.AbstractEventLoop:
@@ -141,6 +168,24 @@ class _TokenBuckets:
             return False
         self._state[tenant] = (tokens - 1.0, tick)
         return True
+
+    def evict_idle(self, tick: int, idle_ticks: int) -> int:
+        """Drop buckets untouched for ``idle_ticks`` ticks; returns the
+        eviction count.  A bucket that idle has (almost always) refilled
+        to cap, so re-creating it lazily at full cap on the tenant's next
+        request is the same state — this just bounds the map to tenants
+        actually active in the last N ticks instead of every tenant ever
+        seen.  (Lossless whenever ``idle_ticks >= cap / rate``; a
+        pathologically slow-refill class trades a one-off full bucket for
+        the memory bound.)"""
+        stale = [t for t, (_, last) in self._state.items()
+                 if tick - last >= idle_ticks]
+        for t in stale:
+            del self._state[t]
+        return len(stale)
+
+    def __len__(self) -> int:
+        return len(self._state)
 
 
 class StatsGateway:
@@ -182,6 +227,12 @@ class StatsGateway:
         self._tick_lock = asyncio.Lock()
         self._serve_task: Optional[asyncio.Task] = None
         self._closed = False
+        self._draining = False
+
+        # -- health ----------------------------------------------------------
+        self._health = "ok"
+        self._healthy_streak = 0
+        self._snapshot_deferred = False
 
         # -- metrics ---------------------------------------------------------
         self._lat_ingest: Deque[float] = collections.deque(
@@ -190,7 +241,8 @@ class StatsGateway:
             maxlen=cfg.latency_window)
         self._occ_ingest: Deque[int] = collections.deque(maxlen=4096)
         self._occ_query: Deque[int] = collections.deque(maxlen=4096)
-        self.counters = collections.Counter()
+        self.counters = collections.Counter()     # monotonic — never reset
+        self._counter_base = collections.Counter()  # reset_metrics() window
 
         # -- durability ------------------------------------------------------
         self._loop_rt = None
@@ -225,6 +277,9 @@ class StatsGateway:
     def _class_of(self, tenant: int) -> RateClass:
         name = self._tenant_class.get(tenant, self.config.default_class)
         return self.config.rate_classes[name]
+
+    def _min_priority(self) -> int:
+        return min(rc.priority for rc in self.config.rate_classes.values())
 
     def set_tenant_class(self, tenant: int, class_name: str) -> None:
         if class_name not in self.config.rate_classes:
@@ -282,6 +337,15 @@ class StatsGateway:
         if self._closed:
             raise RuntimeError("gateway is closed")
         tenant = self._check_tenant(tenant)
+        if (
+            self._health == "degraded"
+            and self._class_of(tenant).priority <= self._min_priority()
+        ):
+            self.counters["rejected_query_degraded"] += 1
+            raise Degraded(
+                f"gateway degraded (tick over {self.config.tick_deadline}s "
+                f"budget); shedding lowest-priority queries"
+            )
         if len(self._query_q) >= self.config.max_pending_query:
             self.counters["rejected_query_queue_full"] += 1
             raise QueueFull(
@@ -315,19 +379,78 @@ class StatsGateway:
         stats (mostly for the benchmark's narrator)."""
         async with self._tick_lock:
             t_start = time.perf_counter()
+            shed = self._shed_if_degraded()
+            # the gateway.tick chaos site lives INSIDE the timed window: an
+            # injected stall looks exactly like a straggler device to the
+            # deadline watchdog; an injected fail is a survivable tick-level
+            # fault (counted, the tick still serves)
+            try:
+                chaos.fire("gateway.tick")
+            except Exception:
+                self.counters["tick_faults"] += 1
             n_ing = self._run_ingests()
             n_qry = self._run_queries()
             tick = self._tick
             self._tick += 1
-            self._maybe_snapshot(tick)
             dt = time.perf_counter() - t_start
+            self._update_health(tick, dt)
+            self._maybe_snapshot(tick)
             if n_ing or n_qry:
                 self.monitor.record(tick, dt)
             self.counters["ticks"] += 1
+            idle = self.config.bucket_idle_ticks
+            if idle and tick and tick % idle == 0:
+                evicted = self._ingest_buckets.evict_idle(tick, idle)
+                evicted += self._query_buckets.evict_idle(tick, idle)
+                self.counters["buckets_evicted"] += evicted
         # hand control back so awaiting clients observe their futures
         await asyncio.sleep(0)
         return {"tick": tick, "ingests": n_ing, "queries": n_qry,
-                "seconds": dt}
+                "shed": shed, "seconds": dt}
+
+    def _shed_if_degraded(self) -> int:
+        """In degraded mode, drop queued queries of the lowest-priority
+        rate class before doing any work this tick (with a single class,
+        every pending query is lowest).  Ingests are never shed — dropping
+        reads costs a retry, dropping writes loses data."""
+        if self._health != "degraded" or not self._query_q:
+            return 0
+        floor = self._min_priority()
+        keep: list = []
+        shed = 0
+        for req in self._query_q:
+            if self._class_of(req.tenant).priority <= floor:
+                if not req.future.done():
+                    req.future.set_exception(Degraded(
+                        f"query shed at tick {self._tick}: gateway degraded"
+                    ))
+                shed += 1
+            else:
+                keep.append(req)
+        self._query_q.clear()
+        self._query_q.extend(keep)
+        self.counters["shed_query_degraded"] += shed
+        return shed
+
+    def _update_health(self, tick: int, dt: float) -> None:
+        deadline = self.config.tick_deadline
+        if not deadline:
+            return
+        if dt > deadline:
+            self.counters["ticks_deadline_blown"] += 1
+            self._healthy_streak = 0
+            if self._health != "degraded":
+                self._health = "degraded"
+                self.counters["degraded_entries"] += 1
+        elif self._health == "degraded":
+            self._healthy_streak += 1
+            if self._healthy_streak >= self.config.degraded_recovery:
+                self._health = "ok"
+                self.counters["degraded_recoveries"] += 1
+                if (self._snapshot_deferred and self._loop_rt is not None
+                        and self._dirty):
+                    self._snapshot(tick)
+                self._snapshot_deferred = False
 
     def _run_ingests(self) -> int:
         """Coalesce the admitted ingest backlog into the fewest possible
@@ -419,6 +542,12 @@ class StatsGateway:
             or (tick + 1) % cfg.snapshot_every != 0
         ):
             return
+        if self._health == "degraded":
+            # don't compound an over-budget tick with a state export; the
+            # recovery transition takes the deferred snapshot
+            self._snapshot_deferred = True
+            self.counters["snapshots_deferred"] += 1
+            return
         self._snapshot(tick)
 
     def _snapshot(self, tick: int) -> None:
@@ -448,6 +577,7 @@ class StatsGateway:
         """Drain one last tick, snapshot if dirty, release the writer."""
         if self._closed:
             return
+        self._draining = True
         # drain: carried-over same-tenant duplicates may need extra ticks
         await self.tick()
         while self._ingest_q or self._query_q:
@@ -477,12 +607,62 @@ class StatsGateway:
             return 0.0
         return float(np.percentile(np.asarray(samples), q)) * 1e6  # µs
 
+    def health(self) -> dict:
+        """Liveness surface: ``ok`` / ``degraded`` / ``draining``, the
+        deadline watchdog's tallies, and — when the session's backend is a
+        circuit breaker — its per-primitive trip state."""
+        state = ("draining" if (self._draining or self._closed)
+                 else self._health)
+        out = {
+            "state": state,
+            "tick": self._tick,
+            "deadline": {
+                "budget_s": self.config.tick_deadline,
+                "blown": self.counters["ticks_deadline_blown"],
+                "shed": self.counters["shed_query_degraded"]
+                + self.counters["rejected_query_degraded"],
+                "snapshot_deferred": self._snapshot_deferred,
+                "degraded_entries": self.counters["degraded_entries"],
+                "degraded_recoveries": self.counters["degraded_recoveries"],
+            },
+        }
+        # the session holds a backend SPEC (None/str/instance); resolve it
+        # the same way the session's plan does before sniffing for a breaker
+        from ..core.backend import get_backend
+
+        spec = getattr(self.session, "_backend", None)
+        try:
+            backend = get_backend(spec) if spec is not None else None
+        except KeyError:
+            backend = None
+        breaker = getattr(backend, "breaker_metrics", None)
+        if callable(breaker):
+            out["breaker"] = breaker()
+        return out
+
+    def reset_metrics(self) -> None:
+        """Start a new observation window: clears the latency/occupancy
+        sample windows and re-bases the per-window counter deltas exposed
+        under ``metrics()["window"]``.  The totals in ``counters`` are
+        monotonic and are never reset — rates come from windows, audits
+        from totals."""
+        self._lat_ingest.clear()
+        self._lat_query.clear()
+        self._occ_ingest.clear()
+        self._occ_query.clear()
+        self._counter_base = collections.Counter(self.counters)
+
     def metrics(self) -> dict:
-        """The serving surface's health in one dict (latencies in µs)."""
+        """The serving surface's health in one dict (latencies in µs).
+        Rejection/snapshot counts are monotonic totals; ``window`` holds
+        the same counters since the last :meth:`reset_metrics`."""
         c = self.counters
+        base = self._counter_base
         return {
             "ticks": c["ticks"],
             "tick": self._tick,
+            "health": ("draining" if (self._draining or self._closed)
+                       else self._health),
             "ingest": {
                 "count": len(self._lat_ingest),
                 "p50_us": self._pct(self._lat_ingest, 50),
@@ -497,6 +677,8 @@ class StatsGateway:
                 "p99_us": self._pct(self._lat_query, 99),
                 "rejected_rate": c["rejected_query_rate"],
                 "rejected_queue_full": c["rejected_query_queue_full"],
+                "rejected_degraded": c["rejected_query_degraded"]
+                + c["shed_query_degraded"],
                 "programs": c["programs_finalize"],
             },
             "queue_depth": {
@@ -509,7 +691,12 @@ class StatsGateway:
                 "query_mean": float(np.mean(self._occ_query))
                 if self._occ_query else 0.0,
             },
+            "bucket_tenants": len(self._ingest_buckets)
+            + len(self._query_buckets),
             "straggler_ticks": list(self.monitor.flagged),
             "snapshots": c["snapshots"],
+            "deadline_blown": c["ticks_deadline_blown"],
             "restored_from_snapshot": c["restored_from_snapshot"],
+            "window": {k: c[k] - base[k]
+                       for k in sorted(set(c) | set(base))},
         }

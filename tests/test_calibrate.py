@@ -276,3 +276,44 @@ def test_cli_show_and_bless(tmp_path, monkeypatch, capsys):
     assert cal.main(["--bless", str(good)]) == 0
     assert path.exists()
     assert cal.load_table().blocks == {"lagged_sums": {"block_t": 128}}
+
+
+# --------------------------------------------- PR 8: corrupt-cache hygiene
+
+
+@pytest.mark.parametrize(
+    "body",
+    [
+        "{not json",                        # truncated / invalid JSON
+        '{"thresholds": 42}',               # valid JSON, wrong structure
+        '["a", "list"]',                    # valid JSON, wrong top type
+        '{"platform": null, "thresholds": {"lagged_sums": "NaNish"}}',
+    ],
+)
+def test_corrupt_cache_degrades_to_defaults_with_warning(
+    tmp_path, monkeypatch, body
+):
+    """A torn or hand-mangled cache file must never crash the "auto"
+    policy's first dispatch: load_table warns and returns None, and
+    resolve_table falls through to the built-in defaults."""
+    path = tmp_path / "calib.json"
+    path.write_text(body)
+    monkeypatch.setenv("REPRO_CALIB_CACHE", str(path))
+    with pytest.warns(RuntimeWarning, match="corrupt calibration cache"):
+        assert cal.load_table() is None
+    with pytest.warns(RuntimeWarning):
+        resolved = cal.resolve_table(autocalibrate=False)
+    assert resolved.source == "default"
+    assert set(resolved.thresholds) == set(cal.PRIMITIVES)
+
+
+def test_cli_bless_rejects_corrupt_table(tmp_path, monkeypatch, capsys):
+    path = tmp_path / "calib.json"
+    monkeypatch.setenv("REPRO_CALIB_CACHE", str(path))
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"thresholds": 42}')
+    assert cal.main(["--bless", str(bad)]) == 1
+    assert "refusing to bless" in capsys.readouterr().out
+    assert cal.main(["--bless", str(tmp_path / "missing.json")]) == 1
+    assert "cannot read" in capsys.readouterr().out
+    assert not path.exists()                 # nothing was installed

@@ -1,0 +1,709 @@
+"""Chaos engineering: injected faults must degrade the stack, not kill it.
+
+Pins the PR's four robustness contracts end-to-end, all deterministic
+(seeded schedules, call-counted cooldowns — a failure here replays):
+
+  * FaultInjector — named-site schedules (explicit call indices + seeded
+    Bernoulli rates) replay bit-for-bit; per-site RNG substreams are
+    independent;
+  * CircuitBreakerBackend — a raising primitive trips to the jnp oracle,
+    probes after a call-counted cooldown, recovers on success, re-opens on
+    a failed probe;
+  * verified checkpoints — a torn payload fails crc32 verification with
+    CheckpointCorrupt, restore walks back past corrupt generations to the
+    newest intact one, transient write failures are retried with backoff;
+  * degraded-mode gateway — a blown tick deadline flips health to
+    degraded, sheds lowest-priority queries with Degraded (never
+    RateLimited), defers snapshots, and recovers after clean ticks;
+
+plus the acceptance scenario: one seeded schedule combining a kernel
+failure, a torn checkpoint, and a stalled tick, with kill-and-restart and
+walk-back, serving answers identical to a no-fault run for every
+non-rejected query.
+"""
+import asyncio
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (
+    CheckpointCorrupt,
+    CheckpointManager,
+    list_steps,
+    restore_latest_intact,
+    restore_pytree,
+    save_pytree,
+)
+from repro.core.backend import (
+    CircuitBreakerBackend,
+    JnpBackend,
+    PRIMITIVE_NAMES,
+    get_backend,
+)
+from repro.core.frame import FrameSession
+from repro.runtime import chaos
+from repro.runtime.chaos import FaultInjector, InjectedFault
+from repro.runtime.fault import FaultTolerantLoop, StragglerMonitor
+from repro.serving.gateway import (
+    Degraded,
+    GatewayConfig,
+    RateClass,
+    StatsGateway,
+    _Pending,
+)
+
+D = 2
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_injector():
+    yield
+    chaos.clear()
+
+
+def _session(num_users, backend="jnp"):
+    sess = FrameSession(d=D, num_users=num_users, backend=backend)
+    sess.autocovariance(3)
+    sess.moments(8)
+    return sess
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+def _tree(seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "w": rng.randn(4, 3).astype(np.float32),
+        "b": rng.randn(3).astype(np.float32),
+    }
+
+
+def _tear(path):
+    """Overwrite bytes in the middle of a file (simulated torn write)."""
+    with open(path, "r+b") as f:
+        f.seek(max(os.path.getsize(path) // 2, 0))
+        f.write(b"\x00TORN\x00")
+
+
+# ------------------------------------------------------ (1) FaultInjector
+
+
+def test_injector_explicit_call_schedule():
+    inj = FaultInjector(seed=0)
+    inj.fail("backend.fused_plan_update", calls={2, 3})
+    raised = []
+    for i in range(6):
+        try:
+            inj.fire("backend.fused_plan_update")
+        except InjectedFault:
+            raised.append(i)
+    assert raised == [2, 3]
+    assert inj.count("backend.fused_plan_update") == 6
+    assert inj.log == [
+        ("backend.fused_plan_update", 2, "fail"),
+        ("backend.fused_plan_update", 3, "fail"),
+    ]
+
+
+def test_injector_rate_schedule_replays_bit_for_bit():
+    def firings(seed):
+        inj = FaultInjector(seed=seed).fail("site.x", rate=0.3)
+        out = []
+        for i in range(200):
+            try:
+                inj.fire("site.x")
+            except InjectedFault:
+                out.append(i)
+        return out
+
+    a, b = firings(7), firings(7)
+    assert a == b                      # same seed: identical schedule
+    assert 20 < len(a) < 100           # the rate actually fires
+    assert firings(8) != a             # different seed: different draws
+
+
+def test_injector_sites_are_independent_substreams():
+    # adding a rule (and draws) on one site must not shift another's
+    solo = FaultInjector(seed=3).fail("b", rate=0.5)
+    both = FaultInjector(seed=3).fail("a", rate=0.5).fail("b", rate=0.5)
+
+    def fires_b(inj):
+        out = []
+        for i in range(64):
+            if inj is both:
+                try:
+                    inj.fire("a")
+                except InjectedFault:
+                    pass
+            try:
+                inj.fire("b")
+            except InjectedFault:
+                out.append(i)
+        return out
+
+    assert fires_b(solo) == fires_b(both)
+
+
+def test_injector_stall_then_fail_composes():
+    inj = FaultInjector()
+    inj.stall("s", calls={1}, seconds=0.05).fail("s", calls={1})
+    inj.fire("s")                      # call 0: clean
+    t0 = time.perf_counter()
+    with pytest.raises(InjectedFault, match="call 1"):
+        inj.fire("s")
+    assert time.perf_counter() - t0 >= 0.04
+    assert [a for (_, _, a) in inj.log] == ["stall", "fail"]
+
+
+def test_injector_corrupt_rule_and_scoped_install():
+    inj = FaultInjector().corrupt("checkpoint.payload", calls={1})
+    assert chaos.installed() is None
+    with chaos.scoped(inj) as got:
+        assert got is inj and chaos.installed() is inj
+        assert chaos.should_corrupt("checkpoint.payload") is False
+        assert chaos.should_corrupt("checkpoint.payload") is True
+        assert chaos.should_corrupt("checkpoint.payload") is False
+    assert chaos.installed() is None
+    # module-level hooks are no-ops with nothing installed
+    chaos.fire("anything")
+    assert chaos.should_corrupt("anything") is False
+
+
+# ------------------------------------------------- (2) circuit breaker
+
+
+def _x(seed=0, n=32):
+    import jax.numpy as jnp
+
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(n, D).astype(np.float32)
+    )
+
+
+def test_breaker_trips_to_fallback_and_recovers_after_cooldown():
+    br = CircuitBreakerBackend(
+        primary=JnpBackend(), fallback=JnpBackend(),
+        trip_after=2, cooldown_calls=3,
+    )
+    want = np.asarray(JnpBackend().lagged_sums(_x(), 3))
+    inj = FaultInjector().fail("backend.lagged_sums", calls={0, 1})
+    with chaos.scoped(inj):
+        outs = [np.asarray(br.lagged_sums(_x(), 3)) for _ in range(5)]
+    # every call served the oracle value, through primary or fallback
+    for got in outs:
+        np.testing.assert_array_equal(got, want)
+    st = br.breaker_metrics()["primitives"]["lagged_sums"]
+    # calls 0,1 fail → trip; 2,3 ride the open cooldown; 4 probes and heals
+    assert st["trips"] == 1
+    assert st["probes"] == 1
+    assert st["recoveries"] == 1
+    assert st["state"] == "closed"
+    assert st["fallback_calls"] == 4
+    assert st["primary_calls"] == 1
+    assert "InjectedFault" in st["last_error"]
+    m = br.breaker_metrics()
+    assert m["trips"] == 1 and m["open"] == []
+
+
+def test_breaker_failed_probe_reopens():
+    br = CircuitBreakerBackend(
+        primary=JnpBackend(), fallback=JnpBackend(),
+        trip_after=1, cooldown_calls=2,
+    )
+    inj = FaultInjector().fail("backend.lagged_sums", calls={0, 1, 2})
+    with chaos.scoped(inj):
+        for _ in range(7):
+            br.lagged_sums(_x(), 3)
+    st = br.breaker_metrics()["primitives"]["lagged_sums"]
+    # d0 trips; probes at d2/d4 fail and re-open (not new trips); d6 heals
+    assert st["trips"] == 1
+    assert st["probes"] == 3
+    assert st["recoveries"] == 1
+    assert st["state"] == "closed"
+
+
+def test_breaker_open_state_skips_primary_entirely():
+    class Wedged:
+        name = "wedged"
+
+        def __getattr__(self, prim):
+            if prim in PRIMITIVE_NAMES:
+                def boom(*a, **k):
+                    raise RuntimeError("kernel build wedged")
+                return boom
+            raise AttributeError(prim)
+
+    br = CircuitBreakerBackend(
+        primary=Wedged(), fallback=JnpBackend(),
+        trip_after=1, cooldown_calls=4,
+    )
+    want = np.asarray(JnpBackend().lagged_sums(_x(), 3))
+    for _ in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(br.lagged_sums(_x(), 3)), want
+        )
+    st = br.breaker_metrics()["primitives"]["lagged_sums"]
+    assert st["state"] == "open"
+    # only the tripping call touched the primary; the cooldown never did
+    assert st["consecutive_failures"] == 1
+    assert br.breaker_metrics()["open"] == ["lagged_sums"]
+    br.reset("lagged_sums")
+    assert br.breaker_metrics()["open"] == []
+
+
+def test_breaker_default_pallas_primary_matches_oracle():
+    br = CircuitBreakerBackend()       # pallas primary, jnp fallback
+    x = _x(seed=5, n=48)
+    np.testing.assert_allclose(
+        np.asarray(br.lagged_sums(x, 4)),
+        np.asarray(JnpBackend().lagged_sums(x, 4)),
+        rtol=1e-4, atol=1e-4,
+    )
+    st = br.breaker_metrics()["primitives"]["lagged_sums"]
+    assert st["state"] == "closed" and st["primary_calls"] == 1
+
+
+def test_breaker_validates_config_and_rejects_unknown_attr():
+    with pytest.raises(ValueError):
+        CircuitBreakerBackend(trip_after=0)
+    br = CircuitBreakerBackend(primary=JnpBackend(), fallback=JnpBackend())
+    with pytest.raises(AttributeError):
+        br.not_a_primitive
+
+
+# ------------------------------------------- (3) verified checkpoints
+
+
+def test_manifest_carries_checksums_and_restore_verifies(tmp_path):
+    tree = _tree(1)
+    path = save_pytree(tree, str(tmp_path), 0)
+    import json
+
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert sorted(manifest["checksums"]) == sorted(manifest["keys"])
+    got = restore_pytree(_tree(9), str(tmp_path), 0)
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+
+def test_torn_payload_raises_checkpoint_corrupt(tmp_path):
+    save_pytree(_tree(1), str(tmp_path), 0)
+    _tear(str(tmp_path / "step_0000000000" / "arrays.npz"))
+    with pytest.raises(CheckpointCorrupt):
+        restore_pytree(_tree(1), str(tmp_path), 0)
+    # verify=False skips checksum checks but a torn zip still can't load
+    with pytest.raises(CheckpointCorrupt):
+        restore_pytree(_tree(1), str(tmp_path), 0, verify=False)
+
+
+def test_injected_corruption_is_caught_by_verification(tmp_path):
+    inj = FaultInjector().corrupt("checkpoint.payload", calls={1})
+    with chaos.scoped(inj):
+        save_pytree(_tree(1), str(tmp_path), 0)   # call 0: intact
+        save_pytree(_tree(2), str(tmp_path), 1)   # call 1: torn on disk
+    restore_pytree(_tree(0), str(tmp_path), 0)
+    with pytest.raises(CheckpointCorrupt, match="verification|unreadable"):
+        restore_pytree(_tree(0), str(tmp_path), 1)
+
+
+def test_walk_back_to_newest_intact_generation(tmp_path):
+    for step in range(3):
+        save_pytree(_tree(step), str(tmp_path), step)
+    _tear(str(tmp_path / "step_0000000002" / "arrays.npz"))
+    state, step, skipped = restore_latest_intact(_tree(0), str(tmp_path))
+    assert step == 1 and skipped == [2]
+    np.testing.assert_array_equal(state["w"], _tree(1)["w"])
+    assert list_steps(str(tmp_path)) == [0, 1, 2]
+
+
+def test_pre_checksum_checkpoint_restores_unverified(tmp_path):
+    import json
+
+    save_pytree(_tree(1), str(tmp_path), 0)
+    man = str(tmp_path / "step_0000000000" / "manifest.json")
+    with open(man) as f:
+        payload = json.load(f)
+    del payload["checksums"]           # a checkpoint from before this PR
+    with open(man, "w") as f:
+        json.dump(payload, f)
+    got = restore_pytree(_tree(0), str(tmp_path), 0)
+    np.testing.assert_array_equal(got["b"], _tree(1)["b"])
+
+
+def test_all_generations_corrupt_cold_starts_loop(tmp_path):
+    for step in range(2):
+        save_pytree(_tree(step), str(tmp_path), step)
+        _tear(str(tmp_path / f"step_{step:010d}" / "arrays.npz"))
+    with pytest.raises(CheckpointCorrupt, match="every retained"):
+        restore_latest_intact(_tree(0), str(tmp_path))
+    loop = FaultTolerantLoop(str(tmp_path), every=1)
+    with pytest.warns(RuntimeWarning, match="starting fresh"):
+        state, start = loop.restore_or(_tree(5))
+    assert start == 0
+    assert loop.last_restore_skipped == [1, 0]
+    np.testing.assert_array_equal(state["w"], _tree(5)["w"])
+    loop.close()
+
+
+def test_manager_retries_transient_write_failure(tmp_path):
+    inj = FaultInjector().fail("checkpoint.write", calls={0})
+    mgr = CheckpointManager(str(tmp_path), retries=2, backoff=0.01)
+    with chaos.scoped(inj):
+        mgr.save(_tree(3), 0)
+        mgr.flush()                    # inside scope: the worker retries
+    assert mgr.retried_saves == 1
+    assert mgr.saved_steps == [0]
+    got = restore_pytree(_tree(0), str(tmp_path), 0)
+    np.testing.assert_array_equal(got["w"], _tree(3)["w"])
+    mgr.close()
+
+
+def test_manager_surfaces_exhausted_retries(tmp_path):
+    inj = FaultInjector().fail("checkpoint.write", calls={0, 1, 2})
+    mgr = CheckpointManager(str(tmp_path), retries=2, backoff=0.01)
+    with chaos.scoped(inj):
+        mgr.save(_tree(3), 0)
+        with pytest.raises(InjectedFault):
+            mgr.flush()
+    assert mgr.retried_saves == 2
+    assert mgr.latest_step() is None
+    with pytest.raises(InjectedFault):
+        mgr.close()                    # re-raises, but still reaps the worker
+    assert not mgr._worker.is_alive()
+
+
+# --------------------------------------------- (4) degraded-mode gateway
+
+
+def test_blown_deadline_degrades_sheds_and_recovers():
+    cfg = GatewayConfig(tick_deadline=0.05, degraded_recovery=2)
+    gw = StatsGateway(_session(3), cfg)
+    inj = FaultInjector().stall("gateway.tick", calls={1}, seconds=0.2)
+
+    async def scenario():
+        with chaos.scoped(inj):
+            await gw.tick()                        # tick 0: in budget
+            assert gw.health()["state"] == "ok"
+            await gw.tick()                        # tick 1: stalled → blown
+        assert gw.health()["state"] == "degraded"
+        # lowest-priority pending queries are shed at the next tick start
+        # with Degraded — a distinct signal from RateLimited
+        fut = asyncio.get_running_loop().create_future()
+        gw._query_q.append(_Pending(0, fut, time.perf_counter()))
+        await gw.tick()                            # tick 2: sheds, in budget
+        with pytest.raises(Degraded, match="shed"):
+            await fut
+        assert gw.health()["state"] == "degraded"  # streak 1 of 2
+        await gw.tick()                            # tick 3: recovery
+        assert gw.health()["state"] == "ok"
+        # disarm before the query tick: its first-use jit trace would blow
+        # the 50ms budget on its own and re-degrade the gateway
+        gw.config.tick_deadline = 0.0
+        q = gw.submit_query(0)                     # healthy again: served
+        await gw.tick()
+        return await q
+
+    res = run(scenario())
+    assert sorted(res) == ["autocovariance", "moments"]
+    h = gw.health()
+    assert h["deadline"]["blown"] == 1
+    assert h["deadline"]["shed"] == 1
+    assert gw.counters["degraded_entries"] == 1
+    assert gw.counters["degraded_recoveries"] == 1
+    m = gw.metrics()
+    assert m["deadline_blown"] == 1 and m["query"]["rejected_degraded"] == 1
+
+
+def test_shedding_respects_rate_class_priority():
+    cfg = GatewayConfig(
+        tick_deadline=0.05,
+        degraded_recovery=8,           # stay degraded across the tick
+        rate_classes={
+            "default": RateClass(priority=0),
+            "gold": RateClass(name="gold", priority=1),
+        },
+    )
+    gw = StatsGateway(_session(2), cfg)
+    gw.set_tenant_class(1, "gold")
+    inj = FaultInjector().stall("gateway.tick", calls={0}, seconds=0.2)
+
+    async def scenario():
+        with chaos.scoped(inj):
+            await gw.tick()                        # blown → degraded
+        loop = asyncio.get_running_loop()
+        cheap = _Pending(0, loop.create_future(), time.perf_counter())
+        gold = gw.submit_query(1)                  # priority 1: kept
+        gw._query_q.appendleft(cheap)
+        await gw.tick()
+        with pytest.raises(Degraded):
+            await cheap.future
+        return await gold
+
+    res = run(scenario())
+    assert sorted(res) == ["autocovariance", "moments"]
+    assert gw.counters["shed_query_degraded"] == 1
+
+
+def test_snapshot_deferred_while_degraded_taken_on_recovery(tmp_path):
+    cfg = GatewayConfig(
+        checkpoint_dir=str(tmp_path), snapshot_every=1,
+        tick_deadline=0.005, degraded_recovery=1,
+    )
+    gw = StatsGateway(_session(2), cfg)
+
+    async def scenario():
+        f = gw.submit_ingest(0, np.ones((8, D), np.float32))
+        await gw.tick()    # ingest + trace: certainly over 5ms → degraded
+        await f
+        assert gw.health()["state"] == "degraded"
+        assert gw.health()["deadline"]["snapshot_deferred"] is True
+        assert gw.counters["snapshots"] == 0
+        await gw.tick()    # empty tick: in budget → recovery + snapshot
+        assert gw.health()["state"] == "ok"
+
+    run(scenario())
+    gw._loop_rt.manager.flush()
+    assert gw.counters["snapshots_deferred"] == 1
+    assert gw.counters["snapshots"] == 1
+    assert gw._loop_rt.manager.latest_step() == 1  # saved at the recovery tick
+    run(gw.stop())
+
+
+def test_injected_tick_fault_is_survivable():
+    gw = StatsGateway(_session(2))
+    inj = FaultInjector().fail("gateway.tick", calls={0})
+
+    async def scenario():
+        with chaos.scoped(inj):
+            q = gw.submit_query(0)
+            await gw.tick()            # the injected raise doesn't kill it
+            return await q
+
+    res = run(scenario())
+    assert sorted(res) == ["autocovariance", "moments"]
+    assert gw.counters["tick_faults"] == 1
+
+
+def test_idle_token_buckets_are_evicted():
+    cfg = GatewayConfig(
+        bucket_idle_ticks=4,
+        rate_classes={"default": RateClass(ingest_per_tick=100,
+                                           query_per_tick=100)},
+    )
+    gw = StatsGateway(_session(4), cfg)
+    chunk = np.ones((8, D), np.float32)
+
+    async def scenario():
+        futs = [gw.submit_ingest(0, chunk), gw.submit_ingest(1, chunk)]
+        await gw.tick()                # tick 0
+        await asyncio.gather(*futs)
+        assert gw.metrics()["bucket_tenants"] == 2
+        await gw.tick()                # 1
+        await gw.tick()                # 2
+        f = gw.submit_ingest(1, chunk)  # tenant 1 active at tick 3
+        await gw.tick()                # 3
+        await f
+        await gw.tick()                # tick 4: sweep evicts tenant 0
+
+    run(scenario())
+    assert gw.counters["buckets_evicted"] == 1
+    assert gw.metrics()["bucket_tenants"] == 1  # tenant 1 survived
+
+
+def test_reset_metrics_windows_while_totals_stay_monotonic():
+    cfg = GatewayConfig(max_pending_query=1)
+    gw = StatsGateway(_session(2), cfg)
+
+    async def scenario():
+        from repro.serving.gateway import QueueFull
+
+        q = gw.submit_query(0)
+        with pytest.raises(QueueFull):
+            gw.submit_query(1)
+        await gw.tick()
+        await q
+        m1 = gw.metrics()
+        gw.reset_metrics()
+        m2 = gw.metrics()
+        q = gw.submit_query(0)
+        with pytest.raises(QueueFull):
+            gw.submit_query(1)
+        await gw.tick()
+        await q
+        return m1, m2, gw.metrics()
+
+    m1, m2, m3 = run(scenario())
+    assert m1["query"]["rejected_queue_full"] == 1
+    assert m1["window"]["rejected_query_queue_full"] == 1
+    # reset: window re-bases and samples clear, totals never move backwards
+    assert m2["query"]["rejected_queue_full"] == 1
+    assert m2["window"]["rejected_query_queue_full"] == 0
+    assert m2["query"]["count"] == 0
+    assert m3["query"]["rejected_queue_full"] == 2
+    assert m3["window"]["rejected_query_queue_full"] == 1
+    assert m3["query"]["count"] == 1
+
+
+def test_health_surfaces_breaker_and_draining():
+    plain = StatsGateway(_session(2))
+    assert "breaker" not in plain.health()
+    br = CircuitBreakerBackend(primary=JnpBackend(), fallback=JnpBackend())
+    gw = StatsGateway(_session(2, backend=br))
+    h = gw.health()
+    assert h["state"] == "ok" and h["breaker"]["trips"] == 0
+    run(gw.stop())
+    assert gw.health()["state"] == "draining"
+    assert gw.metrics()["health"] == "draining"
+    run(plain.stop())
+
+
+# ------------------------------------------ (5) StragglerMonitor edges
+
+
+def test_straggler_window_shorter_than_warmup_still_flags():
+    mon = StragglerMonitor(threshold=2.0, window=4)
+    for step in range(3):
+        assert mon.record(step, 0.01) is False
+    assert mon.record(3, 0.1) is True  # flat warm-up of 8 never got here
+    assert mon.flagged == [3]
+    with pytest.raises(ValueError):
+        StragglerMonitor(window=0)
+
+
+def test_straggler_threshold_exactly_met_is_not_flagged():
+    mon = StragglerMonitor(threshold=2.0, window=16)
+    for step in range(8):
+        mon.record(step, 1.0)
+    assert mon.record(8, 2.0) is False   # exactly 2× median: not a straggler
+    assert mon.record(9, 2.0 + 1e-6) is True
+
+
+def test_straggler_recovery_after_straggle_run():
+    seen = []
+    mon = StragglerMonitor(threshold=2.0, window=64,
+                           on_straggle=lambda s, dt, med: seen.append(s))
+    for step in range(8):
+        mon.record(step, 1.0)
+    for step in range(8, 11):
+        assert mon.record(step, 5.0) is True
+    for step in range(11, 20):          # back to normal: median holds at 1.0
+        assert mon.record(step, 1.0) is False
+    assert mon.flagged == [8, 9, 10]
+    assert seen == [8, 9, 10]
+
+
+# --------------------------------------------- (6) acceptance scenario
+
+
+def test_chaos_schedule_end_to_end_matches_fault_free_run(tmp_path):
+    """One seeded schedule — kernel failure + torn checkpoint + stalled
+    tick — driven through the gateway with kill-and-restart: every
+    non-rejected query answers identically to a fault-free run, and a
+    second restart walks back past corrupted generations."""
+    N = 3
+    lengths = (16, 24, 32)
+    rng = np.random.RandomState(11)
+    rounds = [
+        {u: rng.randn(c, D).astype(np.float32) for u in range(N)}
+        for c in lengths
+    ]
+
+    async def drive(gw, do_rounds):
+        answers = []
+        for chunks in do_rounds:
+            futs = [gw.submit_ingest(u, chunks[u]) for u in range(N)]
+            qfuts = [gw.submit_query(u) for u in range(N)]
+            await gw.tick()
+            await asyncio.gather(*futs)
+            answers.append(await asyncio.gather(*qfuts))
+        return answers
+
+    async def query_all(gw):
+        qfuts = [gw.submit_query(u) for u in range(N)]
+        await gw.tick()
+        return await asyncio.gather(*qfuts)
+
+    # fault-free reference: plain jnp, no durability, no injector
+    ref_gw = StatsGateway(_session(N))
+    ref = run(drive(ref_gw, rounds))          # ref[k] = answers after k+1 rounds
+    run(ref_gw.stop())
+
+    def check(got, want):
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(
+                np.asarray(g["autocovariance"]), np.asarray(w["autocovariance"])
+            )
+            for k in ("mean", "var", "count"):
+                np.testing.assert_array_equal(
+                    np.asarray(g["moments"][k]), np.asarray(w["moments"][k])
+                )
+
+    # chaos run: breaker over (jnp, jnp) so fallback math is bit-identical
+    def chaos_gateway():
+        br = CircuitBreakerBackend(
+            primary=JnpBackend(), fallback=JnpBackend(),
+            trip_after=1, cooldown_calls=2,
+        )
+        return StatsGateway(_session(N, backend=br), cfg)
+
+    cfg = GatewayConfig(
+        checkpoint_dir=str(tmp_path), snapshot_every=1, keep_checkpoints=3,
+        tick_deadline=0.0,             # armed mid-run, past the trace ticks
+        degraded_recovery=1,
+    )
+    inj = FaultInjector(seed=42)
+    inj.fail("backend.fused_plan_update", calls=range(1000))  # kernel down
+    inj.corrupt("checkpoint.payload", calls={1})              # tear gen 1
+    inj.stall("gateway.tick", calls={2}, seconds=0.25)        # straggle tick 2
+
+    gw = chaos_gateway()
+    with chaos.scoped(inj):
+        got = run(drive(gw, rounds[:2]))      # ticks 0-1 (snapshots 0, 1)
+        check(got[0], ref[0])
+        check(got[1], ref[1])
+        gw.config.tick_deadline = 0.05        # arm the watchdog
+        got2 = run(drive(gw, rounds[2:]))     # tick 2: stalled but serves
+        check(got2[0], ref[2])
+        assert gw.health()["state"] == "degraded"
+        assert gw.counters["snapshots_deferred"] == 1
+        with pytest.raises(Degraded):         # shed while degraded: rejected,
+            gw.submit_query(0)                # excluded from the comparison
+
+        async def recover():
+            await gw.tick()                   # tick 3: clean → ok + snapshot
+            assert gw.health()["state"] == "ok"
+            return await query_all(gw)        # tick 4
+
+        check(run(recover()), ref[2])
+        # the kernel fault tripped the breaker exactly once and every
+        # dispatch was served by the oracle
+        bm = gw.health()["breaker"]
+        assert bm["trips"] == 1 and bm["fallback_calls"] > 0
+        assert ("backend.fused_plan_update", 0, "fail") in inj.log
+        gw._loop_rt.manager.flush()           # snapshots durable, then "crash"
+
+        # kill-and-restart: the newest generation (recovery tick 3) is
+        # intact, so the restart serves identical answers, zero re-ingest
+        gw.config.tick_deadline = 0.0
+        gw2 = chaos_gateway()
+        assert gw2.counters["restored_from_snapshot"] == 1
+        assert gw2._loop_rt.last_restore_skipped == []
+        check(run(query_all(gw2)), ref[2])
+        assert gw2.counters["programs_ingest"] == 0
+        run(gw2.stop())
+
+        # tear the newest generation too: restore must walk back past BOTH
+        # corrupted generations (3 torn now, 1 torn by the injector) to the
+        # intact generation 0 — answers equal the reference after round 1
+        assert list_steps(str(tmp_path)) == [0, 1, 3]
+        _tear(str(tmp_path / "step_0000000003" / "arrays.npz"))
+        gw3 = chaos_gateway()
+        assert gw3.counters["restored_from_snapshot"] == 1
+        assert gw3._loop_rt.last_restore_skipped == [3, 1]
+        assert gw3._tick == 1
+        check(run(query_all(gw3)), ref[0])
+        run(gw3.stop(final_snapshot=False))
