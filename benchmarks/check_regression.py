@@ -45,6 +45,7 @@ BENCH_FILES = [
     "BENCH_streaming.json",
     "BENCH_gateway.json",
     "BENCH_chaos.json",
+    "BENCH_forecast.json",
 ]
 # Timing rows with us_per_call below this are jitter, not signal — a 1.5×
 # blowup of a 50µs dispatch round-trip is noise on shared CI hardware.

@@ -1,15 +1,33 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmark contract).
-``bench_backends`` / ``bench_spectral`` / ``bench_fused`` /
-``bench_frame`` / ``bench_streaming`` / ``bench_gateway`` additionally
-emit ``BENCH_{backends,spectral,fused,frame,streaming,gateway}.json`` at
-the repo root so the kernel-backend, spectral-primitive, fused-plan,
-session-API, streaming-ingest, and serving-gateway perf trajectories
-populate per commit;
-``python -m benchmarks.check_regression`` diffs them against the committed
-baselines and fails on >1.5× slowdowns (re-bless with
-``--update-baselines`` after an intentional trade-off).
+
+Two kinds of modules run here:
+
+* **Trajectory benches** — emit a ``BENCH_<name>.json`` at the repo root
+  so the perf trajectory populates per commit, and
+  ``python -m benchmarks.check_regression`` diffs them against the
+  committed baselines (fails on >1.5× slowdowns; re-bless with
+  ``--update-baselines`` after an intentional trade-off):
+  ``bench_backends`` (kernel-backend shootout), ``bench_spectral``
+  (spectral primitive + fused Welch), ``bench_fused`` (N-statistic
+  plans), ``bench_megakernel`` (persistent fused-plan kernel),
+  ``bench_frame`` (SeriesFrame session API), ``bench_streaming``
+  (streaming monoid ingest), ``bench_gateway`` (async serving gateway),
+  ``bench_chaos`` (fault-injection overhead + breaker recovery), and
+  ``bench_forecast`` (served forecasts/sec + accuracy-vs-horizon).
+
+* **Standalone paper-figure benches** — CSV rows only, NO JSON: they
+  reproduce a specific paper table/figure or answer a one-off design
+  question, and their numbers are workload narratives rather than
+  regression surfaces (several sweep sizes/shapes, so a single
+  us_per_call baseline would be meaningless): ``bench_autocov``
+  (Fig. 2 / Fig. 9), ``bench_overlap_scaling`` (Fig. 4), ``bench_mle``
+  (§5 / §7.2 Z-estimators), ``bench_spatial`` (§6 banded high-d),
+  ``bench_graph`` (§11 / Fig. 8), ``bench_accuracy`` (§2 1/√N
+  convergence — a statistical check, not a timing), ``bench_halo``
+  (beyond-paper halo exchange vs replication study), and ``bench_lm``
+  (framework micro-benchmarks).
 """
 from __future__ import annotations
 
@@ -26,6 +44,7 @@ MODULES = [
     "bench_streaming",      # streaming monoid → BENCH_streaming.json
     "bench_gateway",        # async serving gateway → BENCH_gateway.json
     "bench_chaos",          # fault-injection overhead + breaker recovery → BENCH_chaos.json
+    "bench_forecast",       # served forecasts + anomaly scoring → BENCH_forecast.json
     "bench_overlap_scaling",  # paper Fig. 4
     "bench_mle",            # paper §5 / §7.2 Z-estimators
     "bench_spatial",        # paper §6 banded high-d

@@ -199,6 +199,36 @@ def main():
     #     pins that every non-rejected answer matches a fault-free run.)
     print("chaos drill: PYTHONPATH=src python -m pytest tests/test_chaos.py -q")
 
+    # 12. Forecasting as a query, not a pipeline.  ``.forecast(h)`` and
+    #     ``.anomaly_scores()`` are deferred statistics like any other:
+    #     they join the fused plan's lag family (still ONE traversal), fit
+    #     their model from the SAME corrected lagged sums the estimators
+    #     use, and seed a jitted companion-matrix recurrence from the
+    #     plan's carried tail window — predictions and standardized
+    #     innovation scores serve from weak memory (O(W) retained
+    #     samples), never a second pass over the series.
+    f12 = SeriesFrame.from_array(xs[-32_768:])
+    fit12 = f12.yule_walker(p)
+    fc12 = f12.forecast(8, model="ar", p=p)
+    an12 = f12.anomaly_scores(model="ar", p=p)
+    f12.collect()
+    A12, _ = fit12.result()
+    drift = jnp.max(jnp.abs(
+        fc12.result()["pred"] - ar_forecast(A12, xs[-32_768:], 8)
+    ))
+    print(f"plan forecast ≡ eager ar_forecast oracle to {float(drift):.1e}; "
+          f"max anomaly score on the retained window: "
+          f"{float(jnp.max(an12.result()['score'])):.2f} "
+          f"({f12.num_traversals} traversal)")
+    #     ``model="auto"`` additionally wants a deferred ``.welch(...)``
+    #     member: the dominant period is detected from the plan's own
+    #     spectrum (per tenant, under vmap) and seeds a seasonal-lag fit.
+    #     The serving side — per-tenant forecasts + anomaly flags
+    #     coalesced through the gateway, breaker tripping mid-serve —
+    #     is examples/forecast_service.py.
+    print("forecast service: "
+          "PYTHONPATH=src python examples/forecast_service.py")
+
 
 if __name__ == "__main__":
     main()

@@ -93,6 +93,7 @@ def fit_arma(
     q: int,
     m: int | None = None,
     backend=None,
+    ridge: float = 0.0,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Fit ARMA(p, q) from autocovariances γ̂ (paper §3.4).
 
@@ -104,6 +105,8 @@ def fit_arma(
         m gives better Ψ estimates at O(m² d³) driver cost).
       backend: compute-backend spec for the series → γ̂ contraction (ignored
         when ``gamma`` is already stacked autocovariances).
+      ridge: absolute regularizer on the innovation-recursion solves (see
+        `estimators.innovation.innovation_algorithm`); 0.0 is exact.
 
     Returns: A (p,d,d), B (q,d,d), sigma (d,d).
     """
@@ -115,7 +118,7 @@ def fit_arma(
         from .stats import autocovariance
 
         gamma = autocovariance(gamma, m, normalization="standard", backend=backend)
-    theta, V = innovation_algorithm(gamma, m)
+    theta, V = innovation_algorithm(gamma, m, ridge=ridge)
     d = gamma.shape[1]
     # Θ̂_{m,j} estimates Ψⱼ ; prepend Ψ₀ = I.
     psi = jnp.concatenate(

@@ -26,12 +26,19 @@ import jax.numpy as jnp
 __all__ = ["innovation_algorithm", "fit_ma"]
 
 
-def innovation_algorithm(gamma: jax.Array, m_max: int) -> Tuple[jax.Array, jax.Array]:
+def innovation_algorithm(
+    gamma: jax.Array, m_max: int, ridge: float = 0.0
+) -> Tuple[jax.Array, jax.Array]:
     """Run the innovation recursion up to order ``m_max``.
 
     Args:
       gamma: (≥m_max+1, d, d) stacked autocovariances γ(0..m_max).
       m_max: number of recursion steps.
+      ridge: absolute Tikhonov term added to each V_k before its solve.
+        The default 0.0 is the exact recursion; batched plan finalizers
+        (`repro.core.forecast`) pass a tiny ridge so a degenerate tenant
+        (near-empty γ̂, singular V_k) yields finite coefficients instead
+        of poisoning a whole vmapped batch with NaNs.
 
     Returns:
       theta: (m_max, m_max, d, d) — theta[m-1, j-1] = Θ_{m,j} for 1 ≤ j ≤ m,
@@ -42,6 +49,7 @@ def innovation_algorithm(gamma: jax.Array, m_max: int) -> Tuple[jax.Array, jax.A
         raise ValueError(f"need γ̂ up to lag {m_max}, got {gamma.shape[0] - 1}")
     d = gamma.shape[1]
     G = lambda h: gamma[h].T  # Γ(h), h ≥ 0
+    reg = ridge * jnp.eye(d)
 
     theta = [[None] * (m + 1) for m in range(m_max + 1)]  # theta[m][j] = Θ_{m,j}
     V = [G(0)]
@@ -50,7 +58,8 @@ def innovation_algorithm(gamma: jax.Array, m_max: int) -> Tuple[jax.Array, jax.A
             acc = G(m - k)
             for j in range(k):
                 acc = acc - theta[m][m - j] @ V[j] @ theta[k][k - j].T
-            theta[m][m - k] = jnp.linalg.solve(V[k].T, acc.T).T  # acc @ V_k^{-1}
+            # acc @ (V_k + ridge·I)^{-1}
+            theta[m][m - k] = jnp.linalg.solve((V[k] + reg).T, acc.T).T
         Vm = G(0)
         for j in range(m):
             Vm = Vm - theta[m][m - j] @ V[j] @ theta[m][m - j].T

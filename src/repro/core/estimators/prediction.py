@@ -27,11 +27,14 @@ def ar_one_step(A: jax.Array, history: jax.Array) -> jax.Array:
 def ar_forecast(A: jax.Array, history: jax.Array, steps: int) -> jax.Array:
     """Iterated multi-step AR forecast (paper §4.1): (steps, d)."""
     p, d = A.shape[0], A.shape[1]
-    buf = history[-p:]
+    # history[-0:] is the WHOLE series, not an empty buffer — degenerate
+    # p=0 (pure-noise model) must forecast the mean (zero) from no lags.
+    buf = history[-p:] if p > 0 else jnp.zeros((0, d))
 
     def body(buf, _):
         nxt = jnp.einsum("pij,pj->i", A, buf[::-1])
-        buf = jnp.concatenate([buf[1:], nxt[None]], axis=0)
+        if p > 0:
+            buf = jnp.concatenate([buf[1:], nxt[None]], axis=0)
         return buf, nxt
 
     _, preds = jax.lax.scan(body, buf, None, length=steps)

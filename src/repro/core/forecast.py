@@ -1,0 +1,396 @@
+"""Forecast subsystem: served predictions + anomaly scores on the fused-plan
+lag state (paper §4; periodicity-seeded models after arXiv 1810.07776).
+
+The paper's §4 point is that *prediction* is itself a weak-memory
+computation: AR/ARMA forecasting needs only the last max(p, q)
+observations/innovations, so it composes with the same
+fragment-and-replicate scheme as estimation.  This module makes that
+end-to-end: a :func:`forecast_request` (and :func:`anomaly_request`) joins
+the deferred-request surface of `repro.core.plan.StatPlan` as a lag-family
+member, and its finalizer reuses the plan's carried state twice over —
+
+  * the **shared lagged-sum entry** (tail-corrected by
+    ``_PlanGroup._corrected_gamma_sums``) yields the model fit:
+    Yule-Walker for ``model="ar"``, innovations + block-Hankel
+    (`estimators.arma.fit_arma`) for ``model="arma"``, and a
+    restricted-lag Yule-Walker solve (:func:`fit_seasonal_ar`) for
+    ``model="auto"``;
+  * the **carried tail halo** (the last ``W_fused − 1`` samples the
+    engine already retains) is exactly the history the recurrence needs —
+    forecasting reads no data beyond what estimation already carries.
+
+Multi-horizon predictions come from :func:`lagged_forecast`, a
+``lax.scan`` over the model's companion-matrix recurrence (the scan state
+IS the companion vector [X_t, …, X_{t−L+1}]; one step multiplies by the
+companion matrix written in its lag-block form).  Everything here is
+trace-safe: `FrameSession._finalize_batch` vmaps these finalizers across
+tenants into ONE jitted program, which is how `StatsGateway` serves
+forecasts coalesced per tick.
+
+``model="auto"`` (arXiv 1810.07776): the plan must also carry a Welch
+member; :func:`detect_period` reads the dominant non-DC bin of the
+finalized spectrum and the fit augments the short-lag AR structure with
+one seasonal lag at the detected period — per tenant independently.  On
+the single-frame path (`SeriesFrame.collect`, `FrameSession.query`) the
+finalize runs eagerly, so the selection happens host-side from the
+finalized spectrum; under ``query_batch`` the same selection traces into
+the one vmapped program (the period is data, not structure, so N tenants
+with N different periods still share a single compiled recurrence).
+
+Anomaly scoring rides the same fit: the steady-state innovations filter
+(`estimators.prediction.arma_innovations_filter`) runs over the carried
+tail against the fitted model, and residuals are standardized by the
+innovation covariance from the innovation recursion (V_m — what
+``fit_arma`` returns; the Yule-Walker Σ for the AR models).  The first
+max(p, q) scored positions carry the filter's zero-init transient (the
+paper notes it decays exponentially for causal+invertible models).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .estimators.prediction import arma_innovations_filter
+
+__all__ = [
+    "forecast_request",
+    "anomaly_request",
+    "ModelSpec",
+    "resolve_model_spec",
+    "detect_period",
+    "fit_seasonal_ar",
+    "lagged_forecast",
+    "standardized_innovations",
+    "make_forecast_finalizer",
+    "make_anomaly_finalizer",
+]
+
+MODELS = ("ar", "arma", "auto")
+DEFAULT_MAX_PERIOD = 32
+# Absolute ridge on the innovation-recursion V_k solves in the arma fit:
+# keeps a batched finalize finite for degenerate (near-empty) tenants
+# without measurably moving coefficients fitted from real data.
+ARMA_RIDGE = 1e-8
+
+
+# ---------------------------------------------------------------- requests
+def forecast_request(
+    horizon: int,
+    model: str = "ar",
+    p: int = 4,
+    q: int = 1,
+    m: Optional[int] = None,
+    max_period: Optional[int] = None,
+    name: Optional[str] = None,
+):
+    """Multi-horizon forecast from the plan's carried lag state.
+
+    Finalizes to ``{"pred": (horizon, d), "sigma": (d, d)}`` (plus
+    ``"period"`` for ``model="auto"``).
+
+    Args:
+      horizon: number of steps ahead (≥ 1).
+      model: ``"ar"`` (Yule-Walker order-p), ``"arma"`` (innovations-fit
+        ARMA(p, q)), or ``"auto"`` (short-lag AR of order p plus one
+        seasonal lag at the detected period; the plan must also carry a
+        Welch member).
+      p / q / m: model orders; ``m`` is the arma innovation-recursion
+        depth (default ``p + q``), ignored otherwise.
+      max_period: auto only — the largest detectable seasonal lag (sets
+        the member's window, default ``32``).
+    """
+    from .plan import StatRequest
+
+    spec = resolve_model_spec(model, p, q, m, max_period)  # validates
+    if horizon < 1:
+        raise ValueError(f"forecast horizon must be >= 1, got {horizon}")
+    del spec
+    return StatRequest(
+        "forecast", name, (int(horizon), model, int(p), int(q), m, max_period)
+    )
+
+
+def anomaly_request(
+    model: str = "ar",
+    p: int = 4,
+    q: int = 1,
+    m: Optional[int] = None,
+    max_period: Optional[int] = None,
+    name: Optional[str] = None,
+):
+    """Standardized innovation residuals over the carried tail window.
+
+    Finalizes to ``{"z": (W−1, d), "score": (W−1,), "valid": (W−1,),
+    "sigma": (d, d)}``: ``z`` is the per-dimension standardized innovation,
+    ``score`` the Mahalanobis norm under the fitted innovation covariance,
+    ``valid`` masks the right-aligned rows actually covered by ingested
+    samples.  Model selection matches :func:`forecast_request`.
+    """
+    from .plan import StatRequest
+
+    resolve_model_spec(model, p, q, m, max_period)  # validates
+    return StatRequest("anomaly", name, (model, int(p), int(q), m, max_period))
+
+
+# ---------------------------------------------------------------- model spec
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Resolved static structure of one forecast/anomaly member."""
+
+    model: str
+    p: int
+    q: int
+    m: int          # arma innovation-recursion depth (0 otherwise)
+    lag_span: int   # largest lag the member reads → member window − 1
+
+    @property
+    def needs_welch(self) -> bool:
+        return self.model == "auto"
+
+
+def resolve_model_spec(
+    model: str,
+    p: int,
+    q: int,
+    m: Optional[int] = None,
+    max_period: Optional[int] = None,
+) -> ModelSpec:
+    """Validate orders and resolve the member's static lag span."""
+    if model not in MODELS:
+        raise ValueError(f"model must be one of {MODELS}, got {model!r}")
+    if p < 1:
+        raise ValueError(f"need p >= 1, got p={p}")
+    if q < 0:
+        raise ValueError(f"need q >= 0, got q={q}")
+    if model == "arma":
+        depth = max(m if m is not None else p + q, p + q)
+        return ModelSpec(model, p, q, depth, depth)
+    if model == "auto":
+        span = DEFAULT_MAX_PERIOD if max_period is None else int(max_period)
+        # the seasonal lag lives in (p, span]; p short lags + 1 seasonal
+        if span < p + 1:
+            raise ValueError(
+                f"max_period={span} leaves no room for a seasonal lag "
+                f"beyond the p={p} short lags; need max_period >= {p + 1}"
+            )
+        return ModelSpec(model, p, 0, 0, span)
+    return ModelSpec(model, p, 0, 0, p)  # "ar"
+
+
+# ------------------------------------------------------------- periodicity
+def detect_period(
+    psd: jax.Array, nperseg: int, min_period: int, max_period: int
+) -> jax.Array:
+    """Dominant period from a finalized one-sided PSD (arXiv 1810.07776).
+
+    Picks the non-DC bin with the largest total power (summed over
+    dimensions), converts bin k → period ``nperseg / k``, and clips into
+    ``[min_period, max_period]``.  Pure jnp — runs eagerly (host-side) on
+    the per-frame path and traces under the vmapped batch finalize, where
+    each tenant's period is data, not program structure.
+    """
+    power = jnp.sum(jnp.asarray(psd), axis=-1)
+    power = power.at[0].set(-jnp.inf)  # DC is trend, not seasonality
+    k = jnp.maximum(jnp.argmax(power), 1)
+    period = jnp.round(nperseg / k).astype(jnp.int32)
+    return jnp.clip(period, min_period, max_period)
+
+
+# ------------------------------------------------------------ seasonal fit
+def fit_seasonal_ar(
+    gamma: jax.Array, lags: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Yule-Walker restricted to an arbitrary lag set (traced lags OK).
+
+    Fits ``X_t = Σ_a A_a X_{t−ℓ_a} + ε_t`` by orthogonality against the
+    regressors: ``γ(ℓ_b) = Σ_a γ(ℓ_b − ℓ_a)ᵀ A_aᵀ`` stacked over b.  With
+    ``lags == 1..p`` this is exactly `estimators.yule_walker.yule_walker`
+    (same block-Toeplitz system); distinct non-contiguous lags (the
+    seasonal structure of ``model="auto"``) just gather different γ̂
+    blocks.  The lag values may be traced ints — the system's *shape* is
+    static in ``len(lags)``, which is what lets N tenants with N detected
+    periods share one vmapped program.
+
+    Args:
+      gamma: (≥max(lags)+1, d, d) stacked autocovariances.
+      lags: (r,) distinct positive lags.
+
+    Returns: A (r, d, d) aligned with ``lags``, sigma (d, d).
+    """
+    lags = jnp.asarray(lags, jnp.int32)
+    r = lags.shape[0]
+    d = gamma.shape[1]
+    H = lags[:, None] - lags[None, :]                       # ℓ_b − ℓ_a
+    G = jnp.take(gamma, jnp.abs(H), axis=0)                 # (r, r, d, d)
+    G = jnp.where((H >= 0)[..., None, None], G, jnp.swapaxes(G, -1, -2))
+    M = G.transpose(0, 2, 1, 3).reshape(r * d, r * d)
+    Gl = jnp.take(gamma, lags, axis=0)                      # γ(ℓ_a)
+    sol = jnp.linalg.solve(M, Gl.reshape(r * d, d))         # stacked A_aᵀ
+    A = jnp.swapaxes(sol.reshape(r, d, d), -1, -2)
+    sigma = gamma[0] - jnp.einsum("aij,ajk->ik", A, Gl)
+    return A, sigma
+
+
+# ------------------------------------------------------------- recurrence
+def lagged_forecast(
+    Phi: jax.Array, Theta: jax.Array, xlag: jax.Array, elag: jax.Array,
+    steps: int,
+) -> jax.Array:
+    """Multi-horizon prediction via the companion-matrix recurrence.
+
+    One ``lax.scan`` step multiplies the companion vector
+    ``[X̂_t, …, X̂_{t−L+1}]`` by the companion matrix written in lag-block
+    form (top row = the Φ blocks, subdiagonal = identity shifts) — with
+    future innovations at their mean (zero), so the MA contribution fades
+    after q steps.  With ``Phi == A`` (L == p) this is bit-identical to
+    `estimators.prediction.ar_forecast` / ``arma_forecast``'s iteration;
+    dense zero-padded Φ rows add exact zeros, so padded layouts (the
+    fused-plan members) stay on the oracle's numbers.
+
+    Args:
+      Phi: (L, d, d) lag coefficients, Φ_l at index l−1 (zeros elsewhere).
+      Theta: (q, d, d) innovation coefficients.
+      xlag: (L, d) observations newest-first.
+      elag: (q, d) innovations newest-first.
+      steps: forecast horizon.
+
+    Returns: (steps, d) predictions X̂_{t+1..t+steps}.
+    """
+    d = Phi.shape[1]
+    q = Theta.shape[0]
+
+    def body(carry, _):
+        xlag, elag = carry
+        pred = jnp.einsum("lij,lj->i", Phi, xlag)
+        if q > 0:
+            pred = pred + jnp.einsum("qij,qj->i", Theta, elag)
+        if Phi.shape[0] > 0:
+            xlag = jnp.concatenate([pred[None], xlag[:-1]], axis=0)
+        if q > 0:
+            elag = jnp.concatenate([jnp.zeros((1, d)), elag[:-1]], axis=0)
+        return (xlag, elag), pred
+
+    _, preds = jax.lax.scan(body, (xlag, elag), None, length=steps)
+    return preds
+
+
+def standardized_innovations(
+    Phi: jax.Array, Theta: jax.Array, x: jax.Array, sigma: jax.Array,
+    eps: float = 1e-9,
+) -> Tuple[jax.Array, jax.Array]:
+    """Innovation residuals of ``x`` under the fitted model, standardized.
+
+    Runs the steady-state innovations filter (zero init) and scales by the
+    innovation covariance from the innovation recursion: ``z`` divides each
+    dimension by its innovation standard deviation, ``score`` is the
+    Mahalanobis norm ``√(ε̂ᵀ Σ⁻¹ ε̂)`` (a χ_d-distributed magnitude under
+    the model, so one thresholdable scalar per sample).
+
+    Returns: z (T, d), score (T,).
+    """
+    _, innov = arma_innovations_filter(Phi, Theta, x)
+    d = sigma.shape[0]
+    var = jnp.clip(jnp.diagonal(sigma), eps, None)
+    z = innov / jnp.sqrt(var)[None, :]
+    w = jnp.linalg.solve(sigma + eps * jnp.eye(d), innov.T).T
+    score = jnp.sqrt(jnp.clip(jnp.sum(innov * w, axis=-1), 0.0))
+    return z, score
+
+
+# -------------------------------------------------------- plan finalizers
+def _fitted_model(group, state, spec: ModelSpec):
+    """(Phi dense (lag_span, d, d), Theta (q, d, d), sigma, period|None)
+    from the plan group's tail-corrected lag sums."""
+    from .estimators.stats import gamma_normalizer
+
+    s = group._corrected_gamma_sums(state, spec.lag_span)
+    norm = gamma_normalizer(state.length, spec.lag_span, "standard")
+    gamma = s * norm[:, None, None]
+    d = group.d
+    L = spec.lag_span
+    period = None
+    if spec.model == "ar":
+        from .estimators.yule_walker import yule_walker
+
+        A, sigma = yule_walker(gamma, spec.p)
+        Phi, Theta = A, jnp.zeros((0, d, d))
+    elif spec.model == "arma":
+        from .estimators.arma import fit_arma
+
+        A, B, sigma = fit_arma(gamma, spec.p, spec.q, spec.m, ridge=ARMA_RIDGE)
+        Phi = jnp.zeros((L, d, d)).at[: spec.p].set(A)
+        Theta = B
+    else:  # auto: short lags 1..p plus one seasonal lag at the period
+        info = group._welch_info[0]
+        welch_member = next(
+            mem for mem in group.members if mem.name == info.name
+        )
+        _, psd = welch_member.finalize(state)
+        period = detect_period(psd, info.nperseg, spec.p + 1, L)
+        lags = jnp.concatenate(
+            [jnp.arange(1, spec.p + 1, dtype=jnp.int32), period[None]]
+        )
+        A, sigma = fit_seasonal_ar(gamma, lags)
+        Phi = jnp.zeros((L, d, d)).at[lags - 1].set(A)
+        Theta = jnp.zeros((0, d, d))
+    return Phi, Theta, sigma, period
+
+
+def make_forecast_finalizer(group, horizon: int, spec: ModelSpec):
+    """Finalizer for one forecast member of a `_PlanGroup`.
+
+    Fits the model from the shared lagged entry, seeds the companion
+    recurrence from the carried tail halo (for arma, innovations come from
+    filtering that same tail — the weak-memory window, zero-init as in
+    paper §4.2), and scans out ``horizon`` predictions.  Trace-safe: this
+    is what `FrameSession._finalize_batch` vmaps across tenants.
+    """
+
+    def fin(state):
+        Phi, Theta, sigma, period = _fitted_model(group, state, spec)
+        d = group.d
+        L = spec.lag_span
+        xlag = state.tail[-1 : -L - 1 : -1]          # newest first
+        if spec.q > 0:
+            _, innov = arma_innovations_filter(Phi, Theta, state.tail)
+            elag = innov[-1 : -spec.q - 1 : -1]
+        else:
+            elag = jnp.zeros((0, d))
+        out = {
+            "pred": lagged_forecast(Phi, Theta, xlag, elag, horizon),
+            "sigma": sigma,
+        }
+        if period is not None:
+            out["period"] = period
+        return out
+
+    return fin
+
+
+def make_anomaly_finalizer(group, spec: ModelSpec):
+    """Finalizer for one anomaly member: standardized innovations over the
+    carried tail, with a validity mask for the right-aligned zero-fill
+    (rows older than the series, or beyond the retained horizon in
+    eviction mode, score zero and are flagged invalid)."""
+
+    def fin(state):
+        Phi, Theta, sigma, period = _fitted_model(group, state, spec)
+        tail = state.tail
+        carry = tail.shape[0]
+        z, score = standardized_innovations(Phi, Theta, tail, sigma)
+        rows = jnp.arange(carry)
+        valid = rows >= carry - jnp.minimum(state.length, carry)
+        out = {
+            "z": jnp.where(valid[:, None], z, 0.0),
+            "score": jnp.where(valid, score, 0.0),
+            "valid": valid,
+            "sigma": sigma,
+        }
+        if period is not None:
+            out["period"] = period
+        return out
+
+    return fin

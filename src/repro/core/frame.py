@@ -60,8 +60,10 @@ from .backend import BackendSpec, get_backend
 from .plan import (
     StatPlan,
     StatRequest,
+    anomaly_request,
     arma_request,
     autocovariance_request,
+    forecast_request,
     kernel_request,
     moments_request,
     welch_request,
@@ -130,6 +132,28 @@ class _DeferredRequests:
               fs: float = 1.0, name: Optional[str] = None):
         """Defer a Welch PSD (freqs, psd)."""
         return self._defer(welch_request(nperseg, overlap, fs, name))
+
+    def forecast(self, horizon: int, model: str = "ar", p: int = 4,
+                 q: int = 1, m: Optional[int] = None,
+                 max_period: Optional[int] = None,
+                 name: Optional[str] = None):
+        """Defer a multi-horizon forecast served from the plan's carried
+        lag state: ``{"pred": (horizon, d), "sigma": (d, d)}`` (plus
+        ``"period"`` when ``model="auto"``, which also needs a deferred
+        ``.welch(...)`` member for periodicity detection).  See
+        `repro.core.forecast.forecast_request`."""
+        return self._defer(
+            forecast_request(horizon, model, p, q, m, max_period, name)
+        )
+
+    def anomaly_scores(self, model: str = "ar", p: int = 4, q: int = 1,
+                       m: Optional[int] = None,
+                       max_period: Optional[int] = None,
+                       name: Optional[str] = None):
+        """Defer standardized innovation residuals over the carried tail
+        window (per-dim ``z`` and a Mahalanobis ``score``, with a validity
+        mask).  See `repro.core.forecast.anomaly_request`."""
+        return self._defer(anomaly_request(model, p, q, m, max_period, name))
 
     def map_reduce(self, chunk_kernel: Callable, h_right: int, h_left: int = 0,
                    stride: int = 1, takes_offset: bool = False,
@@ -724,6 +748,13 @@ class FrameSession(_DeferredRequests):
     def plan(self) -> StatPlan:
         self._ensure_plan()
         return self._plan
+
+    @property
+    def request_names(self) -> tuple:
+        """Names of every deferred request, in declaration order — the keys
+        of ``query`` / ``query_batch`` results (and the valid values for
+        the gateway's ``only=`` query-kind filter)."""
+        return tuple(r.name for r in self._recorded)
 
     def _ensure_plan(self):
         if self._plan is not None:

@@ -32,8 +32,11 @@ nothing in accuracy: member results are bit-comparable (≤ float round-off)
 to independent estimator calls.
 
 Shared components: every lag-family member (autocovariance, Yule-Walker,
-ARMA) reads slices of ONE ``(H_max+1, d, d)`` lagged-sum entry, so adding
-a Yule-Walker fit to a plan that already tracks autocovariance is free.
+ARMA — and the forecast/anomaly members of `repro.core.forecast`, whose
+fits derive from the same γ̂ sums and whose recurrences seed from the
+carried tail halo) reads slices of ONE ``(H_max+1, d, d)`` lagged-sum
+entry, so adding a Yule-Walker fit to a plan that already tracks
+autocovariance is free.
 Whenever at least two primitive FAMILIES are members (lag sums, windowed
 moments, Welch segments), the whole chunk update collapses into one
 ``fused_plan_update`` call — the persistent megakernel
@@ -70,6 +73,13 @@ import jax
 import jax.numpy as jnp
 
 from .backend import BackendSpec, get_backend
+from .forecast import (
+    anomaly_request,
+    forecast_request,
+    make_anomaly_finalizer,
+    make_forecast_finalizer,
+    resolve_model_spec,
+)
 from .mapreduce import tree_sum
 from .streaming import PartialState, StreamingEngine
 
@@ -83,6 +93,8 @@ __all__ = [
     "moments_request",
     "welch_request",
     "kernel_request",
+    "forecast_request",
+    "anomaly_request",
 ]
 
 
@@ -220,6 +232,7 @@ class _PlanGroup:
         lag_specs = []      # (name, request) needing the shared lagged entry
         moment_windows = {}  # window -> key
         traverse_extra = []  # offset-aware per-member traversal callables
+        auto_members = []   # forecast/anomaly model="auto": need a welch member
 
         max_lag = 0
         windows = [1]
@@ -246,6 +259,28 @@ class _PlanGroup:
                 self.members.append(
                     _Member(name, m + 1, 1, None, self._arma_finalizer(p, q, m))
                 )
+            elif req.kind == "forecast":
+                horizon, model, p, q, m, max_period = req.params
+                spec = resolve_model_spec(model, p, q, m, max_period)
+                max_lag = max(max_lag, spec.lag_span)
+                windows.append(spec.lag_span + 1)
+                self.members.append(
+                    _Member(name, spec.lag_span + 1, 1, None,
+                            make_forecast_finalizer(self, horizon, spec))
+                )
+                if spec.needs_welch:
+                    auto_members.append(name)
+            elif req.kind == "anomaly":
+                model, p, q, m, max_period = req.params
+                spec = resolve_model_spec(model, p, q, m, max_period)
+                max_lag = max(max_lag, spec.lag_span)
+                windows.append(spec.lag_span + 1)
+                self.members.append(
+                    _Member(name, spec.lag_span + 1, 1, None,
+                            make_anomaly_finalizer(self, spec))
+                )
+                if spec.needs_welch:
+                    auto_members.append(name)
             elif req.kind == "moments":
                 (w,) = req.params
                 moment_windows.setdefault(w, f"w{w}")
@@ -280,8 +315,16 @@ class _PlanGroup:
         self.window = max(windows)
         self.max_lag = max_lag
         self.has_lagged = any(
-            r.kind in ("autocovariance", "yule_walker", "arma") for r in requests
+            r.kind in ("autocovariance", "yule_walker", "arma",
+                       "forecast", "anomaly")
+            for r in requests
         )
+        if auto_members and not self._welch_info:
+            raise ValueError(
+                f"model='auto' members {auto_members} seed their seasonal "
+                "lag from the plan's Welch spectrum; add a welch member "
+                "(welch_request / .welch(...)) to the same plan"
+            )
         self.moment_windows = dict(sorted(moment_windows.items()))
         self._traverse_extra = traverse_extra
         welch_names = {info.name for info in self._welch_info}

@@ -41,6 +41,14 @@ What was missing is a concurrency front door.  This module is it:
     counts when the session's backend is a
     `repro.core.backend.CircuitBreakerBackend`.
 
+Forecasts and anomaly scores are served the same way as every other
+statistic: a session whose plan carries `repro.core.forecast` members
+(``session.forecast(...)`` / ``session.anomaly_scores(...)``) resolves
+them inside the tick's ONE batched finalize — the vmapped companion-matrix
+recurrence runs across every queried tenant in the same compiled program.
+``submit_query(tenant, only="forecast")`` narrows a waiter's answer to
+specific query kinds without changing what the tick executes.
+
 The gateway is transport-agnostic: `examples/gateway_demo.py` drives it
 in-process; an HTTP/gRPC front end would call the same ``submit_*``
 surface from its handlers.
@@ -147,6 +155,7 @@ class _Pending:
     future: asyncio.Future
     t_submit: float
     chunk: Optional[np.ndarray] = None     # ingest only
+    only: Optional[tuple] = None           # query only: request-name filter
 
 
 class _TokenBuckets:
@@ -331,12 +340,27 @@ class StatsGateway:
         )
         return fut
 
-    def submit_query(self, tenant: int) -> asyncio.Future:
+    def submit_query(self, tenant: int, only=None) -> asyncio.Future:
         """Admit one query request; resolves to ``{request_name: result}``
-        (this tenant's slice of the tick's batched read)."""
+        (this tenant's slice of the tick's batched read).
+
+        ``only`` — a request name or iterable of names (e.g. a forecast or
+        anomaly member) — narrows the resolved dict to those query kinds.
+        The filter is applied host-side to the tenant's slice: every admitted
+        query still rides the SAME one-per-tick batched finalize, so asking
+        for just the forecast costs no extra device program.
+        """
         if self._closed:
             raise RuntimeError("gateway is closed")
         tenant = self._check_tenant(tenant)
+        if only is not None:
+            only = (only,) if isinstance(only, str) else tuple(only)
+            unknown = set(only) - set(self.session.request_names)
+            if unknown:
+                raise ValueError(
+                    f"unknown query kinds {sorted(unknown)}; this session "
+                    f"serves {list(self.session.request_names)}"
+                )
         if (
             self._health == "degraded"
             and self._class_of(tenant).priority <= self._min_priority()
@@ -359,7 +383,9 @@ class StatsGateway:
                 " query rate"
             )
         fut = _event_loop().create_future()
-        self._query_q.append(_Pending(tenant, fut, time.perf_counter()))
+        self._query_q.append(
+            _Pending(tenant, fut, time.perf_counter(), only=only)
+        )
         return fut
 
     async def ingest(self, tenant: int, chunk) -> int:
@@ -367,10 +393,11 @@ class StatsGateway:
         Returns the tick index that absorbed the chunk."""
         return await self.submit_ingest(tenant, chunk)
 
-    async def query(self, tenant: int) -> dict:
+    async def query(self, tenant: int, only=None) -> dict:
         """Coroutine front door: this tenant's deferred statistics as of
-        the resolving tick."""
-        return await self.submit_query(tenant)
+        the resolving tick (optionally narrowed to the ``only`` kinds —
+        e.g. ``await gw.query(7, only="forecast")``)."""
+        return await self.submit_query(tenant, only=only)
 
     # ------------------------------------------------------------- the tick
     async def tick(self) -> dict:
@@ -520,11 +547,10 @@ class StatsGateway:
         host = jax.device_get(results)
         for req in pending:
             pos = order[req.tenant]
-            self._resolve(
-                req,
-                jax.tree.map(lambda l: l[pos], host),
-                self._lat_query,
-            )
+            value = jax.tree.map(lambda l: l[pos], host)
+            if req.only is not None:
+                value = {k: value[k] for k in req.only}
+            self._resolve(req, value, self._lat_query)
         return len(pending)
 
     def _resolve(self, req: _Pending, value: Any, lat: Deque[float]) -> None:

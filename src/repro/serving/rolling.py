@@ -36,6 +36,16 @@ statistics cover the retained horizon: the last ``w`` samples with
 evictions.  The multi-statistic front door over this machinery is
 `repro.core.frame.FrameSession`.
 
+**Tail fidelity is a serving contract.**  The merged cross-lane state a
+query hands to finalizers carries the *exact* last ``W − 1`` samples of
+the user's (retained) series in ``tail``, right-aligned and zero-filled —
+not just lag sums.  Downstream this is load-bearing beyond the ragged-tail
+correction: the forecast/anomaly members of `repro.core.forecast` seed
+their companion-matrix recurrence and innovations filter from that very
+window, so ⊕-fold order, eviction resets, and `export_state` /
+``import_state`` round-trips must all preserve it bit-exactly (the
+kill-and-restart forecast determinism pin in tests/test_gateway.py).
+
 The compute substrate of the ingest hot loop is the engine's backend
 (`repro.core.backend`): build the engine with
 ``lag_sum_engine(..., backend="pallas")`` and every batched ``ingest``

@@ -15,6 +15,7 @@ from repro.core.estimators.mle import (
 from repro.core.estimators.prediction import (
     ar_forecast,
     ar_one_step,
+    arma_forecast,
     arma_innovations_filter,
 )
 from repro.core.estimators.stats import (
@@ -176,3 +177,87 @@ def test_innovations_filter_whitens():
 def test_generator_stability():
     A = random_stable_var(jax.random.PRNGKey(20), 3, 4, radius=0.8)
     assert spectral_radius(np.asarray(A)) == pytest.approx(0.8, rel=1e-5)
+
+
+# ------------------------------------------------- prediction edge cases
+
+
+def test_forecast_steps_one_is_one_step(var2_data):
+    A, xs = var2_data
+    hist = xs[:257]
+    np.testing.assert_array_equal(
+        np.asarray(ar_forecast(A, hist, 1)[0]),
+        np.asarray(ar_one_step(A, hist)),
+    )
+
+
+def test_pure_ma_forecast_p_zero():
+    """p=0 must use an EMPTY AR buffer — not history[-0:], which is the
+    whole series. Beyond q steps a pure-MA forecast is exactly zero."""
+    d = 2
+    B = random_invertible_ma(jax.random.PRNGKey(21), 2, d, radius=0.4)
+    xs = simulate_vma(jax.random.PRNGKey(22), B, 500)
+    A0 = jnp.zeros((0, d, d))
+    preds = arma_forecast(A0, B, xs, 5)
+    assert preds.shape == (5, d)
+    # the first q=2 steps are driven purely by retained innovations
+    _, innov = arma_innovations_filter(A0, B, xs)
+    want1 = B[0] @ innov[-1] + B[1] @ innov[-2]
+    np.testing.assert_allclose(np.asarray(preds[0]), np.asarray(want1),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(preds[2:]),
+                                  np.zeros((3, d), np.float32))
+
+
+def test_pure_ar_arma_forecast_matches_ar_forecast(var2_data):
+    """q=0 collapses arma_forecast onto the plain AR recurrence."""
+    A, xs = var2_data
+    hist = xs[:300]
+    got = arma_forecast(A, jnp.zeros((0, 3, 3)), hist, 6)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ar_forecast(A, hist, 6)))
+
+
+def test_prediction_univariate_d1():
+    """d=1: matrix recurrences reduce to the scalar AR(1)/MA(1) formulas."""
+    phi, theta = 0.6, 0.4
+    rng = np.random.RandomState(0)
+    x = np.zeros((400, 1), np.float32)
+    e = rng.randn(400).astype(np.float32)
+    for t in range(1, 400):
+        x[t] = phi * x[t - 1] + e[t] + theta * e[t - 1]
+    A = jnp.full((1, 1, 1), phi)
+    B = jnp.full((1, 1, 1), theta)
+    xs = jnp.asarray(x)
+    preds = arma_forecast(A, B, xs, 3)
+    _, innov = arma_innovations_filter(A, B, xs)
+    p1 = phi * x[-1, 0] + theta * float(innov[-1, 0])
+    assert float(preds[0, 0]) == pytest.approx(p1, rel=1e-5)
+    assert float(preds[1, 0]) == pytest.approx(phi * p1, rel=1e-5)
+    assert float(preds[2, 0]) == pytest.approx(phi * phi * p1, rel=1e-5)
+
+
+def test_innovations_filter_matches_python_recursion():
+    """Pin arma_innovations_filter against a direct loop: pred_t =
+    sum_i A_i x_{t-i} + sum_j B_j e_{t-j}, e_t = x_t - pred_t, zero init."""
+    d, p, q, n = 2, 2, 1, 64
+    A = random_stable_var(jax.random.PRNGKey(23), p, d, radius=0.5)
+    B = random_invertible_ma(jax.random.PRNGKey(24), q, d, radius=0.3)
+    xs = simulate_varma(jax.random.PRNGKey(25), A, B, n)
+    preds, innov = arma_innovations_filter(A, B, xs)
+
+    An, Bn, x = np.asarray(A), np.asarray(B), np.asarray(xs)
+    e = np.zeros_like(x)
+    pr = np.zeros_like(x)
+    for t in range(n):
+        acc = np.zeros(d, x.dtype)
+        for i in range(p):
+            if t - 1 - i >= 0:
+                acc += An[i] @ x[t - 1 - i]
+        for j in range(q):
+            if t - 1 - j >= 0:
+                acc += Bn[j] @ e[t - 1 - j]
+        pr[t] = acc
+        e[t] = x[t] - acc
+    np.testing.assert_allclose(np.asarray(preds), pr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(innov), e, rtol=1e-4, atol=1e-5)

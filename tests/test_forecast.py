@@ -1,0 +1,373 @@
+"""Forecast subsystem: plan forecasts ≡ eager oracles, one traversal,
+one vmapped program, anomaly scoring, periodicity-seeded auto models.
+
+Pins the ISSUE-9 acceptance contracts:
+  * a plan-served forecast equals the eager `ar_forecast` / `arma_forecast`
+    oracle (same fit, same tail window) across jnp and pallas backends;
+  * a 3-statistic plan WITH a forecast member still reads the series once
+    (counting backend);
+  * `FrameSession` forecasts for N tenants compile to ONE vmapped
+    recurrence program (jit-cache pin) and match per-tenant frames;
+  * anomaly scores flag an injected spike and match the direct
+    standardized-innovations computation;
+  * ``model="auto"`` detects the seasonal period from the plan's Welch
+    member and its restricted-lag fit reduces to dense Yule-Walker on
+    contiguous lags.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.backend import get_backend
+from repro.core.forecast import (
+    anomaly_request,
+    detect_period,
+    fit_seasonal_ar,
+    forecast_request,
+    lagged_forecast,
+    standardized_innovations,
+)
+from repro.core.frame import FrameSession, SeriesFrame
+from repro.core.estimators.arma import fit_arma
+from repro.core.estimators.prediction import (
+    ar_forecast,
+    arma_forecast,
+    arma_innovations_filter,
+)
+from repro.core.estimators.stats import autocovariance
+from repro.core.estimators.yule_walker import yule_walker
+
+D = 2
+
+
+def _ar_series(n=512, d=D, seed=0, noise=0.3):
+    rng = np.random.RandomState(seed)
+    A1 = 0.5 * np.eye(d, dtype=np.float32) + 0.1 * np.triu(np.ones((d, d)), 1)
+    x = np.zeros((n, d), np.float32)
+    for t in range(1, n):
+        x[t] = x[t - 1] @ A1.T + noise * rng.randn(d)
+    return jnp.asarray(x)
+
+
+def _seasonal_series(n=512, d=D, period=8, seed=1, noise=0.1):
+    rng = np.random.RandomState(seed)
+    t = np.arange(n)
+    base = np.sin(2 * np.pi * t / period)[:, None] * np.ones((1, d))
+    return jnp.asarray((base + noise * rng.randn(n, d)).astype(np.float32))
+
+
+# ---------------------------------------------------------------- oracles
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_forecast_matches_ar_oracle(backend):
+    """Plan-served AR forecast == eager ar_forecast on the same YW fit,
+    bit-for-bit (same γ̂, same recurrence)."""
+    x = _ar_series()
+    f = SeriesFrame.from_array(x, backend=backend)
+    f.yule_walker(3, normalization="standard")
+    f.forecast(6, model="ar", p=3)
+    res = f.collect()
+    A, sigma = res["yule_walker"]
+    want = ar_forecast(A, x, 6)
+    np.testing.assert_array_equal(
+        np.asarray(res["forecast"]["pred"]), np.asarray(want)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res["forecast"]["sigma"]), np.asarray(sigma)
+    )
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_forecast_matches_arma_oracle(backend):
+    """Plan-served ARMA forecast == eager arma_forecast fed the SAME fit
+    and the SAME weak-memory history window (the carried tail)."""
+    x = _ar_series(seed=2)
+    f = SeriesFrame.from_array(x, backend=backend)
+    f.forecast(5, model="arma", p=1, q=1)
+    res = f.collect()
+    carry = f._plan.groups[0].engine.carry
+    gamma = autocovariance(x, 2, normalization="standard")
+    A, B, sigma = fit_arma(gamma, 1, 1, 2, ridge=1e-8)
+    want = arma_forecast(A, B, x[-carry:], 5)
+    np.testing.assert_allclose(
+        np.asarray(res["forecast"]["pred"]), np.asarray(want),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_forecast_seeds_from_tail_not_just_lags():
+    """Two series with identical γ̂-shape but different endings forecast
+    differently — the recurrence must read the carried tail, not only the
+    lag sums."""
+    x = _ar_series(seed=3)
+    flipped = jnp.concatenate([x[:-8], -x[-8:]])
+    preds = []
+    for series in (x, flipped):
+        f = SeriesFrame.from_array(series)
+        f.forecast(3, model="ar", p=2)
+        preds.append(np.asarray(f.collect()["forecast"]["pred"]))
+    assert np.max(np.abs(preds[0] - preds[1])) > 1e-4
+
+
+# ------------------------------------------------------------ one traversal
+
+
+class CountingBackend:
+    """Delegating backend recording (primitive, rows) per invocation
+    (mirrors tests/test_plan.py)."""
+
+    name = "counting"
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.calls = []
+
+    def _rec(self, prim, rows):
+        self.calls.append((prim, int(rows)))
+
+    def masked_lagged_sums(self, y, mask, max_lag):
+        self._rec("masked_lagged_sums", mask.shape[0])
+        return self._inner.masked_lagged_sums(y, mask, max_lag)
+
+    def fused_lagged_moments(self, y, mask, max_lag, window):
+        self._rec("fused_lagged_moments", mask.shape[0])
+        return self._inner.fused_lagged_moments(y, mask, max_lag, window)
+
+    def segment_fft_power(self, segments, taper, detrend=True):
+        self._rec("segment_fft_power", segments.shape[0] * segments.shape[1])
+        return self._inner.segment_fft_power(segments, taper, detrend)
+
+    def series_traversals(self, n):
+        return [
+            c for c in self.calls if c[1] >= n and c[0] != "segment_fft_power"
+        ]
+
+
+def test_three_statistic_plan_with_forecast_is_one_traversal():
+    """[autocovariance, moments, forecast] — the forecast member joins the
+    shared lagged entry: exactly ONE series-sized primitive call, every
+    other call a halo-sized finalize correction."""
+    n = 2000
+    x = _ar_series(n=n)
+    counting = CountingBackend(get_backend("jnp"))
+    f = SeriesFrame.from_array(x, backend=counting)
+    f.autocovariance(3)
+    f.moments(8)
+    f.forecast(4, model="ar", p=3)
+    res = f.collect()
+    assert sorted(res) == ["autocovariance", "forecast", "moments"]
+    assert f.num_traversals == 1
+    walks = counting.series_traversals(n)
+    assert walks == [("fused_lagged_moments", n)]
+    others = [r for p, r in counting.calls if r < n]
+    assert all(r < 64 for r in others)  # tail-correction contractions only
+
+
+# ----------------------------------------------------- session / one program
+
+
+def test_session_forecasts_compile_one_vmapped_recurrence_program():
+    """N tenants' forecasts ride ONE jit-cached vmapped finalize — and each
+    tenant's answer equals a dedicated per-tenant SeriesFrame."""
+    N, c = 6, 96
+    sess = FrameSession(d=D, num_users=N)
+    sess.forecast(5, model="ar", p=3)
+    sess.anomaly_scores(model="ar", p=3)
+    chunks = np.stack(
+        [np.asarray(_ar_series(n=c, seed=10 + u)) for u in range(N)]
+    )
+    sess.ingest(np.arange(N, dtype=np.int32), chunks)
+
+    out = sess.query_batch(np.arange(N, dtype=np.int32))
+    assert out["forecast"]["pred"].shape == (N, 5, D)
+    # different id subsets of the same batch size: still one trace
+    sess.query_batch(np.asarray([3, 1, 0, 2, 5, 4], np.int32))
+    assert sess._finalize_batch._cache_size() == 1
+
+    for u in range(N):
+        ref = SeriesFrame.from_array(chunks[u])
+        ref.forecast(5, model="ar", p=3)
+        ref.anomaly_scores(model="ar", p=3)
+        want = ref.collect()
+        np.testing.assert_allclose(
+            np.asarray(out["forecast"]["pred"][u]),
+            np.asarray(want["forecast"]["pred"]),
+            rtol=1e-4, atol=1e-5,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out["anomaly"]["score"][u]),
+            np.asarray(want["anomaly"]["score"]),
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+# ------------------------------------------------------------------ anomaly
+
+
+def test_anomaly_scores_flag_injected_spike():
+    """A spike inside the scored tail window stands far above the baseline
+    Mahalanobis scores of clean AR data."""
+    x = np.asarray(_ar_series(seed=4, noise=0.2)).copy()
+    f_probe = SeriesFrame.from_array(x)
+    f_probe.anomaly_scores(model="ar", p=4)
+    carry = len(np.asarray(f_probe.collect()["anomaly"]["score"]))
+    spike_at = len(x) - carry // 2  # inside the scored window
+    x[spike_at] += 8.0
+
+    f = SeriesFrame.from_array(x)
+    f.anomaly_scores(model="ar", p=4)
+    res = f.collect()["anomaly"]
+    scores = np.asarray(res["score"])
+    assert np.asarray(res["valid"]).all()
+    spike_pos = spike_at - (len(x) - carry)
+    assert scores[spike_pos] == scores.max()
+    clean = np.delete(scores, [spike_pos, spike_pos + 1])
+    assert scores[spike_pos] > 4 * np.median(clean)
+
+
+def test_anomaly_matches_direct_standardization():
+    """Plan anomaly == standardized_innovations of the fitted model run
+    over the tail window directly."""
+    x = _ar_series(seed=5)
+    f = SeriesFrame.from_array(x)
+    f.yule_walker(3, normalization="standard")
+    f.anomaly_scores(model="ar", p=3)
+    res = f.collect()
+    A, sigma = res["yule_walker"]
+    carry = f._plan.groups[0].engine.carry
+    z, score = standardized_innovations(
+        A, jnp.zeros((0, D)), x[-carry:], sigma
+    )
+    np.testing.assert_allclose(
+        np.asarray(res["anomaly"]["z"]), np.asarray(z), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(res["anomaly"]["score"]), np.asarray(score),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_anomaly_valid_mask_covers_only_ingested_rows():
+    """A series shorter than the tail window marks the zero-filled prefix
+    invalid and scores it zero."""
+    sess = FrameSession(d=D, num_users=1)
+    sess.anomaly_scores(model="ar", p=4)
+    sess.ingest(np.asarray([0], np.int32),
+                np.asarray(_ar_series(n=3))[None, :3])
+    res = sess.query(0)["anomaly"]
+    valid = np.asarray(res["valid"])
+    assert valid.sum() == 3 and not valid[:-3].any()
+    assert (np.asarray(res["score"])[~valid] == 0).all()
+
+
+# ------------------------------------------------------------------- auto
+
+
+def test_auto_detects_period_and_tracks_seasonal_series():
+    period = 8
+    x = _seasonal_series(period=period)
+    f = SeriesFrame.from_array(x)
+    f.welch(64)
+    f.forecast(2 * period, model="auto", p=2, max_period=16)
+    res = f.collect()["forecast"]
+    assert int(res["period"]) == period
+    t_next = len(x) + np.arange(2 * period)
+    truth = np.sin(2 * np.pi * t_next / period)
+    pred = np.asarray(res["pred"])[:, 0]
+    assert np.mean(np.abs(pred - truth)) < 0.25
+    # the seasonal lag is what carries the forecast: a short-lag AR of the
+    # same order p decays toward the mean and does measurably worse
+    f_ar = SeriesFrame.from_array(x)
+    f_ar.forecast(2 * period, model="ar", p=2)
+    pred_ar = np.asarray(f_ar.collect()["forecast"]["pred"])[:, 0]
+    assert np.mean(np.abs(pred - truth)) < np.mean(np.abs(pred_ar - truth))
+
+
+def test_auto_periods_vary_per_tenant_in_one_batch():
+    """Two tenants with different seasonal periods get different detected
+    periods from the SAME vmapped finalize program."""
+    N = 2
+    periods = [6, 12]
+    sess = FrameSession(d=D, num_users=N)
+    sess.welch(48, overlap=24)
+    sess.forecast(4, model="auto", p=2, max_period=24)
+    chunks = np.stack([
+        np.asarray(_seasonal_series(n=192, period=pp, seed=20 + i))
+        for i, pp in enumerate(periods)
+    ])
+    sess.ingest(np.arange(N, dtype=np.int32), chunks)
+    out = sess.query_batch(np.arange(N, dtype=np.int32))
+    assert sess._finalize_batch._cache_size() == 1
+    assert list(np.asarray(out["forecast"]["period"])) == periods
+
+
+def test_fit_seasonal_ar_reduces_to_dense_yule_walker():
+    """On contiguous lags 1..p the restricted-lag solve IS Yule-Walker."""
+    x = _ar_series(seed=6)
+    gamma = autocovariance(x, 4, normalization="standard")
+    A_yw, sig_yw = yule_walker(gamma, 4)
+    A_sl, sig_sl = fit_seasonal_ar(gamma, jnp.arange(1, 5, dtype=jnp.int32))
+    np.testing.assert_allclose(np.asarray(A_sl), np.asarray(A_yw),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sig_sl), np.asarray(sig_yw),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_detect_period_picks_dominant_bin():
+    nperseg = 64
+    psd = np.zeros((nperseg // 2 + 1, D), np.float32)
+    psd[8] = 3.0   # bin 8 ↔ period 64/8 = 8
+    psd[0] = 99.0  # DC must be ignored
+    assert int(detect_period(jnp.asarray(psd), nperseg, 3, 16)) == 8
+    # clipping: a too-long period clamps into the trackable range
+    psd2 = np.zeros_like(psd)
+    psd2[1] = 1.0  # period 64 > max_period
+    assert int(detect_period(jnp.asarray(psd2), nperseg, 3, 16)) == 16
+
+
+# -------------------------------------------------------------- validation
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="horizon"):
+        forecast_request(0)
+    with pytest.raises(ValueError, match="model"):
+        forecast_request(4, model="lstm")
+    with pytest.raises(ValueError, match="p >= 1"):
+        forecast_request(4, model="ar", p=0)
+    with pytest.raises(ValueError, match="max_period"):
+        forecast_request(4, model="auto", p=8, max_period=8)
+    with pytest.raises(ValueError, match="model"):
+        anomaly_request(model="nope")
+
+
+def test_auto_without_welch_member_raises():
+    f = SeriesFrame.from_array(_seasonal_series())
+    f.forecast(4, model="auto", p=2, max_period=16)
+    with pytest.raises(ValueError, match="[Ww]elch"):
+        f.collect()
+
+
+# ------------------------------------------------------- recurrence direct
+
+
+def test_lagged_forecast_equals_oracles_on_padded_layouts():
+    """Dense zero-padded Φ rows change nothing: the fused-plan layout stays
+    on ar_forecast/arma_forecast's numbers."""
+    x = _ar_series(seed=7)
+    gamma = autocovariance(x, 3, normalization="standard")
+    A, _ = yule_walker(gamma, 2)
+    L = 5
+    Phi = jnp.zeros((L, D, D)).at[:2].set(A)
+    xlag = x[-1 : -L - 1 : -1]
+    got = lagged_forecast(Phi, jnp.zeros((0, D)), xlag, jnp.zeros((0, D)), 4)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ar_forecast(A, x, 4))
+    )
+    # and with an MA part: padded filter == unpadded filter
+    A2, B2, _ = fit_arma(gamma, 1, 1, 2)
+    Phi2 = jnp.zeros((L, D, D)).at[:1].set(A2)
+    _, innov_pad = arma_innovations_filter(Phi2, B2, x)
+    _, innov = arma_innovations_filter(A2, B2, x)
+    np.testing.assert_array_equal(np.asarray(innov_pad), np.asarray(innov))

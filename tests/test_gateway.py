@@ -338,3 +338,101 @@ def test_serve_forever_background_loop():
     _, res = run(scenario())
     assert sorted(res) == ["autocovariance", "moments"]
     assert gw.metrics()["ticks"] >= 1
+
+
+def test_kill_and_restart_serves_identical_forecasts(tmp_path):
+    """Forecast determinism under serving: the restarted gateway's
+    forecasts and anomaly scores are bit-identical to pre-crash — the
+    snapshot's retained tail IS the recurrence seed."""
+    N = 3
+
+    def forecast_session():
+        sess = FrameSession(d=D, num_users=N)
+        sess.autocovariance(3)
+        sess.forecast(5, model="arma", p=2, q=1)
+        sess.anomaly_scores(model="ar", p=2)
+        return sess
+
+    cfg = GatewayConfig(checkpoint_dir=str(tmp_path), snapshot_every=1)
+    gw = StatsGateway(forecast_session(), cfg)
+    chunks = _chunks(N, c=48, seed=11)
+
+    async def before_crash():
+        for seed in (0, 1):
+            futs = [gw.submit_ingest(u, chunks[u] + seed) for u in range(N)]
+            await gw.tick()
+            await asyncio.gather(*futs)
+        q = [gw.submit_query(u) for u in range(N)]
+        await gw.tick()
+        return await asyncio.gather(*q)
+
+    pre = run(before_crash())
+    gw._loop_rt.manager.flush()
+
+    gw2 = StatsGateway(forecast_session(), cfg)
+    assert gw2.counters["restored_from_snapshot"] == 1
+    assert gw2._tick == 2
+
+    async def after_restart():
+        q = [gw2.submit_query(u) for u in range(N)]
+        await gw2.tick()
+        return await asyncio.gather(*q)
+
+    post = run(after_restart())
+    assert gw2.counters["programs_ingest"] == 0
+    for u in range(N):
+        for key in ("pred", "sigma"):
+            np.testing.assert_array_equal(
+                np.asarray(pre[u]["forecast"][key]),
+                np.asarray(post[u]["forecast"][key]),
+            )
+        for key in ("z", "score", "valid"):
+            np.testing.assert_array_equal(
+                np.asarray(pre[u]["anomaly"][key]),
+                np.asarray(post[u]["anomaly"][key]),
+            )
+    run(gw2.stop())
+
+
+# -------------------------------------------------- (e) query-kind filter
+
+
+def test_query_only_filters_kinds_without_extra_programs():
+    N = 3
+    sess = _session(N)
+    sess.forecast(4, model="ar", p=2)
+    gw = StatsGateway(sess)
+    chunks = _chunks(N, c=32, seed=13)
+
+    async def scenario():
+        futs = [gw.submit_ingest(u, chunks[u]) for u in range(N)]
+        await gw.tick()
+        await asyncio.gather(*futs)
+        full = gw.submit_query(0)
+        narrow = gw.submit_query(1, only="forecast")
+        pair = gw.submit_query(2, only=("moments", "forecast"))
+        before = dict(gw.counters)
+        await gw.tick()
+        res = await asyncio.gather(full, narrow, pair)
+        return before, res
+
+    before, (full, narrow, pair) = run(scenario())
+    # narrowing is host-side: still ONE batched finalize for the tick
+    assert (
+        gw.counters["programs_finalize"] - before.get("programs_finalize", 0)
+        == 1
+    )
+    assert sorted(full) == ["autocovariance", "forecast", "moments"]
+    assert sorted(narrow) == ["forecast"]
+    assert sorted(pair) == ["forecast", "moments"]
+    np.testing.assert_array_equal(
+        np.asarray(narrow["forecast"]["pred"]).shape, (4, D)
+    )
+
+
+def test_query_only_unknown_kind_rejected_at_submit():
+    gw = StatsGateway(_session(2))
+    with pytest.raises(ValueError, match="spectrum"):
+        gw.submit_query(0, only="spectrum")
+    with pytest.raises(ValueError, match="autocovariance"):
+        gw.submit_query(0, only=("moments", "nope"))
