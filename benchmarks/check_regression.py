@@ -25,6 +25,7 @@ keeps a PR from landing a >1.5× slowdown on any tracked hot path.
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import shutil
@@ -46,7 +47,26 @@ BENCH_FILES = [
     "BENCH_gateway.json",
     "BENCH_chaos.json",
     "BENCH_forecast.json",
+    "BENCH_integrity.json",
 ]
+
+
+def discover_files() -> list:
+    """The default ``--files`` set: the tracked list UNIONED with every
+    ``BENCH_*.json`` found in the repo root or the baselines directory.
+
+    The union is what lets a brand-new benchmark participate before anyone
+    remembers to add it to ``BENCH_FILES``: a fresh working-tree JSON is
+    picked up (and blessed by ``--update-baselines``), and a blessed file
+    whose working-tree copy was not regenerated still gates."""
+    found = set(BENCH_FILES)
+    for path in glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")):
+        found.add(os.path.basename(path))
+    if os.path.isdir(BASELINE_DIR):
+        for fname in os.listdir(BASELINE_DIR):
+            if fname.startswith("BENCH_") and fname.endswith(".json"):
+                found.add(fname)
+    return sorted(found)
 # Timing rows with us_per_call below this are jitter, not signal — a 1.5×
 # blowup of a 50µs dispatch round-trip is noise on shared CI hardware.
 MIN_US = 1_000.0
@@ -74,16 +94,27 @@ def _committed(fname: str):
         ).stdout
     except (subprocess.CalledProcessError, FileNotFoundError):
         return None  # not committed yet — nothing to regress against
-    return json.loads(blob)
+    try:
+        return json.loads(blob)
+    except ValueError:
+        print(f"{fname}: HEAD-committed copy is not valid JSON — "
+              "treating as no baseline", file=sys.stderr)
+        return None
 
 
 def _baseline(fname: str):
     """Baseline payload: the blessed benchmarks/baselines snapshot when one
-    exists, the HEAD-committed file otherwise."""
+    exists (and parses), the HEAD-committed file otherwise.  A torn or
+    hand-mangled blessed file degrades to the committed copy with a warning
+    rather than crashing the whole gate."""
     blessed = os.path.join(BASELINE_DIR, fname)
     if os.path.exists(blessed):
-        with open(blessed) as f:
-            return json.load(f)
+        try:
+            with open(blessed) as f:
+                return json.load(f)
+        except (OSError, ValueError) as exc:
+            print(f"{fname}: blessed baseline unreadable ({exc}) — "
+                  "falling back to HEAD", file=sys.stderr)
     return _committed(fname)
 
 
@@ -107,14 +138,24 @@ def update_baselines(files) -> int:
 def check_file(fname: str, threshold: float) -> list:
     """Returns a list of human-readable failure strings for one file."""
     path = os.path.join(REPO_ROOT, fname)
-    if not os.path.exists(path):
-        return [f"{fname}: missing from working tree (benchmarks not run?)"]
     base_payload = _baseline(fname)
+    if not os.path.exists(path):
+        if base_payload is None:
+            # A bench that exists in neither place (e.g. freshly added to
+            # BENCH_FILES before its first run) is a to-do, not a failure.
+            print(f"{fname}: no working-tree run and no baseline — skipping "
+                  "(run benchmarks, then --update-baselines to bless it)")
+            return []
+        return [f"{fname}: missing from working tree (benchmarks not run?)"]
     if base_payload is None:
-        print(f"{fname}: no blessed or committed baseline — skipping")
+        print(f"{fname}: no blessed or committed baseline — skipping "
+              "(use --update-baselines to bless this run)")
         return []
-    with open(path) as f:
-        fresh_payload = json.load(f)
+    try:
+        with open(path) as f:
+            fresh_payload = json.load(f)
+    except (OSError, ValueError) as exc:
+        return [f"{fname}: working-tree copy unreadable ({exc})"]
     if fresh_payload.get("platform") != base_payload.get("platform"):
         # A TPU run vs a committed CPU baseline (or vice versa) is a
         # platform change, not a regression — only like-for-like gates.
@@ -153,8 +194,10 @@ def main(argv=None) -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--threshold", type=float, default=THRESHOLD)
     parser.add_argument(
-        "--files", nargs="*", default=BENCH_FILES,
-        help="BENCH json filenames (repo-root relative) to check",
+        "--files", nargs="*", default=None,
+        help="BENCH json filenames (repo-root relative) to check; default "
+             "is the tracked list plus every BENCH_*.json discovered in "
+             "the repo root or benchmarks/baselines/",
     )
     parser.add_argument(
         "--update-baselines", action="store_true",
@@ -162,6 +205,8 @@ def main(argv=None) -> int:
              "(benchmarks/baselines/); shows diffs, never fails",
     )
     args = parser.parse_args(argv)
+    if args.files is None:
+        args.files = discover_files()
 
     if args.update_baselines:
         # Show the diff being blessed — including disappeared entries: a

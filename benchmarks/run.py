@@ -14,8 +14,9 @@ Two kinds of modules run here:
   plans), ``bench_megakernel`` (persistent fused-plan kernel),
   ``bench_frame`` (SeriesFrame session API), ``bench_streaming``
   (streaming monoid ingest), ``bench_gateway`` (async serving gateway),
-  ``bench_chaos`` (fault-injection overhead + breaker recovery), and
-  ``bench_forecast`` (served forecasts/sec + accuracy-vs-horizon).
+  ``bench_chaos`` (fault-injection overhead + breaker recovery), ``bench_forecast``
+  (served forecasts/sec + accuracy-vs-horizon), and ``bench_integrity``
+  (compensated-accumulation drift + ingest-sentinel tick overhead).
 
 * **Standalone paper-figure benches** — CSV rows only, NO JSON: they
   reproduce a specific paper table/figure or answer a one-off design
@@ -45,6 +46,7 @@ MODULES = [
     "bench_gateway",        # async serving gateway → BENCH_gateway.json
     "bench_chaos",          # fault-injection overhead + breaker recovery → BENCH_chaos.json
     "bench_forecast",       # served forecasts + anomaly scoring → BENCH_forecast.json
+    "bench_integrity",      # compensated drift + ingest sentinel → BENCH_integrity.json
     "bench_overlap_scaling",  # paper Fig. 4
     "bench_mle",            # paper §5 / §7.2 Z-estimators
     "bench_spatial",        # paper §6 banded high-d

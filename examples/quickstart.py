@@ -229,6 +229,45 @@ def main():
     print("forecast service: "
           "PYTHONPATH=src python examples/forecast_service.py")
 
+    # 13. Data-plane integrity.  Weak memory cuts both ways: state is only
+    #     ever ⊕-folded, never recomputed, so one NaN ingested is a NaN
+    #     FOREVER and f32 rounding per merge is drift forever.  PR 10 adds
+    #     the three defenses:
+    #
+    #       * ingest sentinel: ``GatewayConfig(sentinel=True)`` runs ONE
+    #         fused all-finite verdict per coalesced ingest batch (no extra
+    #         host syncs), with a per-tenant policy —
+    #         ``gw.set_tenant_policy(t, "reject" | "sanitize" |
+    #         "quarantine")``; a rejected chunk raises `PoisonedChunk`, a
+    #         quarantined tenant is fenced off both planes until repaired;
+    #       * self-healing tenants: ``gw.audit()`` sweeps every lane
+    #         on-device for non-finite state (poison that predates the
+    #         sentinel, or arrived with it off) and quarantines the
+    #         unhealthy; ``gw.rebuild_tenant(t)`` restores ONE tenant from
+    #         the newest checkpoint generation whose slice verifies AND is
+    #         finite — no other tenant's live state moves, nothing
+    #         re-traces, and the chaos site ``ingest.payload`` rehearses
+    #         the whole story seedably (tests/test_integrity.py);
+    #       * compensated accumulation: ``fused_engine(...,
+    #         compensated=True)`` / ``FrameSession(compensated=True)``
+    #         carries Neumaier error companions through every chunk update
+    #         and ⊕-merge, recovering the rounding a plain f32 fold
+    #         discards (benchmarks/bench_integrity.py pins ≥10× less
+    #         drift on hostile offset data).
+    from repro.core.plan import autocovariance_request, fused_engine
+
+    comp = fused_engine([autocovariance_request(max_lag)], d=d,
+                        compensated=True)
+    cs = comp.init()
+    for lo in range(0, n, 8192):
+        cs = comp.update_jit(cs, xs[lo : lo + 8192])
+    g_comp = comp.finalize(cs)["autocovariance"]
+    g_plain = stream.collect()["autocovariance"]
+    print(f"compensated streaming γ̂ matches plain to "
+          f"{float(jnp.max(jnp.abs(g_comp - g_plain))):.1e} "
+          f"(error companions reabsorbed at readout); integrity drill: "
+          f"PYTHONPATH=src python -m pytest tests/test_integrity.py -q")
+
 
 if __name__ == "__main__":
     main()

@@ -3,8 +3,12 @@ from .manager import (
     CheckpointManager,
     latest_step,
     list_steps,
+    load_manifest,
+    path_key,
     restore_latest_intact,
     restore_pytree,
+    restore_tenant_latest_intact,
+    restore_tenant_pytree,
     save_pytree,
     sweep_tmp_dirs,
 )

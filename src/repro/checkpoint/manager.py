@@ -31,7 +31,13 @@ error); ``checkpoint.payload`` is checked after the arrays payload lands
 verification and walk-back exist to survive).
 
 Format: one .npz per checkpoint (flattened pytree paths as keys) + a JSON
-manifest with step, tree structure, and per-key crc32 checksums.
+manifest with step, tree structure, per-key crc32 checksums, and optional
+caller metadata (``meta``).  Sessions record ``meta["tenant_axes"]`` — a
+flat-key → axis map (`FrameSession.tenant_axes`) — which lets
+:func:`restore_tenant_pytree` slice ONE tenant's state out of a full
+checkpoint (verified leaf-by-leaf first) without the caller materializing
+or re-ingesting anything else: the self-healing path behind
+`StatsGateway.rebuild_tenant`.
 """
 from __future__ import annotations
 
@@ -62,11 +68,16 @@ def _chaos():
     return chaos
 
 
+def path_key(path) -> str:
+    """The canonical flat key for one pytree path — the .npz entry name and
+    the key every manifest table (checksums, meta["tenant_axes"]) uses."""
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        flat[key] = np.asarray(leaf)
+        flat[path_key(path)] = np.asarray(leaf)
     return flat
 
 
@@ -76,8 +87,15 @@ def _checksum(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
-def save_pytree(tree: Any, directory: str, step: int) -> str:
-    """Synchronous atomic save.  Returns the final checkpoint path."""
+def save_pytree(
+    tree: Any, directory: str, step: int, meta: Optional[dict] = None
+) -> str:
+    """Synchronous atomic save.  Returns the final checkpoint path.
+
+    ``meta`` (optional, JSON-serializable) is recorded verbatim in the
+    manifest — sessions store their ``tenant_axes`` map here so per-tenant
+    extraction works from the checkpoint alone.
+    """
     chaos = _chaos()
     chaos.fire("checkpoint.write")  # injected transient IO failure point
     os.makedirs(directory, exist_ok=True)
@@ -103,6 +121,7 @@ def save_pytree(tree: Any, directory: str, step: int) -> str:
                 "treedef": str(treedef),
                 "keys": sorted(flat),
                 "checksums": {k: _checksum(v) for k, v in flat.items()},
+                "meta": dict(meta or {}),
             },
             f,
         )
@@ -214,7 +233,7 @@ def restore_pytree(
     flat_paths = jax.tree_util.tree_flatten_with_path(template)[0]
     leaves = []
     for p, leaf in flat_paths:
-        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        key = path_key(p)
         try:
             arr = data[key]
         except KeyError:
@@ -300,6 +319,149 @@ def restore_latest_intact(
     )
 
 
+def load_manifest(directory: str, step: int) -> dict:
+    """One generation's manifest dict; :class:`CheckpointCorrupt` when the
+    manifest is missing or unparseable (torn write)."""
+    path = os.path.join(directory, f"step_{step:010d}", "manifest.json")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorrupt(
+            f"manifest of checkpoint step {step} under {directory} is "
+            f"unreadable: {e!r}"
+        ) from e
+
+
+def restore_tenant_pytree(
+    template: Any,
+    directory: str,
+    tenant: int,
+    step: Optional[int] = None,
+    verify: bool = True,
+) -> Any:
+    """Extract ONE tenant's slice from a full-session checkpoint.
+
+    ``template`` is the FULL session state template (shapes with every
+    tenant); the manifest's ``meta["tenant_axes"]`` names the axis each
+    leaf carries tenants on, and the returned tree holds that axis sliced
+    down to ``tenant`` — exactly the `FrameSession.import_tenant` payload.
+    Each leaf is checksum-verified in full before slicing (``verify=True``),
+    so a torn generation raises :class:`CheckpointCorrupt` here and the
+    walk-back of :func:`restore_tenant_latest_intact` can skip it.
+    """
+    tenant = int(tenant)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    manifest = load_manifest(directory, step)
+    axes = manifest.get("meta", {}).get("tenant_axes")
+    if not isinstance(axes, dict):
+        raise CheckpointCorrupt(
+            f"checkpoint step {step} under {directory} carries no "
+            "tenant_axes metadata — written before per-tenant extraction "
+            "existed, or by a saver that is not a session gateway"
+        )
+    step_dir = os.path.join(directory, f"step_{step:010d}")
+    checksums = _load_checksums(step_dir) if verify else None
+    try:
+        data = np.load(os.path.join(step_dir, "arrays.npz"))
+    except Exception as e:
+        raise CheckpointCorrupt(
+            f"checkpoint step {step} under {directory} is unreadable: {e!r}"
+        ) from e
+    flat_paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    leaves = []
+    for p, leaf in flat_paths:
+        key = path_key(p)
+        try:
+            arr = data[key]
+        except KeyError:
+            raise CheckpointCorrupt(
+                f"checkpoint step {step} under {directory} is missing leaf "
+                f"{key!r}"
+            ) from None
+        except Exception as e:
+            raise CheckpointCorrupt(
+                f"checkpoint leaf {key!r} of step {step} under {directory} "
+                f"is unreadable: {e!r}"
+            ) from e
+        if checksums is not None:
+            want = checksums.get(key)
+            got = _checksum(arr)
+            if want is not None and got != want:
+                raise CheckpointCorrupt(
+                    f"checkpoint leaf {key!r} of step {step} under "
+                    f"{directory} fails verification (crc32 {got} != "
+                    f"manifest {want}) — torn write or bit rot"
+                )
+        if tuple(arr.shape) != tuple(jnp.shape(leaf)):
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(arr.shape)} but "
+                f"the restore template expects {tuple(jnp.shape(leaf))} "
+                f"(step {step} under {directory})"
+            )
+        ax = axes.get(key)
+        if ax is None:
+            raise CheckpointCorrupt(
+                f"checkpoint step {step} under {directory} has no tenant "
+                f"axis recorded for leaf {key!r}"
+            )
+        ax = int(ax)
+        if not 0 <= tenant < arr.shape[ax]:
+            raise ValueError(
+                f"tenant {tenant} out of range [0, {arr.shape[ax]}) on leaf "
+                f"{key!r} (axis {ax})"
+            )
+        sliced = np.take(arr, tenant, axis=ax)
+        if isinstance(leaf, np.ndarray):
+            leaves.append(np.asarray(sliced, dtype=leaf.dtype))
+        else:
+            leaves.append(jnp.asarray(sliced, dtype=leaf.dtype))
+    return jax.tree.unflatten(jax.tree.structure(template), leaves)
+
+
+def restore_tenant_latest_intact(
+    template: Any, directory: str, tenant: int, verify: bool = True
+) -> Tuple[Any, int, list]:
+    """Per-tenant :func:`restore_latest_intact`: the newest generation from
+    which ``tenant``'s slice extracts, verifies, AND is all-finite.
+
+    The finiteness requirement is what makes this a *repair* primitive: a
+    poisoned lane that survived long enough to be snapshotted (sentinel
+    off, or an in-state corruption) is byte-perfect on disk — checksums
+    pass — yet restoring it would re-plant exactly the damage
+    ``rebuild_tenant`` is trying to excise, so such generations are walked
+    past the same way torn ones are.  Returns ``(tenant_state, step,
+    skipped)``; raises ``FileNotFoundError`` with no generations and
+    :class:`CheckpointCorrupt` when every one is corrupt, poisoned, or
+    lacks tenant metadata."""
+    steps = list_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    skipped: list = []
+    for step in reversed(steps):
+        try:
+            state = restore_tenant_pytree(
+                template, directory, tenant, step, verify=verify
+            )
+            for leaf in jax.tree_util.tree_leaves(state):
+                arr = np.asarray(leaf)
+                if arr.dtype.kind in "fc" and not np.isfinite(arr).all():
+                    raise CheckpointCorrupt(
+                        f"step {step}: tenant {tenant}'s slice holds "
+                        "non-finite values — poisoned before snapshot"
+                    )
+            return state, step, skipped
+        except CheckpointCorrupt:
+            skipped.append(step)
+    raise CheckpointCorrupt(
+        f"no retained checkpoint generation under {directory} yields an "
+        f"intact slice for tenant {tenant} (skipped {skipped})"
+    )
+
+
 class CheckpointManager:
     """Async checkpointing with retention, write retry + preemption flush.
 
@@ -334,10 +496,15 @@ class CheckpointManager:
         self.retried_saves: int = 0
         self._errors: list[Exception] = []
 
-    def _save_with_retry(self, tree, step) -> None:
+    def _save_with_retry(self, tree, step, meta=None) -> None:
         for attempt in range(self.retries + 1):
             try:
-                save_pytree(tree, self.directory, step)
+                # positional-only without meta: metadata-free callers keep
+                # working against simpler save_pytree substitutes
+                if meta is None:
+                    save_pytree(tree, self.directory, step)
+                else:
+                    save_pytree(tree, self.directory, step, meta=meta)
                 return
             except Exception:
                 # a half-written unique tmp dir is left behind; the next
@@ -353,9 +520,9 @@ class CheckpointManager:
             if item is None:
                 self._q.task_done()
                 return
-            tree, step = item
+            tree, step, meta = item
             try:
-                self._save_with_retry(tree, step)
+                self._save_with_retry(tree, step, meta)
                 self.saved_steps.append(step)
                 self._gc()
             except Exception as e:  # pragma: no cover - surfaced via .errors
@@ -372,9 +539,9 @@ class CheckpointManager:
         for s in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"), ignore_errors=True)
 
-    def save(self, tree: Any, step: int) -> None:
+    def save(self, tree: Any, step: int, meta: Optional[dict] = None) -> None:
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot off-device now
-        self._q.put((host_tree, step))
+        self._q.put((host_tree, step, meta))
 
     def flush(self) -> None:
         self._q.join()

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from ..backend import BackendSpec, get_backend
 from ..overlap import OverlapSpec, make_overlapping_blocks
-from ..streaming import PartialState, StreamingEngine
+from ..streaming import PartialState, StreamingEngine, resolved_stat
 
 __all__ = [
     "hann_window",
@@ -205,7 +205,8 @@ def streaming_welch(
     (``n_seg == 0``) the PSD is undefined and every bin is NaN — check
     ``state.stat["n_seg"]`` before trusting early-stream queries.
     """
-    psd = state.stat["psd"] / state.stat["n_seg"]
+    stat = resolved_stat(state)
+    psd = stat["psd"] / stat["n_seg"]
     return _one_sided(psd, engine.window, engine.welch_fs)
 
 

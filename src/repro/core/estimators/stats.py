@@ -31,7 +31,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..backend import BackendSpec, get_backend
 from ..overlap import OverlapSpec, make_overlapping_blocks
-from ..streaming import PartialState, StreamingEngine
+from ..streaming import PartialState, StreamingEngine, resolved_stat
 
 Normalization = Literal["paper", "standard"]
 
@@ -268,13 +268,14 @@ def streaming_window_moments(engine: StreamingEngine, state: PartialState) -> di
     moments are NaN — check before trusting early-stream queries.
     """
     w = engine.window
-    total = state.stat["count"] * w
-    m1 = state.stat["sums"][0] / total
-    m2 = state.stat["sums"][1] / total
+    stat = resolved_stat(state)
+    total = stat["count"] * w
+    m1 = stat["sums"][0] / total
+    m2 = stat["sums"][1] / total
     return {
         "mean": m1,
         "var": jnp.maximum(m2 - m1 * m1, 0.0),
-        "count": state.stat["count"],
+        "count": stat["count"],
     }
 
 
@@ -296,7 +297,7 @@ def streaming_autocovariance(
     contraction through the engine's backend.
     """
     H = engine.h_right
-    s = state.stat
+    s = resolved_stat(state)
     if H > 0:
         tail_sums = engine.backend.masked_lagged_sums(
             jnp.concatenate([state.tail, jnp.zeros_like(state.tail)]),

@@ -704,6 +704,11 @@ class FrameSession(_DeferredRequests):
         the last ≤ ``window`` samples; queries cover only the retained
         horizon (see `RollingStatsService`).
       backend: compute-backend spec for every traversal.
+      compensated: thread Neumaier error companions through every group's
+        ⊕-folds (long-horizon drift control for always-on sessions; see
+        `repro.core.integrity`).  Snapshots from a compensated session only
+        restore into a compensated session (the extra companion leaves are
+        part of the state's structure).
     """
 
     def __init__(
@@ -715,6 +720,7 @@ class FrameSession(_DeferredRequests):
         window: Optional[int] = None,
         num_buckets: Optional[int] = None,
         backend: BackendSpec = None,
+        compensated: bool = False,
     ):
         self.d = d
         self.num_users = num_users
@@ -722,6 +728,7 @@ class FrameSession(_DeferredRequests):
         self.window = window
         self._num_buckets = num_buckets
         self._backend = backend
+        self.compensated = compensated
         self._recorded: list[StatRequest] = []
         self._name_counts: dict[str, int] = {}
         self._plan: Optional[StatPlan] = None
@@ -762,7 +769,8 @@ class FrameSession(_DeferredRequests):
         if not self._recorded:
             raise ValueError("a session needs at least one deferred request")
         self._plan = StatPlan(list(self._recorded), d=self.d,
-                              backend=self._backend)
+                              backend=self._backend,
+                              compensated=self.compensated)
         from ..serving.rolling import RollingStatsService
 
         self._services = [
@@ -848,6 +856,86 @@ class FrameSession(_DeferredRequests):
             )
         for i, svc in enumerate(self._services):
             svc.import_state(state[f"group_{i}"])
+
+    def state_template(self) -> dict:
+        """Zero-copy view of the live state with :meth:`export_state`'s
+        structure — shapes/dtypes for checkpoint-restore templates without
+        a full device→host transfer."""
+        self._ensure_plan()
+        return {
+            f"group_{i}": svc.state_template()
+            for i, svc in enumerate(self._services)
+        }
+
+    # -- integrity -----------------------------------------------------------
+    def audit(self):
+        """Finite-sweep every tenant's stacked lane state on-device: one
+        compiled program + one host sync per plan group.  Returns a host
+        (num_users,) bool — True where every group's every lane is healthy
+        (see `RollingStatsService.audit`)."""
+        self._ensure_plan()
+        healthy = None
+        for svc in self._services:
+            h = svc.audit()
+            healthy = h if healthy is None else healthy & h
+        return healthy
+
+    def export_tenant(self, user_id: int) -> dict:
+        """Host snapshot of ONE tenant's slice of every group's state
+        (:meth:`import_tenant`'s input; also produced by
+        `repro.checkpoint.manager.restore_tenant_pytree` from a full
+        session checkpoint)."""
+        self._ensure_plan()
+        return {
+            f"group_{i}": svc.export_tenant(user_id)
+            for i, svc in enumerate(self._services)
+        }
+
+    def import_tenant(self, user_id: int, state: dict) -> None:
+        """Surgically restore ONE tenant's lanes from a per-tenant snapshot,
+        leaving every other tenant's live state untouched and re-tracing
+        nothing (see `RollingStatsService.import_tenant`)."""
+        self._ensure_plan()
+        keys = {f"group_{i}" for i in range(len(self._services))}
+        if set(state) != keys:
+            raise ValueError(
+                f"tenant snapshot has groups {sorted(state)} but this "
+                f"session's plan compiled {sorted(keys)}"
+            )
+        for i, svc in enumerate(self._services):
+            svc.import_tenant(user_id, state[f"group_{i}"])
+
+    def tenant_slice(self, state: dict, user_id: int) -> dict:
+        """Extract ONE tenant's slice from a full :meth:`export_state`
+        snapshot (host-side; no device work)."""
+        self._ensure_plan()
+        keys = {f"group_{i}" for i in range(len(self._services))}
+        if set(state) != keys:
+            raise ValueError(
+                f"snapshot has groups {sorted(state)}, expected {sorted(keys)}"
+            )
+        return {
+            f"group_{i}": svc.tenant_slice(state[f"group_{i}"], user_id)
+            for i, svc in enumerate(self._services)
+        }
+
+    def tenant_axes(self) -> dict:
+        """Flat checkpoint-key → tenant-axis map for every leaf of
+        :meth:`export_state`, keyed exactly as
+        `repro.checkpoint.manager.save_pytree` flattens them.  Recorded
+        into each snapshot's manifest (``meta["tenant_axes"]``) so
+        ``restore_tenant_pytree`` can slice ONE tenant out of a checkpoint
+        without loading the session: lane leaves carry tenants on axis 1
+        (``(num_lanes, num_users, ...)``), eviction cursors on axis 0."""
+        from ..checkpoint.manager import path_key
+
+        axes = {}
+        for path, _leaf in jax.tree_util.tree_flatten_with_path(
+            self.state_template()
+        )[0]:
+            field = getattr(path[1], "key", None)
+            axes[path_key(path)] = 1 if field == "lanes" else 0
+        return axes
 
     def lengths(self) -> jax.Array:
         """(num_users,) samples ingested per user (total, incl. evicted)."""

@@ -1,0 +1,138 @@
+"""Data-plane integrity primitives: sentinel scan, lane health, Neumaier ⊕.
+
+The weak-memory scheme's defining property — per-tenant state is only ever
+⊕-folded, never recomputed from raw data — makes the data plane uniquely
+fragile in two ways the control-plane hardening (breakers, verified
+checkpoints, degraded mode) cannot see:
+
+  * **poison is permanent**: one NaN/Inf sample absorbed into a tenant's
+    `PartialState` contaminates every future merge of that lane, and no
+    amount of clean data dilutes it back out (NaN + x = NaN);
+  * **drift is permanent**: float rounding in the monoid sums accumulates
+    monotonically over months-long sessions, and there is no second pass
+    over the series to re-derive the exact value.
+
+This module holds the shared numeric machinery for both defenses.  The
+policy layers live where the state lives: the ingest sentinel in
+`repro.serving.gateway.StatsGateway` (per-tenant reject / sanitize /
+quarantine, chaos site ``ingest.payload``), the audit/rebuild surface in
+`repro.serving.rolling.RollingStatsService`, and the opt-in compensated
+accumulation mode in `repro.core.streaming.StreamingEngine`.
+
+Contracts:
+
+  * :func:`sentinel_scan` — ONE fused jitted program per coalesced ingest
+    batch computing the per-chunk all-finite verdict AND the sanitized
+    (non-finite → 0) copy together; exactly one device→host sync (the
+    verdict — the sanitized batch stays on device for the scatter);
+  * :func:`lane_health` — traced per-(lane, user) finite reduction over a
+    stacked lane pytree, jitted once by the serving layer so an ``audit()``
+    sweep is one device program + one host sync however many leaves the
+    fused plan carries;
+  * :func:`tree_neumaier_merge` / :func:`tree_neumaier_add` — the monoid ⊕
+    in Neumaier compensated form: each stat pytree carries an
+    error-companion pytree of the rounding residue, recovered at readout by
+    ``stat + err`` (`repro.core.streaming.resolved_stat`).  Exact for
+    integer leaves (the correction is identically zero), well-defined for
+    complex leaves (``abs`` is the modulus).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SENTINEL_POLICIES",
+    "lane_health",
+    "sentinel_scan",
+    "tree_neumaier_add",
+    "tree_neumaier_merge",
+]
+
+# Per-tenant sentinel policies (GatewayConfig.sentinel_policy / per-tenant
+# overrides): "reject" fails the chunk's future with PoisonedChunk,
+# "sanitize" masks non-finite values to 0 and ingests the rest, and
+# "quarantine" additionally fences the tenant off from ingest AND query
+# until rebuild_tenant() restores a verified state.
+SENTINEL_POLICIES = ("reject", "sanitize", "quarantine")
+
+
+@jax.jit
+def _sentinel_program(batch: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    finite = jnp.isfinite(batch)
+    verdict = jnp.all(finite, axis=tuple(range(1, batch.ndim)))
+    return verdict, jnp.where(finite, batch, 0.0)
+
+
+def sentinel_scan(batch) -> Tuple[np.ndarray, jax.Array]:
+    """All-finite verdict + sanitized copy for one coalesced ingest batch.
+
+    ``batch`` is the tick's stacked (k, c, d) arrival batch.  Returns
+    ``(verdict, clean)`` where ``verdict`` is a HOST (k,) bool array (one
+    ``True`` per fully-finite chunk — the call's single device→host sync)
+    and ``clean`` is the DEVICE batch with non-finite entries masked to 0,
+    ready to feed the scatter without a second transfer.  When every chunk
+    is finite, ``clean`` is bit-identical to ``batch`` — feeding it through
+    changes no served answer.
+    """
+    verdict, clean = _sentinel_program(jnp.asarray(batch))
+    return np.asarray(verdict), clean
+
+
+def lane_health(lanes: Any) -> jax.Array:
+    """Per-(lane, user) all-finite reduction over a stacked lane pytree.
+
+    ``lanes`` carries leading ``(num_lanes, num_users)`` axes on every leaf
+    (the `RollingStatsService` storage layout).  Returns a traced
+    ``(num_lanes, num_users)`` bool: True iff every trailing element of
+    every leaf is finite there.  Integer leaves (length, t0) are always
+    finite and cost one trivially-true reduction.  Callers jit this once —
+    the whole audit sweep is then one compiled program per service.
+    """
+    ok = None
+    for leaf in jax.tree.leaves(lanes):
+        fin = jnp.isfinite(leaf)
+        if leaf.ndim > 2:
+            fin = jnp.all(fin, axis=tuple(range(2, leaf.ndim)))
+        ok = fin if ok is None else ok & fin
+    return ok
+
+
+def _comp(a, b, t):
+    # Neumaier's branch-free correction for t = a + b: whichever operand is
+    # larger in magnitude, (larger - t) + smaller recovers the rounding
+    # residue exactly (Neumaier 1974; exact 0 for integer dtypes).
+    return jnp.where(jnp.abs(a) >= jnp.abs(b), (a - t) + b, (b - t) + a)
+
+
+def tree_neumaier_merge(
+    stat_a: Any, err_a: Any, stat_b: Any, err_b: Any
+) -> Tuple[Any, Any]:
+    """Compensated ⊕ of two (stat, err) pairs, leaf-wise over the pytrees.
+
+    Returns ``(stat, err)`` with ``stat = stat_a + stat_b`` (the same
+    float32 sum the plain monoid computes — compensation never changes the
+    carried stat, only tracks what rounding discarded) and ``err`` the
+    summed error companions plus this addition's own residue.
+    """
+    stat = jax.tree.map(lambda a, b: a + b, stat_a, stat_b)
+    err = jax.tree.map(
+        lambda a, b, t, ea, eb: ea + eb + _comp(a, b, t),
+        stat_a, stat_b, stat, err_a, err_b,
+    )
+    return stat, err
+
+
+def tree_neumaier_add(stat: Any, err: Any, delta: Any) -> Tuple[Any, Any]:
+    """Compensated ``stat ⊕ delta`` for a fresh contribution (no companion
+    of its own — a chunk kernel's output).  Returns the new ``(stat, err)``.
+    """
+    new = jax.tree.map(lambda s, v: s + v, stat, delta)
+    new_err = jax.tree.map(
+        lambda s, v, t, e: e + _comp(s, v, t),
+        stat, delta, new, err,
+    )
+    return new, new_err

@@ -221,11 +221,13 @@ class _PlanGroup:
         backend,
         stride: int = 1,
         stage_dtype: Optional[str] = None,
+        compensated: bool = False,
     ):
         self.backend = backend
         self.d = d
         self.stride = stride
         self.stage_dtype = stage_dtype
+        self.compensated = compensated
         self.members: list[_Member] = []
         self._welch_info: list[_WelchInfo] = []
 
@@ -351,7 +353,19 @@ class _PlanGroup:
             stride=stride,
             backend=backend,
             kernel_takes_offset=True,
+            compensated=compensated,
         )
+
+    def _stat_entry(self, state: PartialState, key: str):
+        """One member's slot of ``state.stat``, with the Neumaier error
+        companion folded in when the group runs compensated — the single
+        readout point for every finalizer (including the megakernel path's
+        jnp oracle: compensation wraps the monoid ⊕ *around* whichever
+        chunk kernel produced the contributions)."""
+        entry = state.stat[key]
+        if state.stat_err is None:
+            return entry
+        return jax.tree.map(lambda s, e: s + e, entry, state.stat_err[key])
 
     # -- the one traversal -------------------------------------------------
     def _fused_chunk_kernel(self, y: jax.Array, mask: jax.Array, z0: jax.Array):
@@ -417,7 +431,7 @@ class _PlanGroup:
         tail's right-aligned zero-fill kills k+h past the series end — one
         masked contraction recovers them exactly (the streaming engine's
         ragged-tail trick, widened to the fused halo)."""
-        s = state.stat["lagged"][: H + 1]
+        s = self._stat_entry(state, "lagged")[: H + 1]
         carry = self.engine.carry
         if carry > 0:
             s = s + self.backend.masked_lagged_sums(
@@ -461,7 +475,7 @@ class _PlanGroup:
         key = f"w{w}"
 
         def fin(state: PartialState):
-            entry = state.stat["moments"][key]
+            entry = self._stat_entry(state, "moments")[key]
             sums, count = entry["sums"], entry["count"]
             carry = self.engine.carry
             if carry >= w:
@@ -494,7 +508,7 @@ class _PlanGroup:
         self._welch_info.append(_WelchInfo(name, nperseg, step, scale, w))
 
         def fin(state: PartialState):
-            entry = state.stat[name]
+            entry = self._stat_entry(state, name)
             carry = self.engine.carry
             if carry >= nperseg:
                 rows = jnp.arange(carry)
@@ -515,7 +529,7 @@ class _PlanGroup:
         member = _Member(name, w, stride, traverse, None)
 
         def fin(state: PartialState):
-            raw = state.stat[name]
+            raw = self._stat_entry(state, name)
             if finalizer is None:
                 # Hand out COPIES, never the carried stat's own buffers:
                 # the donated append path (`update_donated`) consumes the
@@ -580,12 +594,14 @@ class StatPlan:
         d: int,
         backend: BackendSpec = None,
         stage_dtype: Optional[str] = None,
+        compensated: bool = False,
     ):
         if not requests:
             raise ValueError("a plan needs at least one request")
         self.backend = get_backend(backend)
         self.d = d
         self.stage_dtype = stage_dtype
+        self.compensated = compensated
         self.groups = [
             _PlanGroup(
                 [r for r, _ in grp],
@@ -594,6 +610,7 @@ class StatPlan:
                 self.backend,
                 stride,
                 stage_dtype=stage_dtype,
+                compensated=compensated,
             )
             for stride, grp in _group_requests(requests)
         ]
@@ -687,12 +704,17 @@ def fused_engine(
     d: int,
     backend: BackendSpec = None,
     stage_dtype: Optional[str] = None,
+    compensated: bool = False,
 ) -> StatPlan:
     """Compile estimator requests into a fused :class:`StatPlan` (the
     product-monoid engine behind :func:`analyze`).  ``stage_dtype``
     (e.g. ``"bfloat16"``) narrows the megakernel's series staging while
-    keeping f32 accumulation."""
-    return StatPlan(requests, d, backend, stage_dtype=stage_dtype)
+    keeping f32 accumulation; ``compensated=True`` threads Neumaier error
+    companions through every group's ⊕-folds (long-horizon drift control —
+    see `repro.core.integrity`)."""
+    return StatPlan(
+        requests, d, backend, stage_dtype=stage_dtype, compensated=compensated
+    )
 
 
 def analyze(

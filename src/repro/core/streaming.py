@@ -49,6 +49,16 @@ Estimator front-ends live next to their batch counterparts:
 `repro.core.backend` primitives, so the same engine streams through pure
 jnp or the Pallas VMEM tile kernels by passing ``backend=`` — the execution
 substrate is a deployment knob, not a property of the estimator.
+
+Because the carried partial is *never recomputed* from raw data, float
+rounding in the ⊕-folds accumulates for the lifetime of a session.  The
+opt-in **compensated mode** (``StreamingEngine(..., compensated=True)``)
+threads a Neumaier error-companion pytree (``PartialState.stat_err``,
+mirroring ``stat``) through every ``update`` / ``merge`` / donated-scan
+path; ``finalize`` reads out ``stat + stat_err`` via :func:`resolved_stat`.
+The carried ``stat`` itself is bit-identical to plain mode — compensation
+only tracks what rounding discarded — so compensated and plain states
+checkpoint/restore with their own structure and never mix in one fold.
 """
 from __future__ import annotations
 
@@ -60,9 +70,10 @@ import jax
 import jax.numpy as jnp
 
 from .backend import BackendSpec, get_backend
+from .integrity import tree_neumaier_add, tree_neumaier_merge
 from .mapreduce import tree_sum
 
-__all__ = ["PartialState", "StreamingEngine"]
+__all__ = ["PartialState", "StreamingEngine", "resolved_stat"]
 
 # (window (W, d)) -> pytree contribution
 WindowKernel = Callable[[jax.Array], Any]
@@ -80,7 +91,7 @@ _FAR = jnp.iinfo(jnp.int32).max
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=["stat", "sample_sum", "head", "tail", "length", "t0"],
+    data_fields=["stat", "sample_sum", "head", "tail", "length", "t0", "stat_err"],
     meta_fields=[],
 )
 @dataclasses.dataclass
@@ -100,6 +111,11 @@ class PartialState:
       length: () int32 — number of samples covered.
       t0: () int32 — global index of the segment's first sample.  Orders
         merge operands and anchors strided window alignment.
+      stat_err: Neumaier error-companion pytree mirroring ``stat``
+        (compensated engines only; ``None`` — an empty pytree subtree — in
+        plain mode, so plain states keep their historical structure and
+        checkpoints round-trip unchanged).  Read out via
+        :func:`resolved_stat`.
     """
 
     stat: Any
@@ -108,6 +124,20 @@ class PartialState:
     tail: jax.Array
     length: jax.Array
     t0: jax.Array
+    stat_err: Any = None
+
+
+def resolved_stat(state: PartialState) -> Any:
+    """``state.stat`` with the Neumaier error companion folded in.
+
+    The single readout point for code that inspects a partial's statistic
+    directly (engine/plan finalizers, estimator front-ends): plain states
+    pass through untouched; compensated states return ``stat + stat_err``
+    leaf-wise, recovering the rounding residue the ⊕-folds discarded.
+    """
+    if state.stat_err is None:
+        return state.stat
+    return jax.tree.map(lambda s, e: s + e, state.stat, state.stat_err)
 
 
 class StreamingEngine:
@@ -132,6 +162,12 @@ class StreamingEngine:
       kernel_takes_offset: the chunk kernel accepts a third argument — the
         global index of its first row — enabling per-member alignment rules
         inside one shared traversal (fused plans, strided segment gathers).
+      compensated: thread a Neumaier error companion (``stat_err``) through
+        every ⊕-fold so long-horizon rounding drift is recovered at
+        readout.  The carried ``stat`` stays bit-identical to plain mode;
+        only the extra companion leaves are new, so a compensated state has
+        a different pytree structure and must not be merged with a plain
+        one (the tree-structure mismatch fails loudly).
 
     Every traced entry point is built **once** here and cached: ``update``
     / ``merge`` stay pure (composable under an outer jit/vmap), while
@@ -152,6 +188,7 @@ class StreamingEngine:
         stride: int = 1,
         backend: BackendSpec = None,
         kernel_takes_offset: bool = False,
+        compensated: bool = False,
     ):
         if kernel is None and chunk_kernel is None:
             raise ValueError("need a per-window kernel or a chunk_kernel")
@@ -167,6 +204,7 @@ class StreamingEngine:
         self.window = h_left + 1 + h_right
         self.carry = self.window - 1  # samples of context an update keeps
         self.kernel_takes_offset = kernel_takes_offset
+        self.compensated = compensated
 
         if chunk_kernel is None:
             if kernel_takes_offset:
@@ -237,6 +275,7 @@ class StreamingEngine:
             tail=jnp.zeros((self.carry, self.d)),
             length=jnp.asarray(0, jnp.int32),
             t0=jnp.asarray(t0, jnp.int32),
+            stat_err=self._zeros_stat() if self.compensated else None,
         )
 
     def from_chunk(self, chunk: jax.Array, t0: int | jax.Array = 0) -> PartialState:
@@ -275,6 +314,9 @@ class StreamingEngine:
             tail=tail,
             length=jnp.asarray(c, jnp.int32),
             t0=t0,
+            # A single chunk's kernel output has no rounding history yet —
+            # its companion starts at zero.
+            stat_err=self._zeros_stat() if self.compensated else None,
         )
 
     def update(
@@ -316,7 +358,12 @@ class StreamingEngine:
         first: PartialState = pick(a, b)
         second: PartialState = pick(b, a)
 
-        stat = tree_sum(first.stat, second.stat)
+        if self.compensated:
+            stat, err = tree_neumaier_merge(
+                first.stat, first.stat_err, second.stat, second.stat_err
+            )
+        else:
+            stat, err = tree_sum(first.stat, second.stat), None
         if carry > 0:
             k_first = jnp.minimum(first.length, carry)
             k_second = jnp.minimum(second.length, carry)
@@ -332,7 +379,11 @@ class StreamingEngine:
             z0 = first.t0 + first.length - carry
             if self.stride > 1:
                 mask &= (z0 + starts) % self.stride == 0
-            stat = tree_sum(stat, self._call_kernel(z, mask, z0))
+            boundary = self._call_kernel(z, mask, z0)
+            if self.compensated:
+                stat, err = tree_neumaier_add(stat, err, boundary)
+            else:
+                stat = tree_sum(stat, boundary)
 
             rows = jnp.arange(carry)
             head = jnp.where(
@@ -356,14 +407,16 @@ class StreamingEngine:
             tail=tail,
             length=first.length + second.length,
             t0=jnp.where(first.length > 0, first.t0, second.t0),
+            stat_err=err,
         )
 
     def finalize(self, state: PartialState) -> Any:
         """Raw windowed statistic.  Estimator front-ends wrap this with
         normalization and (where the serial estimator is ragged at the
         series end, e.g. lag sums) a boundary correction read from
-        ``state.tail``."""
-        return state.stat
+        ``state.tail``.  Compensated states fold their error companion in
+        here (:func:`resolved_stat`)."""
+        return resolved_stat(state)
 
     # -- scan-driven ingest ------------------------------------------------
     def _consume(self, state: PartialState, chunks: jax.Array) -> PartialState:

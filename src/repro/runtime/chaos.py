@@ -24,7 +24,16 @@ named **injection sites** are threaded through the layers that can fail —
   ``gateway.tick``          fired inside `repro.serving.gateway
                             .StatsGateway.tick`'s timed window — a
                             ``stall`` rule models a straggler device and
-                            exercises the tick deadline / degraded mode.
+                            exercises the tick deadline / degraded mode;
+  ``ingest.payload``        checked (``should_corrupt``) once per ADMITTED
+                            ingest submission in `repro.serving.gateway
+                            .StatsGateway.submit_ingest` — a ``corrupt``
+                            rule poisons the payload with a NaN before it
+                            is enqueued, exercising the ingest sentinel,
+                            per-tenant poisoning policies, and tenant
+                            rebuild.  Call order == submission order, so
+                            a ``calls={k}`` schedule targets a specific
+                            (tick, tenant) deterministically.
 
 Schedules are deterministic: rules match explicit 0-based call indices of
 their site (``calls={2, 3}`` — "fail the 3rd and 4th dispatch") and/or a

@@ -28,6 +28,21 @@ What was missing is a concurrency front door.  This module is it:
     resumes via `repro.runtime.fault.FaultTolerantLoop.restore_or`: a
     killed process comes back serving identical answers with zero
     re-ingest of history;
+  * **data-plane integrity** (`repro.core.integrity`): with
+    ``GatewayConfig(sentinel=True)`` every coalesced ingest batch gets ONE
+    fused jitted all-finite verdict before it can touch session state (no
+    host sync beyond the verdict itself — the sanitized batch stays on
+    device).  A poisoned chunk is handled by the tenant's policy —
+    ``reject`` (fail the future with :class:`PoisonedChunk`), ``sanitize``
+    (mask non-finite values to 0 and ingest the rest), or ``quarantine``
+    (fence the tenant off from ingest AND query until repaired).  Poisoning
+    is seedable/replayable through the ``ingest.payload`` chaos site.
+    Detection and repair for state that is already poisoned (the sentinel
+    was off, or a kernel mis-ran): :meth:`audit` finite-sweeps every
+    tenant's lanes on-device, and :meth:`rebuild_tenant` surgically
+    restores ONE tenant from the newest intact checkpoint generation
+    (per-tenant extraction via the manifest's ``tenant_axes`` metadata)
+    without touching other tenants' live state or re-tracing anything;
   * **degraded mode**: when ``tick_deadline`` is set, a tick that blows
     its wall-clock budget (straggler device, injected stall — the
     ``gateway.tick`` chaos site fires inside the timed window) flips the
@@ -66,12 +81,14 @@ import jax
 import numpy as np
 
 from ..core.frame import FrameSession
+from ..core.integrity import SENTINEL_POLICIES, sentinel_scan
 from ..runtime import chaos
 
 __all__ = [
     "Degraded",
     "GatewayConfig",
     "GatewayRejected",
+    "PoisonedChunk",
     "QueueFull",
     "RateClass",
     "RateLimited",
@@ -95,6 +112,13 @@ class Degraded(GatewayRejected):
     """Shed because the gateway is over its tick deadline and dropping
     lowest-priority queries to recover.  Distinct from :class:`RateLimited`:
     the tenant did nothing wrong — back off instead of retrying at rate."""
+
+
+class PoisonedChunk(GatewayRejected):
+    """The ingest sentinel found non-finite values in the payload (or the
+    tenant is quarantined from an earlier poisoning).  Retrying the same
+    bytes will fail the same way — fix the producer, or ask the operator
+    to :meth:`StatsGateway.rebuild_tenant` a quarantined tenant."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +164,8 @@ class GatewayConfig:
     tick_deadline: float = 0.0             # per-tick wall budget (s, 0=off)
     degraded_recovery: int = 2             # in-budget ticks to leave degraded
     bucket_idle_ticks: int = 512           # evict buckets idle this long (0=off)
+    sentinel: bool = False                 # all-finite verdict per ingest batch
+    sentinel_policy: str = "reject"        # default: reject|sanitize|quarantine
 
 
 def _event_loop() -> asyncio.AbstractEventLoop:
@@ -220,7 +246,15 @@ class StatsGateway:
                 f"default_class {cfg.default_class!r} is not one of the "
                 f"configured rate classes {sorted(cfg.rate_classes)}"
             )
+        if cfg.sentinel_policy not in SENTINEL_POLICIES:
+            raise ValueError(
+                f"sentinel_policy {cfg.sentinel_policy!r} is not one of "
+                f"{list(SENTINEL_POLICIES)}"
+            )
         self._tenant_class: Dict[int, str] = {}
+        # -- integrity -------------------------------------------------------
+        self._tenant_policy: Dict[int, str] = {}  # per-tenant overrides
+        self.quarantined: set = set()
         self._ingest_buckets = _TokenBuckets(
             lambda t: self._class_of(t).ingest_per_tick,
             lambda t: self._class_of(t).bucket_cap(
@@ -270,7 +304,9 @@ class StatsGateway:
                 keep=cfg.keep_checkpoints,
                 straggler_threshold=cfg.straggler_threshold,
             )
-            template = session.export_state()
+            # the template only supplies structure/shapes/dtypes — the
+            # zero-copy view skips a full device→host export at startup
+            template = session.state_template()
             state, start_tick = self._loop_rt.restore_or(template)
             if start_tick > 0:
                 session.import_state(state)
@@ -298,6 +334,19 @@ class StatsGateway:
             )
         self._tenant_class[int(tenant)] = class_name
 
+    def set_tenant_policy(self, tenant: int, policy: str) -> None:
+        """Override the sentinel policy for one tenant (the config's
+        ``sentinel_policy`` applies to everyone else)."""
+        if policy not in SENTINEL_POLICIES:
+            raise ValueError(
+                f"unknown sentinel policy {policy!r}; one of "
+                f"{list(SENTINEL_POLICIES)}"
+            )
+        self._tenant_policy[self._check_tenant(tenant)] = policy
+
+    def _policy_of(self, tenant: int) -> str:
+        return self._tenant_policy.get(tenant, self.config.sentinel_policy)
+
     def _check_tenant(self, tenant: int) -> int:
         tenant = int(tenant)
         if not 0 <= tenant < self.session.num_users:
@@ -310,11 +359,18 @@ class StatsGateway:
         """Admit one ingest request; resolves after the absorbing tick.
 
         Raises :class:`QueueFull` / :class:`RateLimited` immediately when
-        admission fails (the rejection is the backpressure signal).
+        admission fails (the rejection is the backpressure signal), and
+        :class:`PoisonedChunk` for a quarantined tenant.
         """
         if self._closed:
             raise RuntimeError("gateway is closed")
         tenant = self._check_tenant(tenant)
+        if tenant in self.quarantined:
+            self.counters["rejected_ingest_quarantined"] += 1
+            raise PoisonedChunk(
+                f"tenant {tenant} is quarantined (poisoned state); "
+                "rebuild_tenant() restores service"
+            )
         chunk = np.asarray(chunk)
         if chunk.ndim == 1:
             chunk = chunk[:, None]
@@ -334,6 +390,17 @@ class StatsGateway:
                 f"{self._tenant_class.get(tenant, self.config.default_class)!r}"
                 " ingest rate"
             )
+        if chaos.should_corrupt("ingest.payload"):
+            # seeded data-plane poisoning: the payload arrives torn (NaN)
+            # exactly as a buggy producer or a bit-flipped wire would
+            # deliver it — drawn once per admitted submission, so a given
+            # (seed, calls) schedule replays the same poisoned arrivals
+            chunk = np.array(chunk, dtype=(
+                chunk.dtype if np.issubdtype(chunk.dtype, np.floating)
+                else np.float32
+            ))
+            chunk[0, 0] = np.nan
+            self.counters["chaos_poisoned_ingest"] += 1
         fut = _event_loop().create_future()
         self._ingest_q.append(
             _Pending(tenant, fut, time.perf_counter(), chunk=chunk)
@@ -353,6 +420,12 @@ class StatsGateway:
         if self._closed:
             raise RuntimeError("gateway is closed")
         tenant = self._check_tenant(tenant)
+        if tenant in self.quarantined:
+            self.counters["rejected_query_quarantined"] += 1
+            raise PoisonedChunk(
+                f"tenant {tenant} is quarantined (poisoned state); its "
+                "answers would be garbage — rebuild_tenant() restores service"
+            )
         if only is not None:
             only = (only,) if isinstance(only, str) else tuple(only)
             unknown = set(only) - set(self.session.request_names)
@@ -483,13 +556,25 @@ class StatsGateway:
         """Coalesce the admitted ingest backlog into the fewest possible
         scatter programs: one per run of equal chunk lengths, duplicate
         tenants deferred to the next tick (a scatter must see distinct
-        ids, and a tenant's chunks must land in arrival order)."""
+        ids, and a tenant's chunks must land in arrival order).  With the
+        sentinel enabled, each coalesced batch gets one fused all-finite
+        verdict before it can touch session state."""
         pending = list(self._ingest_q)
         self._ingest_q.clear()
         carry: list = []
         seen: set = set()
         groups: Dict[int, list] = {}
         for req in pending:
+            if req.tenant in self.quarantined:
+                # quarantined between admission and this tick (a carried
+                # request, or an audit() ran mid-backlog)
+                if not req.future.done():
+                    req.future.set_exception(PoisonedChunk(
+                        f"tenant {req.tenant} is quarantined; "
+                        "rebuild_tenant() restores service"
+                    ))
+                self.counters["rejected_ingest_quarantined"] += 1
+                continue
             if req.tenant in seen:
                 carry.append(req)       # next tick: ordering + distinctness
                 continue
@@ -503,7 +588,24 @@ class StatsGateway:
                     self._resolve(r, self._tick, self._lat_ingest)
                 continue
             ids = np.asarray([r.tenant for r in reqs], np.int32)
-            batch = np.stack([r.chunk for r in reqs])
+            batch: Any = np.stack([r.chunk for r in reqs])
+            if self.config.sentinel:
+                # ONE fused jitted program: per-chunk verdict + sanitized
+                # copy together; the verdict is the only host sync, and the
+                # clean batch (bit-identical when everything is finite)
+                # stays on device for the scatter below.
+                verdict, clean = sentinel_scan(batch)
+                self.counters["sentinel_scans"] += 1
+                if not verdict.all():
+                    keep = self._apply_sentinel(reqs, verdict)
+                    if not keep:
+                        continue
+                    if len(keep) < len(reqs):
+                        sel = np.asarray(keep)
+                        reqs = [reqs[i] for i in keep]
+                        ids = ids[sel]
+                        clean = clean[sel]  # device gather — no host sync
+                batch = clean
             try:
                 self.session.ingest(ids, batch)
             except Exception as e:
@@ -520,11 +622,56 @@ class StatsGateway:
             done += len(reqs)
         return done
 
+    def _apply_sentinel(self, reqs, verdict) -> list:
+        """Dispatch each poisoned chunk to its tenant's policy; returns the
+        indices of requests that still ingest (finite ones, plus sanitized
+        poisoned ones)."""
+        keep: list = []
+        for i, r in enumerate(reqs):
+            if verdict[i]:
+                keep.append(i)
+                continue
+            policy = self._policy_of(r.tenant)
+            if policy == "sanitize":
+                # the sanitized device row (non-finite → 0) ingests
+                self.counters["sanitized_chunks"] += 1
+                keep.append(i)
+                continue
+            self.counters["rejected_ingest_poisoned"] += 1
+            if policy == "quarantine":
+                self.quarantined.add(r.tenant)
+                self.counters["tenants_quarantined"] += 1
+                msg = (
+                    f"tenant {r.tenant} quarantined: non-finite values in "
+                    "ingest payload; rebuild_tenant() restores service"
+                )
+            else:  # reject
+                msg = (
+                    f"ingest rejected: non-finite values in tenant "
+                    f"{r.tenant}'s chunk"
+                )
+            if not r.future.done():
+                r.future.set_exception(PoisonedChunk(msg))
+        return keep
+
     def _run_queries(self) -> int:
         """Coalesce the admitted query backlog into ONE batched read:
         distinct tenants gathered once, every waiter handed its slice."""
         pending = list(self._query_q)
         self._query_q.clear()
+        if self.quarantined:
+            alive = []
+            for req in pending:
+                if req.tenant in self.quarantined:
+                    if not req.future.done():
+                        req.future.set_exception(PoisonedChunk(
+                            f"tenant {req.tenant} is quarantined; "
+                            "rebuild_tenant() restores service"
+                        ))
+                    self.counters["rejected_query_quarantined"] += 1
+                else:
+                    alive.append(req)
+            pending = alive
         if not pending:
             return 0
         order: Dict[int, int] = {}
@@ -578,10 +725,74 @@ class StatsGateway:
 
     def _snapshot(self, tick: int) -> None:
         # export_state hands out HOST copies, so the async writer is immune
-        # to the next tick's donating scatter deleting the live buffers
-        self._loop_rt.manager.save(self.session.export_state(), tick)
+        # to the next tick's donating scatter deleting the live buffers.
+        # tenant_axes in the manifest is what lets rebuild_tenant extract
+        # ONE tenant from this generation later.
+        self._loop_rt.manager.save(
+            self.session.export_state(), tick,
+            meta={"tenant_axes": self.session.tenant_axes()},
+        )
         self._dirty = False
         self.counters["snapshots"] += 1
+
+    # ------------------------------------------------------------- integrity
+    def audit(self, quarantine: bool = True) -> dict:
+        """On-device finite sweep of every tenant's lane state (ONE compiled
+        program + one host sync per plan group — see `FrameSession.audit`).
+
+        ``quarantine=True`` (default) fences every unhealthy tenant off
+        from ingest and query until :meth:`rebuild_tenant` repairs it.
+        Returns ``{"unhealthy": [...], "quarantined": [...newly...]}``.
+        """
+        healthy = self.session.audit()
+        self.counters["audits"] += 1
+        unhealthy = [int(t) for t in np.flatnonzero(~healthy)]
+        self.counters["audit_unhealthy"] += len(unhealthy)
+        newly: list = []
+        if quarantine:
+            for t in unhealthy:
+                if t not in self.quarantined:
+                    self.quarantined.add(t)
+                    self.counters["tenants_quarantined"] += 1
+                    newly.append(t)
+        return {"unhealthy": unhealthy, "quarantined": newly}
+
+    def rebuild_tenant(self, tenant: int) -> dict:
+        """Surgically restore ONE tenant from the newest checkpoint
+        generation whose slice verifies, release its quarantine, and leave
+        every other tenant's live state untouched (nothing re-traces — see
+        `RollingStatsService.import_tenant`).
+
+        The restored tenant serves answers as of its last snapshot —
+        freshness between that snapshot and the poisoning is lost (state is
+        never recomputed; there is no raw data to replay), availability is
+        restored.  Returns ``{"tenant", "step", "skipped", "released"}``.
+        """
+        tenant = self._check_tenant(tenant)
+        if self._loop_rt is None:
+            raise RuntimeError(
+                "rebuild_tenant needs durability — construct the gateway "
+                "with GatewayConfig(checkpoint_dir=...)"
+            )
+        from ..checkpoint.manager import restore_tenant_latest_intact
+
+        # queued async snapshots must land before the newest-intact walk
+        self._loop_rt.manager.flush()
+        state, step, skipped = restore_tenant_latest_intact(
+            self.session.state_template(),
+            self._loop_rt.manager.directory,
+            tenant,
+        )
+        self.session.import_tenant(tenant, state)
+        released = tenant in self.quarantined
+        self.quarantined.discard(tenant)
+        self.counters["tenants_rebuilt"] += 1
+        return {
+            "tenant": tenant,
+            "step": step,
+            "skipped": skipped,
+            "released": released,
+        }
 
     # -------------------------------------------------------------- driving
     async def serve_forever(self) -> None:
@@ -664,6 +875,17 @@ class StatsGateway:
         breaker = getattr(backend, "breaker_metrics", None)
         if callable(breaker):
             out["breaker"] = breaker()
+        out["integrity"] = {
+            "sentinel": self.config.sentinel,
+            "default_policy": self.config.sentinel_policy,
+            "quarantined": sorted(self.quarantined),
+            "poisoned_rejected": self.counters["rejected_ingest_poisoned"],
+            "sanitized_chunks": self.counters["sanitized_chunks"],
+            "audits": self.counters["audits"],
+            "audit_unhealthy": self.counters["audit_unhealthy"],
+            "tenants_quarantined": self.counters["tenants_quarantined"],
+            "tenants_rebuilt": self.counters["tenants_rebuilt"],
+        }
         return out
 
     def reset_metrics(self) -> None:

@@ -46,6 +46,26 @@ window, so ⊕-fold order, eviction resets, and `export_state` /
 ``import_state`` round-trips must all preserve it bit-exactly (the
 kill-and-restart forecast determinism pin in tests/test_gateway.py).
 
+**State is never recomputed — integrity is a serving contract too.**  The
+raw series is gone the moment a chunk is absorbed; every answer the
+service will ever give is a ⊕-fold of the carried partials.  Two
+consequences, and the machinery that answers them (`repro.core.integrity`):
+
+  * one non-finite sample scatter-merged into a lane poisons that
+    tenant's answers *permanently* (NaN + x = NaN; no later data dilutes
+    it out).  Prevention belongs at the boundary — the gateway's ingest
+    sentinel (`repro.serving.gateway`) — and detection/repair here:
+    :meth:`audit` finite-sweeps the stacked lane pytree on-device into a
+    host per-(lane, user) health mask, and :meth:`import_tenant`
+    surgically restores ONE tenant's lanes from a per-tenant checkpoint
+    slice (`repro.checkpoint.manager.restore_tenant_pytree`) without
+    touching any other tenant's live state or re-tracing the donated
+    scatter programs;
+  * float rounding in the ⊕-folds drifts monotonically for the session's
+    lifetime.  Engines built with ``compensated=True`` carry a Neumaier
+    error companion per stat leaf so readout recovers what rounding
+    discarded (pinned by benchmarks/bench_integrity.py).
+
 The compute substrate of the ingest hot loop is the engine's backend
 (`repro.core.backend`): build the engine with
 ``lag_sum_engine(..., backend="pallas")`` and every batched ``ingest``
@@ -60,9 +80,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.integrity import lane_health
 from ..core.streaming import PartialState, StreamingEngine
 
 __all__ = ["RollingStatsService"]
+
+
+def _coerce_import_leaf(key: str, want: np.dtype, new):
+    """Dtype-validate one snapshot leaf against the live buffer it replaces.
+
+    Equal dtype passes through; a same-kind mismatch (float64 snapshot into
+    a float32 session — numpy checkpoints default to f64) is cast
+    explicitly; a kind change (float↔int↔complex↔bool) raises: it means
+    the snapshot was produced by a different engine config, and silently
+    casting it would both corrupt values and compile duplicate scatter
+    programs keyed on the stray dtype (the PR 6 ``t0`` int32 bug class).
+    """
+    arr = new if hasattr(new, "dtype") else np.asarray(new)
+    have = np.dtype(arr.dtype)
+    want = np.dtype(want)
+    if have == want:
+        return jnp.asarray(arr)
+    if have.kind == want.kind:
+        return jnp.asarray(arr, want)
+    raise ValueError(
+        f"snapshot leaf {key!r} has dtype {have} but this service holds "
+        f"{want} — a {have.kind!r}→{want.kind!r} kind change cannot come "
+        "from a matching exporter config; refusing to cast"
+    )
 
 
 class RollingStatsService:
@@ -134,6 +179,10 @@ class RollingStatsService:
         # hot path).  Growing mode reads lengths straight off the lane
         # states and never touches this.
         self._counts = np.zeros((num_users,), np.int64)
+        # Host per-(lane, user) health mask, refreshed by audit() — the
+        # hot ingest/query paths never touch it.
+        self._lane_health = np.ones((num_lanes, num_users), bool)
+        self._audit_sweep = jax.jit(lane_health)
 
         def scatter_update(lanes, shard, user_ids, chunks, t0):
             sub = jax.tree.map(lambda l: l[shard, user_ids], lanes)
@@ -249,15 +298,122 @@ class RollingStatsService:
                 f"match this service's {[m[0] for m in mismatched]} — "
                 "num_users / num_shards / window must equal the exporter's"
             )
-        self._lanes = jax.tree.map(
-            lambda cur, new: jnp.asarray(new, cur.dtype), self._lanes, lanes
-        )
-        counts = np.asarray(state["counts"], np.int64)
+        cur_flat, treedef = jax.tree_util.tree_flatten_with_path(self._lanes)
+        new_leaves = [
+            _coerce_import_leaf(
+                "lanes" + jax.tree_util.keystr(path), cur.dtype, new
+            )
+            for (path, cur), new in zip(cur_flat, jax.tree.leaves(lanes))
+        ]
+        self._lanes = jax.tree.unflatten(treedef, new_leaves)
+        counts = np.asarray(state["counts"])
+        if counts.dtype.kind not in "iu":
+            raise ValueError(
+                f"snapshot counts must be integer-typed, got {counts.dtype}"
+            )
+        counts = counts.astype(np.int64)
         if counts.shape != self._counts.shape:
             raise ValueError(
                 f"snapshot counts shape {counts.shape} != {self._counts.shape}"
             )
         self._counts = counts.copy()
+        self._lane_health = np.ones((self._num_lanes, self.num_users), bool)
+
+    def state_template(self) -> dict:
+        """Zero-copy view with :meth:`export_state`'s structure — the live
+        lane pytree and cursor themselves, for shape/dtype templates
+        (checkpoint restore) where a host snapshot would waste a full
+        device→host transfer.  Do NOT mutate or retain across a donating
+        ingest."""
+        return {"lanes": self._lanes, "counts": self._counts}
+
+    # -- integrity ----------------------------------------------------------
+    def audit(self) -> np.ndarray:
+        """Finite-sweep the stacked lane pytree on-device: ONE compiled
+        program (`repro.core.integrity.lane_health`, jitted once at
+        construction) + one host sync, refreshing the per-(lane, user)
+        health mask.  Returns a host (num_users,) bool — True where every
+        lane of the user is healthy."""
+        # np.array (not asarray): own the buffer — device_get views are
+        # read-only and import_tenant writes the mask in place.
+        mask = np.array(self._audit_sweep(self._lanes))
+        self._lane_health = mask
+        return mask.all(axis=0)
+
+    @property
+    def lane_health(self) -> np.ndarray:
+        """(num_lanes, num_users) health mask from the last :meth:`audit`
+        (all-True before any audit, and reset on import/rebuild)."""
+        return self._lane_health.copy()
+
+    def tenant_slice(self, state: dict, user_id: int) -> dict:
+        """Extract ONE user's slice from an :meth:`export_state` snapshot:
+        lane leaves keep their lane axis, drop the user axis (axis 1);
+        the cursor becomes a scalar.  Host-side; no device work."""
+        u = self._check_user(user_id)
+        return {
+            "lanes": jax.tree.map(lambda l: np.asarray(l)[:, u], state["lanes"]),
+            "counts": np.int64(np.asarray(state["counts"])[u]),
+        }
+
+    def export_tenant(self, user_id: int) -> dict:
+        """Host snapshot of ONE user's lane states + cursor (the
+        :meth:`import_tenant` payload)."""
+        u = self._check_user(user_id)
+        return {
+            "lanes": jax.tree.map(
+                lambda l: jax.device_get(l[:, u]), self._lanes
+            ),
+            "counts": np.int64(self._counts[u]),
+        }
+
+    def import_tenant(self, user_id: int, state: dict) -> None:
+        """Surgically restore ONE user's lane states from a per-tenant
+        snapshot (:meth:`export_tenant` / :meth:`tenant_slice` /
+        `repro.checkpoint.manager.restore_tenant_pytree`).
+
+        Every other user's live state is untouched, and nothing re-traces:
+        the write is an eager per-leaf ``.at[:, u].set`` — the donated
+        scatter-ingest and gather-query programs key on the (unchanged)
+        stacked buffer shapes and keep serving from their caches.
+        """
+        u = self._check_user(user_id)
+        lanes = state["lanes"]
+        want = jax.tree.structure(self._lanes)
+        got = jax.tree.structure(lanes)
+        if want != got:
+            raise ValueError(
+                f"tenant snapshot lane structure {got} does not match this "
+                f"service's {want}"
+            )
+        cur_flat, treedef = jax.tree_util.tree_flatten_with_path(self._lanes)
+        new_flat = jax.tree.leaves(lanes)
+        out = []
+        for (path, cur), new in zip(cur_flat, new_flat):
+            key = "lanes" + jax.tree_util.keystr(path)
+            expect = (cur.shape[0],) + tuple(cur.shape[2:])
+            if tuple(np.shape(new)) != expect:
+                raise ValueError(
+                    f"tenant snapshot leaf {key!r} has shape "
+                    f"{tuple(np.shape(new))}, expected {expect}"
+                )
+            coerced = _coerce_import_leaf(key, cur.dtype, new)
+            out.append(cur.at[:, u].set(coerced))
+        self._lanes = jax.tree.unflatten(treedef, out)
+        count = np.asarray(state["counts"])
+        if count.dtype.kind not in "iu" or count.shape != ():
+            raise ValueError(
+                f"tenant snapshot counts must be an integer scalar, got "
+                f"{count.dtype} with shape {count.shape}"
+            )
+        self._counts[u] = int(count)
+        self._lane_health[:, u] = True
+
+    def _check_user(self, user_id: int) -> int:
+        u = int(user_id)
+        if not 0 <= u < self.num_users:
+            raise ValueError(f"user_id {u} out of range [0, {self.num_users})")
+        return u
 
     # -- write path --------------------------------------------------------
     def ingest(

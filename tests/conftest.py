@@ -33,6 +33,12 @@ def pytest_configure(config):
         "pallas-interpret); always part of the fast default tier — "
         "select alone with -m backend",
     )
+    config.addinivalue_line(
+        "markers",
+        "integrity: data-plane integrity test (ingest sentinel, tenant "
+        "rebuild, compensated accumulation); always part of the fast "
+        "default tier — select alone with -m integrity",
+    )
 
 
 def pytest_collection_modifyitems(config, items):
@@ -46,9 +52,14 @@ def pytest_collection_modifyitems(config, items):
     )
     if config.getoption("--runslow") or config.getoption("-m") or explicit:
         return
-    # backend-parity tests are pinned into the fast tier even if a future
-    # module marks them slow: cross-backend equivalence is tier-1.
-    keep = lambda i: "slow" not in i.keywords or "backend" in i.keywords
+    # backend-parity and integrity tests are pinned into the fast tier even
+    # if a future module marks them slow: cross-backend equivalence and the
+    # data-plane integrity contracts are tier-1.
+    keep = lambda i: (
+        "slow" not in i.keywords
+        or "backend" in i.keywords
+        or "integrity" in i.keywords
+    )
     selected = [i for i in items if keep(i)]
     deselected = [i for i in items if not keep(i)]
     if deselected:

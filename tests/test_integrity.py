@@ -1,0 +1,508 @@
+"""Data-plane integrity (PR 10): sentinel, self-healing tenants, drift.
+
+The headline contract: a tenant streaming NaN-poisoned chunks through a
+LIVE gateway — seeded chaos at the ``ingest.payload`` site — costs nothing
+but its own lane.  Every other tenant's served answers stay bit-identical
+to a fault-free run, the poisoned tenant is quarantined, and
+``rebuild_tenant`` surgically restores it from the newest intact
+checkpoint generation without touching anyone else's live state.
+
+Plus the units underneath: the fused all-finite sentinel verdict, the
+three per-tenant poisoning policies, on-device audit + rebuild when the
+sentinel is OFF (poison in state, not at the boundary), per-tenant
+checkpoint extraction with generation walk-back, dtype-validated state
+import, the compensated-accumulation drift pin, and the regression gate's
+warn-and-skip path for never-blessed benches.
+"""
+import asyncio
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (
+    CheckpointCorrupt,
+    restore_tenant_latest_intact,
+    restore_tenant_pytree,
+    save_pytree,
+)
+from repro.core.frame import FrameSession
+from repro.core.integrity import sentinel_scan
+from repro.runtime import chaos
+from repro.runtime.chaos import FaultInjector
+from repro.serving.gateway import GatewayConfig, PoisonedChunk, StatsGateway
+
+pytestmark = pytest.mark.integrity
+
+D = 2
+N_TENANTS = 4
+CHUNK = 32
+
+
+def _session():
+    """≥2 statistic families + a forecast: the fused megakernel-eligible
+    plan shape the gateway serves in production."""
+    sess = FrameSession(d=D, num_users=N_TENANTS, backend="jnp")
+    sess.autocovariance(3)
+    sess.moments(8)
+    sess.forecast(4, model="ar", p=2)
+    return sess
+
+
+def _chunks(tick, seed=0):
+    rng = np.random.RandomState(seed + tick)
+    return {u: rng.randn(CHUNK, D).astype(np.float32) for u in range(N_TENANTS)}
+
+
+def _flat(result):
+    leaves, treedef = jax.tree_util.tree_flatten(result)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+# ------------------------------------------------------------ sentinel unit
+
+
+def test_sentinel_scan_verdict_and_clean():
+    batch = np.ones((3, 8, D), np.float32)
+    batch[1, 2, 0] = np.nan
+    batch[1, 5, 1] = np.inf
+    verdict, clean = sentinel_scan(batch)
+    np.testing.assert_array_equal(verdict, [True, False, True])
+    clean = np.asarray(clean)
+    # clean rows of a clean chunk are bit-identical pass-through ...
+    np.testing.assert_array_equal(clean[0], batch[0])
+    np.testing.assert_array_equal(clean[2], batch[2])
+    # ... and the poisoned chunk is masked finite (sanitize policy's input)
+    assert np.isfinite(clean[1]).all()
+    assert clean[1][2, 0] == 0.0 and clean[1][5, 1] == 0.0
+
+    all_good, same = sentinel_scan(np.ones((2, 4, D), np.float32))
+    assert np.asarray(all_good).all()
+    np.testing.assert_array_equal(np.asarray(same), np.ones((2, 4, D)))
+
+
+# ------------------------------------------------------- per-tenant policies
+
+
+@pytest.mark.parametrize("policy", ["reject", "sanitize"])
+def test_sentinel_policy_reject_and_sanitize(policy):
+    gw = StatsGateway(_session(), GatewayConfig(sentinel=True,
+                                                sentinel_policy=policy))
+    chunks = _chunks(0)
+    bad = chunks[1].copy()
+    bad[3, 0] = np.nan
+
+    async def scenario():
+        futs = {u: gw.submit_ingest(u, chunks[u]) for u in (0, 2, 3)}
+        futs[1] = gw.submit_ingest(1, bad)
+        await gw.tick()
+        outcomes = {}
+        for u, f in futs.items():
+            try:
+                outcomes[u] = await f
+            except PoisonedChunk:
+                outcomes[u] = "poisoned"
+        qfuts = {u: gw.submit_query(u) for u in range(N_TENANTS)}
+        await gw.tick()
+        res = {u: await f for u, f in qfuts.items()}
+        await gw.stop(final_snapshot=False)
+        return outcomes, res
+
+    outcomes, res = run(scenario())
+    # healthy tenants land regardless of the poisoned co-tenant in-batch
+    assert all(outcomes[u] != "poisoned" for u in (0, 2, 3))
+    health = gw.health()["integrity"]
+    if policy == "reject":
+        assert outcomes[1] == "poisoned"
+        assert health["poisoned_rejected"] == 1
+        assert health["quarantined"] == []        # reject is per-chunk only
+    else:
+        assert outcomes[1] != "poisoned"          # masked, then ingested
+        assert health["sanitized_chunks"] == 1
+    # every tenant that ingested serves finite answers (a rejected chunk
+    # leaves tenant 1 EMPTY under "reject" — empty-state moments are NaN
+    # by documented contract, which is precisely not poisoning)
+    served = (0, 2, 3) if policy == "reject" else range(N_TENANTS)
+    for u in served:
+        leaves, _ = _flat(res[u])
+        assert all(np.isfinite(l).all() for l in leaves
+                   if l.dtype.kind in "fc")
+    # counters ride the observability window automatically
+    window = gw.metrics()["window"]
+    assert window["sentinel_scans"] >= 1
+
+
+def test_quarantine_policy_blocks_ingest_and_query():
+    gw = StatsGateway(_session(), GatewayConfig(sentinel=True))
+    gw.set_tenant_policy(2, "quarantine")
+    chunks = _chunks(1)
+    bad = chunks[2].copy()
+    bad[0, 0] = np.inf
+
+    async def scenario():
+        futs = [gw.submit_ingest(u, chunks[u]) for u in (0, 1, 3)]
+        pf = gw.submit_ingest(2, bad)
+        await gw.tick()
+        await asyncio.gather(*futs)
+        with pytest.raises(PoisonedChunk):
+            await pf
+        # the tenant is now fenced at the front door, both planes
+        with pytest.raises(PoisonedChunk):
+            gw.submit_ingest(2, chunks[2])
+        with pytest.raises(PoisonedChunk):
+            gw.submit_query(2)
+        # co-tenants are not
+        ok = gw.submit_query(0)
+        await gw.tick()
+        await ok
+        await gw.stop(final_snapshot=False)
+
+    run(scenario())
+    health = gw.health()["integrity"]
+    assert health["quarantined"] == [2]
+    assert health["tenants_quarantined"] == 1
+    assert gw.counters["rejected_ingest_quarantined"] >= 1
+    assert gw.counters["rejected_query_quarantined"] >= 1
+
+
+# ------------------------------------------------------------- headline e2e
+
+
+def test_e2e_poisoned_tenant_quarantined_others_bit_identical_then_rebuilt(
+    tmp_path,
+):
+    """Seeded chaos NaN-poisons tenant 2 mid-stream through a LIVE gateway.
+    Non-poisoned tenants' answers are bit-identical to a fault-free run;
+    tenant 2 is quarantined at the boundary, then surgically rebuilt from
+    the newest intact snapshot and serves exactly the state that snapshot
+    held."""
+    TICKS = 8
+    REBUILD_AT = 5
+
+    async def drive(gw, inj):
+        answers = {u: [] for u in range(N_TENANTS)}
+        rebuilt = None
+        ctx = chaos.scoped(inj) if inj is not None else None
+        if ctx is not None:
+            ctx.__enter__()
+        try:
+            for t in range(TICKS):
+                if t == REBUILD_AT and inj is not None:
+                    ctx.__exit__(None, None, None)
+                    ctx = None
+                    rebuilt = gw.rebuild_tenant(2)
+                    # quarantine released: query BEFORE any new ingest so
+                    # the served answer is exactly the snapshot state
+                    qf = gw.submit_query(2)
+                    await gw.tick()
+                    answers[2].append(("rebuilt", await qf))
+                chunks = _chunks(t)
+                futs = []
+                for u in range(N_TENANTS):
+                    try:
+                        futs.append(gw.submit_ingest(u, chunks[u]))
+                    except PoisonedChunk:
+                        pass
+                qu = t % N_TENANTS
+                try:
+                    qfut = gw.submit_query(qu)
+                except PoisonedChunk:
+                    qfut = None
+                await gw.tick()
+                for f in futs:
+                    try:
+                        await f
+                    except PoisonedChunk:
+                        pass
+                if qfut is not None:
+                    try:
+                        answers[qu].append((t, await qfut))
+                    except PoisonedChunk:
+                        pass
+        finally:
+            if ctx is not None:
+                ctx.__exit__(None, None, None)
+        return answers, rebuilt
+
+    # chaos poisons the (4*2+2)rd admitted submission: tick 2, tenant 2 —
+    # deterministic because call order == submission order
+    inj = FaultInjector(seed=7)
+    inj.corrupt("ingest.payload", calls={N_TENANTS * 2 + 2})
+
+    async def faulty():
+        gw = StatsGateway(
+            _session(),
+            GatewayConfig(sentinel=True, snapshot_every=2,
+                          checkpoint_dir=str(tmp_path / "ckpt")),
+        )
+        gw.set_tenant_policy(2, "quarantine")
+        answers, rebuilt = await drive(gw, inj)
+        health = gw.health()["integrity"]
+        await gw.stop(final_snapshot=False)
+        return answers, rebuilt, health, inj.log
+
+    async def clean():
+        gw = StatsGateway(_session(), GatewayConfig(sentinel=True))
+        answers, _ = await drive(gw, None)
+        await gw.stop(final_snapshot=False)
+        return answers
+
+    ans_f, rebuilt, health, log = run(faulty())
+    ans_c = run(clean())
+
+    # the chaos rule fired, and fired where the schedule says
+    assert ("ingest.payload", N_TENANTS * 2 + 2, "corrupt") in log
+    # tenant 2 was quarantined, then rebuilt and released
+    assert rebuilt["released"] and rebuilt["tenant"] == 2
+    assert health["tenants_quarantined"] == 1
+    assert health["tenants_rebuilt"] == 1
+    assert health["quarantined"] == []
+
+    # every non-poisoned tenant: answers BIT-IDENTICAL to the clean run
+    for u in (0, 1, 3):
+        assert len(ans_f[u]) == len(ans_c[u]) > 0
+        for (tf, rf), (tc, rc) in zip(ans_f[u], ans_c[u]):
+            assert tf == tc
+            lf, df = _flat(rf)
+            lc, dc = _flat(rc)
+            assert df == dc
+            for a, b in zip(lf, lc):
+                np.testing.assert_array_equal(a, b)
+
+    # the rebuilt tenant serves the snapshot state: bit-identical to a
+    # fresh gateway that ingested only what the snapshot had absorbed
+    # (tenant 2's last successful ingests were ticks 0 and 1)
+    async def reference():
+        gw = StatsGateway(_session(), GatewayConfig(sentinel=True))
+        for t in range(2):
+            chunks = _chunks(t)
+            futs = [gw.submit_ingest(u, chunks[u]) for u in range(N_TENANTS)]
+            await gw.tick()
+            await asyncio.gather(*futs)
+        qf = gw.submit_query(2)
+        await gw.tick()
+        res = await qf
+        await gw.stop(final_snapshot=False)
+        return res
+
+    want = run(reference())
+    tag, got = ans_f[2][0]
+    assert tag == "rebuilt"
+    lw, dw = _flat(want)
+    lg, dg = _flat(got)
+    assert dw == dg
+    for a, b in zip(lg, lw):
+        np.testing.assert_array_equal(a, b)
+    # and it kept serving (finite) after release
+    post = [t for (t, _r) in ans_f[2][1:] if isinstance(t, int)]
+    assert any(t >= REBUILD_AT for t in post)
+
+
+# -------------------------------------------- audit + rebuild, sentinel OFF
+
+
+def test_audit_detects_in_state_poison_and_rebuild_restores(tmp_path):
+    """With the sentinel OFF the NaN reaches the lane state itself.  The
+    on-device audit sweep finds it, quarantines the tenant, and rebuild
+    walks PAST the post-poisoning snapshot (byte-intact but poisoned) to
+    the newest healthy generation."""
+
+    async def scenario():
+        gw = StatsGateway(
+            _session(),
+            GatewayConfig(sentinel=False, snapshot_every=1,
+                          checkpoint_dir=str(tmp_path / "ckpt")),
+        )
+        # two clean ticks → clean snapshots
+        for t in range(2):
+            chunks = _chunks(t)
+            futs = [gw.submit_ingest(u, chunks[u]) for u in range(N_TENANTS)]
+            await gw.tick()
+            await asyncio.gather(*futs)
+        qf = gw.submit_query(1)
+        await gw.tick()
+        want = await qf
+
+        # poisoned tick: NaN sails past the disabled sentinel INTO state,
+        # and the per-tick snapshot then persists the poisoned lane
+        chunks = _chunks(2)
+        bad = chunks[1].copy()
+        bad[4, 1] = np.nan
+        futs = [gw.submit_ingest(u, chunks[u]) for u in (0, 2, 3)]
+        futs.append(gw.submit_ingest(1, bad))
+        await gw.tick()
+        await asyncio.gather(*futs)
+
+        verdict = gw.audit()
+        assert verdict["unhealthy"] == [1]
+        assert verdict["quarantined"] == [1]
+        with pytest.raises(PoisonedChunk):
+            gw.submit_query(1)
+
+        rebuilt = gw.rebuild_tenant(1)
+        # the newest generation holds the poisoned lane — walked past
+        assert rebuilt["skipped"], "poisoned snapshot should be skipped"
+        qf = gw.submit_query(1)
+        await gw.tick()
+        got = await qf
+        await gw.stop(final_snapshot=False)
+        return want, got, rebuilt, gw.session.audit()
+
+    want, got, rebuilt, healthy = run(scenario())
+    lw, dw = _flat(want)
+    lg, dg = _flat(got)
+    assert dw == dg
+    for a, b in zip(lg, lw):
+        np.testing.assert_array_equal(a, b)
+    assert healthy.all()                      # post-rebuild audit is clean
+
+
+# ------------------------------------------- per-tenant checkpoint extraction
+
+
+def _toy_state(scale):
+    return {
+        "lanes": {"stat": np.arange(24, dtype=np.float32).reshape(2, 4, 3)
+                  * scale},
+        "counts": np.arange(4, dtype=np.int64) * int(scale),
+    }
+
+
+_TOY_AXES = {"lanes/stat": 1, "counts": 0}
+
+
+def test_restore_tenant_pytree_extracts_one_tenant(tmp_path):
+    d = str(tmp_path)
+    save_pytree(_toy_state(1.0), d, 1, meta={"tenant_axes": _TOY_AXES})
+    save_pytree(_toy_state(2.0), d, 2, meta={"tenant_axes": _TOY_AXES})
+    got = restore_tenant_pytree(_toy_state(0.0), d, tenant=3)
+    np.testing.assert_array_equal(
+        got["lanes"]["stat"], _toy_state(2.0)["lanes"]["stat"][:, 3]
+    )
+    assert got["counts"] == 6
+    # explicit older generation
+    got1 = restore_tenant_pytree(_toy_state(0.0), d, tenant=3, step=1)
+    assert got1["counts"] == 3
+    with pytest.raises(ValueError):
+        restore_tenant_pytree(_toy_state(0.0), d, tenant=99)
+
+
+def test_restore_tenant_latest_intact_walks_back(tmp_path):
+    d = str(tmp_path)
+    save_pytree(_toy_state(1.0), d, 1, meta={"tenant_axes": _TOY_AXES})
+    save_pytree(_toy_state(2.0), d, 2, meta={"tenant_axes": _TOY_AXES})
+    # tear the newest payload on disk
+    arrs = os.path.join(d, "step_0000000002", "arrays.npz")
+    with open(arrs, "r+b") as f:
+        f.seek(30)
+        f.write(b"\xde\xad\xbe\xef")
+    state, step, skipped = restore_tenant_latest_intact(
+        _toy_state(0.0), d, tenant=0
+    )
+    assert step == 1 and skipped == [2]
+    assert state["counts"] == 0
+
+    # a POISONED (byte-intact) newest generation is walked past too
+    poisoned = _toy_state(3.0)
+    poisoned["lanes"]["stat"][0, 2, 1] = np.nan
+    save_pytree(poisoned, d, 3, meta={"tenant_axes": _TOY_AXES})
+    _, step, skipped = restore_tenant_latest_intact(
+        _toy_state(0.0), d, tenant=2
+    )
+    assert step == 1 and 3 in skipped
+    # ... but only for the tenant whose slice holds the NaN
+    _, step, _ = restore_tenant_latest_intact(_toy_state(0.0), d, tenant=1)
+    assert step == 3
+
+
+def test_restore_tenant_requires_extraction_metadata(tmp_path):
+    d = str(tmp_path)
+    save_pytree(_toy_state(1.0), d, 1)          # pre-PR-10 manifest: no meta
+    with pytest.raises(CheckpointCorrupt):
+        restore_tenant_pytree(_toy_state(0.0), d, tenant=0)
+
+
+# ---------------------------------------------------- dtype-validated import
+
+
+def test_import_state_dtype_cast_or_raise():
+    sess = _session()
+    sess2 = _session()
+    chunks = _chunks(0)
+    ids = np.arange(N_TENANTS)
+    batch = np.stack([chunks[u] for u in range(N_TENANTS)])
+    sess.ingest(ids, batch)
+    exported = sess.export_state()
+
+    # same-kind widening round-trips exactly (f32 values survive f64)
+    widened = jax.tree.map(
+        lambda l: np.asarray(l, np.float64)
+        if np.asarray(l).dtype.kind == "f" else np.asarray(l),
+        exported,
+    )
+    sess2.import_state(widened)
+    want, got = sess.query(1), sess2.query(1)
+    for a, b in zip(_flat(want)[0], _flat(got)[0]):
+        np.testing.assert_array_equal(a, b)
+
+    # kind changes refuse loudly instead of silently reinterpreting —
+    # the PR 6 int32-t0 bug class
+    broken = jax.tree.map(
+        lambda l: np.asarray(l).astype(np.int32)
+        if np.asarray(l).dtype.kind == "f" else np.asarray(l),
+        exported,
+    )
+    with pytest.raises(ValueError, match="kind"):
+        _session().import_state(broken)
+
+
+# ----------------------------------------------------------- drift pin
+
+
+@pytest.mark.slow
+def test_compensated_drift_ratio_pin():
+    """The reason compensated mode exists: ≥10× less drift than plain f32
+    on the bench's own hostile seeded workload (the exact configuration
+    `benchmarks.bench_integrity` gates in BENCH_integrity.json)."""
+    from benchmarks.bench_integrity import _drift_phase
+
+    drift = _drift_phase([])
+    assert drift["ratio"] >= 10.0, drift
+
+
+# -------------------------------------------- regression-gate warn-and-skip
+
+
+def test_check_regression_warn_skips_unblessed_bench(tmp_path, monkeypatch,
+                                                     capsys):
+    from benchmarks import check_regression as cr
+
+    monkeypatch.setattr(cr, "REPO_ROOT", str(tmp_path))
+    monkeypatch.setattr(cr, "BASELINE_DIR", str(tmp_path / "baselines"))
+
+    # a brand-new bench with no baseline anywhere: warn-and-skip, exit 0
+    payload = ('{"platform": "cpu", "results": '
+               '[{"name": "x", "us_per_call": 5000.0}]}')
+    (tmp_path / "BENCH_new.json").write_text(payload)
+    assert cr.main(["--files", "BENCH_new.json"]) == 0
+    out = capsys.readouterr().out
+    assert "no blessed or committed baseline" in out
+
+    # listed-but-never-run (fresh BENCH_FILES entry): also not a failure
+    assert cr.main(["--files", "BENCH_ghost.json"]) == 0
+    assert "no working-tree run and no baseline" in capsys.readouterr().out
+
+    # discovery picks the new file up and --update-baselines blesses it
+    assert "BENCH_new.json" in cr.discover_files()
+    assert cr.main(["--update-baselines", "--files", "BENCH_new.json"]) == 0
+    assert (tmp_path / "baselines" / "BENCH_new.json").read_text() == payload
+    # ... after which it gates like any tracked trajectory
+    assert cr.main(["--files", "BENCH_new.json"]) == 0
+    slow = payload.replace("5000.0", "50000.0")
+    (tmp_path / "BENCH_new.json").write_text(slow)
+    assert cr.main(["--files", "BENCH_new.json"]) == 1
